@@ -1,0 +1,44 @@
+"""Paper Fig 1 (right): communication/computation breakdown per model.
+
+C6: ESSP's background pushes shrink the synchronous-communication share
+relative to lazy SSP at equal staleness (cost model; constants reported).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.apps.lda import LDAConfig, make_lda_app
+from repro.core import bsp, essp, simulate, ssp
+from repro.core.timemodel import TimeModel
+
+from .common import emit, save_json, timed
+
+
+def run(T: int = 60, seed: int = 0):
+    app = make_lda_app(LDAConfig())
+    tm = TimeModel(t_comp=0.2, bytes_per_channel=2e6)
+    out = {"time_model": tm.__dict__}
+    for s in (1, 3, 5):
+        for name, cfg, kind in [(f"ssp{s}", ssp(s), "ssp"),
+                                (f"essp{s}", essp(s), "essp")]:
+            fn = jax.jit(lambda c=cfg: simulate(app, c, T, seed=seed))
+            us = timed(fn, warmup=1, iters=1)
+            tr = fn()
+            br = tm.breakdown(tr, kind)
+            out[name] = dict(br, us=us)
+            emit(f"comm_comp/{name}", us,
+                 f"comm_frac={br['comm_frac']:.3f};total={br['total_s']:.1f}s")
+    out["claim_C6"] = {
+        s: {"ssp_comm_frac": out[f"ssp{s}"]["comm_frac"],
+            "essp_comm_frac": out[f"essp{s}"]["comm_frac"],
+            "pass": bool(out[f"essp{s}"]["comm_frac"]
+                         < out[f"ssp{s}"]["comm_frac"])}
+        for s in (1, 3, 5)
+    }
+    save_json("comm_comp", out)
+    return out
+
+
+if __name__ == "__main__":
+    print(run()["claim_C6"])

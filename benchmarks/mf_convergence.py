@@ -1,0 +1,58 @@
+"""Paper Fig 2 (matrix factorization): objective vs iteration and vs time.
+
+The time axis uses the parametric TimeModel (1 GbE-class constants, stated
+in the output) — C2: ESSP >= SSP convergence per clock *and* per second.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.apps.matfact import MFConfig, make_mf_app
+from repro.core import bsp, essp, simulate, ssp
+from repro.core.timemodel import TimeModel
+
+from .common import emit, save_json, timed
+
+
+def run(T: int = 300, s: int = 5, seed: int = 0):
+    app = make_mf_app(MFConfig())
+    tm = TimeModel()
+    out = {"time_model": tm.__dict__}
+    for name, cfg, tm_kind in [("bsp", bsp(), "bsp"),
+                               (f"ssp{s}", ssp(s), "ssp"),
+                               (f"essp{s}", essp(s), "essp")]:
+        fn = jax.jit(lambda c=cfg: simulate(app, c, T, seed=seed))
+        us = timed(fn, warmup=1, iters=1)
+        tr = fn()
+        loss = np.asarray(tr.loss_ref)
+        wall = tm.wall_time(tr, tm_kind)
+        out[name] = {"loss": loss.tolist(), "wall_s": wall.tolist(),
+                     "us": us}
+        emit(f"mf_convergence/{name}", us,
+             f"loss_T={loss[-1]:.4f};modeled_wall={wall[-1]:.1f}s")
+
+    def auc(name):   # lower = faster convergence (mean loss over clocks)
+        return float(np.mean(out[name]["loss"]))
+
+    def loss_at_time(name, t):
+        w = np.asarray(out[name]["wall_s"])
+        l = np.asarray(out[name]["loss"])
+        i = np.searchsorted(w, t)
+        return float(l[min(i, len(l) - 1)])
+
+    t_ref = min(out[n]["wall_s"][-1] for n in ("bsp", f"ssp{s}", f"essp{s}"))
+    out["claim_C2"] = {
+        "per_clock_auc": {n: auc(n) for n in ("bsp", f"ssp{s}", f"essp{s}")},
+        "loss_at_common_time": {n: loss_at_time(n, t_ref)
+                                for n in ("bsp", f"ssp{s}", f"essp{s}")},
+        "pass": bool(auc(f"essp{s}") <= auc(f"ssp{s}") * 1.05
+                     and loss_at_time(f"essp{s}", t_ref)
+                     <= loss_at_time(f"ssp{s}", t_ref) * 1.05),
+    }
+    save_json("mf_convergence", out)
+    return out
+
+
+if __name__ == "__main__":
+    print(run()["claim_C2"])

@@ -1,0 +1,40 @@
+"""Benchmark harness entry point: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (plus claim summaries at the
+end).  Roofline tables are separate (they read dry-run artifacts):
+``python -m benchmarks.roofline``.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    t0 = time.time()
+    from . import (comm_comp, kernels_bench, lda_convergence,
+                   lm_consistency, mf_convergence, robustness,
+                   staleness_profile, stragglers, theory_validation)
+
+    claims = {}
+    print("name,us_per_call,derived")
+    claims["C1_staleness_profile"] = staleness_profile.run()["claim_C1"]
+    claims["C2_mf"] = mf_convergence.run()["claim_C2"]
+    claims["C2_lda"] = lda_convergence.run()["claim_C2_lda"]
+    claims["C6_comm_comp"] = comm_comp.run()["claim_C6"]
+    claims["C3_robustness"] = robustness.run()["claim_C3"]
+    claims["stragglers"] = stragglers.run()["claim"]
+    claims["lm_consistency_pod"] = lm_consistency.run()["claim"]
+    theory = theory_validation.run()
+    claims["C4_variance"] = theory["variance"]
+    claims["C5_vap"] = theory["vap"]
+    kernels_bench.run()
+
+    print("\n=== paper-fidelity claim summary ===")
+    for k, v in claims.items():
+        print(f"{k}: {v}")
+    print(f"\ntotal bench wall: {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

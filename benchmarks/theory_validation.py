@@ -1,0 +1,108 @@
+"""Theorem-level validation (C4/C5): regret decay, decreasing variance,
+VAP bound enforcement + sync cost, Theorem 5 moment sensitivity."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.apps.matfact import MFConfig, make_mf_app
+from repro.core import essp, simulate, ssp, vap
+from repro.core import staleness as stal
+from repro.core import theory
+
+from .common import emit, save_json, timed
+
+
+def _quadratic_app(n_workers=8, dim=32, eta=0.4, noise=0.3):
+    """Convex PS app: minimize ||x||^2 with noisy worker gradients."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.ps import PSApp
+
+    def worker_update(view, local, wid, clock, rng):
+        g = view + noise * jax.random.normal(rng, view.shape)
+        step = eta / jnp.sqrt(1.0 + clock)
+        return -step * g / n_workers, local
+
+    return PSApp(name="quad", dim=dim, n_workers=n_workers,
+                 x0=jnp.ones((dim,)) * 2.0,
+                 local0={"_": jnp.zeros((n_workers, 1))},
+                 worker_update=worker_update,
+                 loss=lambda x, l: jnp.sum(jnp.square(x)))
+
+
+def run(seed: int = 0):
+    out = {}
+    app = make_mf_app(MFConfig())
+
+    # Theorem 1/3: regret decays ~ 1/sqrt(T)
+    for name, cfg in (("essp3", essp(3)), ("vap", vap(0.5, staleness=6))):
+        fn = jax.jit(lambda c=cfg: simulate(app, c, 300, seed=seed))
+        us = timed(fn, warmup=1, iters=1)
+        tr = fn()
+        lv = np.asarray(tr.loss_view)
+        curve = theory.regret_curve(lv, loss_star=float(lv.min()))
+        expo = theory.sqrt_decay_fit(curve, skip=20)
+        out[f"regret_{name}"] = {"exponent": expo,
+                                 "final_regret": float(curve[-1])}
+        emit(f"theory/regret_{name}", us, f"fit_exponent={expo:.2f}")
+
+    # Theorem 2/6: variance decreasing; ESSP <= SSP.
+    # Measured on a CONVEX objective (noisy quadratic) — the theorem's
+    # setting.  (First attempt used MF and was *refuted*: MF's rotational
+    # symmetry lets different seeds converge to different factorizations,
+    # so iterate variance grows even as the loss converges.  Recorded in
+    # EXPERIMENTS.md §Paper-fidelity C4.)
+    app_s = _quadratic_app(n_workers=8, dim=32)
+    v_ssp = theory.variance_trace(app_s, ssp(5), n_clocks=80, n_seeds=8)
+    v_essp = theory.variance_trace(app_s, essp(5), n_clocks=80, n_seeds=8)
+    out["variance"] = {
+        "ssp_early": float(v_ssp[5:15].mean()),
+        "ssp_late": float(v_ssp[-20:].mean()),
+        "essp_early": float(v_essp[5:15].mean()),
+        "essp_late": float(v_essp[-20:].mean()),
+        "decreasing": bool(v_essp[-20:].mean() < v_essp[5:15].mean()),
+        "essp_leq_ssp_late": bool(v_essp[-20:].mean()
+                                  <= v_ssp[-20:].mean() * 1.1),
+    }
+    emit("theory/variance", 0.0,
+         f"essp_late={out['variance']['essp_late']:.3e};"
+         f"ssp_late={out['variance']['ssp_late']:.3e}")
+
+    # Theorem 5: measured staleness moments -> bound ingredients
+    tr_ssp = jax.jit(lambda: simulate(app, ssp(5), 200, seed=seed))()
+    tr_essp = jax.jit(lambda: simulate(app, essp(5), 200, seed=seed))()
+    for name, tr in (("ssp5", tr_ssp), ("essp5", tr_essp)):
+        s = stal.summary(tr)
+        mu_g, sd_g = abs(s["mean"]) - 1, s["std"]   # staleness beyond -1
+        b = theory.theorem5_bound(T=200, s=5, P=8, eta=0.5, L=1.0, F=1.0,
+                                  mu_gamma=max(mu_g, 0), sigma_gamma=sd_g,
+                                  tau=0.05)
+        out[f"thm5_{name}"] = dict(b, mu_gamma=mu_g, sigma_gamma=sd_g)
+        emit(f"theory/thm5_{name}", 0.0,
+             f"threshold={b['threshold']:.3f};tail={b['tail_prob']:.3f}")
+    out["thm5_essp_tighter"] = bool(
+        out["thm5_essp5"]["threshold"] < out["thm5_ssp5"]["threshold"])
+
+    # VAP (C5): bound holds; sync cost explodes as v0 -> 0
+    forced = {}
+    for v0 in (1.0, 0.1, 0.01):
+        tr = jax.jit(lambda v=v0: simulate(app, vap(v, staleness=6), 100,
+                                           seed=seed))()
+        it = np.asarray(tr.intransit_inf)
+        vt = v0 / np.sqrt(np.arange(1, 101))
+        forced[v0] = {"forced_per_clock": float(np.asarray(tr.forced).sum()
+                                                / 100),
+                      "violations": float((it[1:] > vt[:-1] + 1e-6).mean())}
+        emit(f"theory/vap_v0_{v0}", 0.0,
+             f"forced_per_clock={forced[v0]['forced_per_clock']:.1f};"
+             f"viol={forced[v0]['violations']:.3f}")
+    out["vap"] = forced
+    save_json("theory_validation", out)
+    return out
+
+
+if __name__ == "__main__":
+    r = run()
+    print({k: v for k, v in r.items() if k.startswith(("variance",
+                                                       "thm5_essp_t"))})

@@ -1,0 +1,47 @@
+"""Consistency-model comparison incl. VAP and the robustness experiment.
+
+Reproduces, at laptop scale: Fig 2 (convergence), the staleness-robustness
+result (C3) and the VAP impracticality argument (forced synchronization
+explodes as the value bound tightens).
+
+    PYTHONPATH=src python examples/consistency_comparison.py
+"""
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).parent.parent / "src"))
+
+import jax
+import numpy as np
+
+from repro.apps.matfact import MFConfig, make_mf_app
+from repro.core import essp, simulate, ssp, vap
+from repro.core.timemodel import TimeModel
+
+# --- robustness to staleness (aggressive step size) -----------------------
+app_hot = make_mf_app(MFConfig(lr=1.4))
+print("=== robustness: final loss at aggressive lr (C3) ===")
+print(f"{'s':>4s} {'SSP':>10s} {'ESSP':>10s}")
+for s in (0, 3, 7, 15):
+    row = []
+    for mk in (ssp, essp):
+        tr = jax.jit(lambda c=mk(s): simulate(app_hot, c, 150))()
+        row.append(float(np.mean(np.asarray(tr.loss_ref)[-20:])))
+    print(f"{s:4d} {row[0]:10.4f} {row[1]:10.4f}")
+
+# --- VAP: value bound vs forced synchronization ----------------------------
+app = make_mf_app(MFConfig())
+print("\n=== VAP: forced synchronous deliveries per clock (C5) ===")
+for v0 in (1.0, 0.1, 0.01):
+    tr = jax.jit(lambda v=v0: simulate(app, vap(v, staleness=6), 80))()
+    print(f"v0={v0:5.2f}: {np.asarray(tr.forced).sum()/80:6.1f} forced/clock"
+          f"   (P*(P-1)={app.n_workers*(app.n_workers-1)} would be full sync)")
+
+# --- wall-clock model (Fig 1-right / Fig 2 time axis) ----------------------
+tm = TimeModel()
+print("\n=== modeled comm/comp split at s=5 (C6) ===")
+for name, cfg, kind in [("SSP", ssp(5), "ssp"), ("ESSP", essp(5), "essp")]:
+    tr = jax.jit(lambda c=cfg: simulate(app, c, 150))()
+    br = tm.breakdown(tr, kind)
+    print(f"{name}: total {br['total_s']:6.1f}s   comm share "
+          f"{100*br['comm_frac']:5.1f}%")

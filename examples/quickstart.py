@@ -1,0 +1,37 @@
+"""Quickstart: the paper in 60 seconds.
+
+Runs matrix factorization on the simulated parameter server under BSP,
+lazy SSP and ESSP, and prints the two headline results:
+ 1. the staleness (clock-differential) distributions (paper Fig 1-left),
+ 2. convergence per clock (paper Fig 2).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).parent.parent / "src"))
+
+import jax
+import numpy as np
+
+from repro.apps.matfact import MFConfig, make_mf_app
+from repro.core import bsp, essp, simulate, ssp, staleness
+
+app = make_mf_app(MFConfig())
+T, s = 150, 5
+
+print(f"MF-SGD on the PS simulator: {app.n_workers} workers, "
+      f"dim={app.dim}, staleness bound s={s}\n")
+
+for name, cfg in [("BSP ", bsp()), (f"SSP({s})", ssp(s)),
+                  (f"ESSP({s})", essp(s))]:
+    tr = jax.jit(lambda c=cfg: simulate(app, c, T))()
+    bins, probs = staleness.histogram(tr, lo=-(s + 2))
+    bar = " ".join(f"{b}:{p:.2f}" for b, p in zip(bins, probs) if p > 0.005)
+    loss = np.asarray(tr.loss_ref)
+    print(f"{name}  loss {loss[0]:.4f} -> {loss[T//2]:.4f} -> {loss[-1]:.4f}")
+    print(f"      staleness histogram  {bar}\n")
+
+print("expected: SSP ~uniform over the window, ESSP concentrated at -1,")
+print("ESSP converging at BSP-like speed per clock.")

@@ -1,0 +1,13 @@
+"""Batched serving demo: prefill + KV-cache decode on a reduced config.
+
+    PYTHONPATH=src python examples/serve_batch.py --arch mamba2-130m
+"""
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).parent.parent / "src"))
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""repro: Parameter-Server Consistency Models (AAAI 2015) in JAX.
+
+- ``repro.core``    — the paper: BSP/SSP/ESSP/VAP + ESSPTable simulator
+- ``repro.psdist``  — the paper on pods: consistency as gradient-sync policies
+- ``repro.models``  — six architecture families (dense/MoE/SSM/hybrid/VLM/audio)
+- ``repro.kernels`` — Pallas TPU kernels + pure-jnp oracles
+- ``repro.launch``  — production meshes, sharding rules, multi-pod dry-run
+"""
+
+__version__ = "1.0.0"

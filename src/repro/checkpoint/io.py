@@ -1,0 +1,46 @@
+"""Checkpointing: pytree <-> .npz with path-encoded keys (no orbax here)."""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..utils.tree import named_leaves
+
+_SEP = "||"
+
+
+def save(path: str, tree) -> None:
+    """Save a pytree of arrays to ``path`` (.npz)."""
+    flat = {}
+    for name, leaf in named_leaves(tree):
+        arr = np.asarray(leaf)
+        if arr.dtype == jnp.bfloat16:
+            flat[name + _SEP + "bf16"] = arr.astype(np.float32)
+        else:
+            flat[name] = arr
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path, **flat)
+
+
+def restore(path: str, like):
+    """Restore into the structure of ``like`` (a pytree of arrays/specs)."""
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    out = []
+    from ..utils.tree import flatten_path
+    for p, leaf in flat:
+        name = flatten_path(p)
+        if name in data:
+            arr = data[name]
+        elif name + _SEP + "bf16" in data:
+            arr = data[name + _SEP + "bf16"].astype(jnp.bfloat16)
+        else:
+            raise KeyError(f"checkpoint missing {name}")
+        want = getattr(leaf, "shape", None)
+        if want is not None and tuple(arr.shape) != tuple(want):
+            raise ValueError(f"{name}: shape {arr.shape} != {want}")
+        out.append(jnp.asarray(arr, dtype=getattr(leaf, "dtype", arr.dtype)))
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,39 @@
+"""Assigned-architecture registry: ``get_config(arch_id)``."""
+from __future__ import annotations
+
+import importlib
+
+from .base import (AttnConfig, EncoderConfig, INPUT_SHAPES, LONG_CONTEXT_WINDOW,
+                   MLAConfig, MambaConfig, ModelConfig, MoEConfig, ShapeConfig,
+                   VisionConfig)
+
+ARCHS = (
+    "whisper-medium",
+    "qwen3-4b",
+    "deepseek-v2-lite-16b",
+    "jamba-1.5-large-398b",
+    "llama-3.2-vision-11b",
+    "stablelm-3b",
+    "mamba2-130m",
+    "qwen3-moe-30b-a3b",
+    "llama3-8b",
+    "qwen3-0.6b",
+    # paper apps (not part of the assigned pool, used by examples/benchmarks)
+)
+
+
+def _module_name(arch: str) -> str:
+    return arch.replace("-", "_").replace(".", "_")
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; available: {ARCHS}")
+    mod = importlib.import_module(f".{_module_name(arch)}", __package__)
+    return mod.CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    """Reduced variant of the same family for CPU smoke tests."""
+    mod = importlib.import_module(f".{_module_name(arch)}", __package__)
+    return mod.smoke()

@@ -1,0 +1,8 @@
+"""The paper's contribution: PS consistency models + ESSPTable simulator."""
+from .consistency import ConsistencyConfig, bsp, ssp, essp, vap, MODELS
+from .ps import PSApp, Trace, simulate, simulate_jit
+from . import staleness, theory, timemodel
+
+__all__ = ["ConsistencyConfig", "bsp", "ssp", "essp", "vap", "MODELS",
+           "PSApp", "Trace", "simulate", "simulate_jit",
+           "staleness", "theory", "timemodel"]

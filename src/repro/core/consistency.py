@@ -1,0 +1,109 @@
+"""Parameter-server consistency models (the paper's core abstraction).
+
+A *consistency model* governs which producers' updates a reader's cached
+view contains at each clock.  Following the paper we implement:
+
+- ``bsp``    Bulk Synchronous Parallel: a full barrier every clock; a read at
+             clock ``c`` sees *all* updates through ``c-1`` (clock
+             differential is always -1, as noted under Fig 1).
+- ``ssp``    Stale Synchronous Parallel (SSPTable semantics): the client
+             cache is refreshed *lazily* — only when its per-row clock would
+             violate the staleness bound ``s``.  A read at clock ``c`` is
+             guaranteed to include all updates from clocks ``<= c - s - 1``.
+- ``essp``   Eager SSP (ESSPTable, this paper): identical *guarantee* to SSP,
+             but the server pushes updated rows to registered clients every
+             clock, so the empirical staleness concentrates near -1.
+- ``async``  No bound at all (Hogwild-style), delivery purely delay-driven.
+             Used as a divergence contrast; not a paper contribution.
+- ``vap``    Value-bounded Asynchronous Parallel: delivery is delay-driven
+             but the aggregated in-transit updates of any producer are forced
+             out whenever their infinity-norm would exceed ``v_t = v0/sqrt(t)``
+             (eq. 1 of the paper).  Implementable in the simulator because it
+             has global knowledge; the paper's point that this requires
+             strong-consistency-grade synchronization shows up as the forced
+             synchronous deliveries we count in the time model.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+MODELS = ("bsp", "ssp", "essp", "async", "vap")
+
+
+@dataclass(frozen=True)
+class ConsistencyConfig:
+    """Configuration of a PS consistency model.
+
+    Attributes:
+      model: one of ``MODELS``.
+      staleness: SSP/ESSP staleness bound ``s`` (clocks).
+      v0: VAP initial value bound (``v_t = v0 / sqrt(t+1)``).
+      push_prob: per-clock probability that an eager push (ESSP) or an async
+        delivery reaches a given reader within one clock.  Models network
+        delay: deliveries are geometric with this success probability.
+      straggler_prob: probability that a given (reader, producer) channel is
+        "congested" for a clock (its deliveries stall), adding a heavy tail.
+      straggler_workers: number of persistently slow *producers* (the first
+        N worker ids) whose pushes land at ``straggler_rate`` x the nominal
+        rate — the paper's straggler scenario (see core/delays.py).
+      straggler_rate: delivery-rate multiplier for straggler workers.
+      read_my_writes: whether a worker's own updates are immediately visible
+        in its view (true for ESSPTable's local cache with coalesced INCs;
+        the theory section of the paper does *not* assume it, so tests cover
+        both).
+      window: ring-buffer window override; defaults to ``staleness +
+        max_extra_delay + 2``.
+      max_extra_delay: cap on delay beyond the eager path used to size the
+        update window for unbounded models (async/vap).
+    """
+
+    model: str = "essp"
+    staleness: int = 3
+    v0: float = 0.0
+    push_prob: float = 0.9
+    straggler_prob: float = 0.05
+    straggler_workers: int = 0
+    straggler_rate: float = 0.25
+    read_my_writes: bool = True
+    window: int | None = None
+    max_extra_delay: int = 6
+
+    def __post_init__(self):
+        if self.model not in MODELS:
+            raise ValueError(f"unknown consistency model {self.model!r}; "
+                             f"expected one of {MODELS}")
+        if self.staleness < 0:
+            raise ValueError("staleness must be >= 0")
+        if self.model == "vap" and self.v0 <= 0:
+            raise ValueError("vap requires v0 > 0")
+
+    @property
+    def effective_window(self) -> int:
+        """Size of the update ring buffer (clocks kept before folding)."""
+        if self.window is not None:
+            return self.window
+        if self.model == "bsp":
+            return 2
+        if self.model in ("async", "vap"):
+            return self.staleness + self.max_extra_delay + 2
+        return self.staleness + 2
+
+    def replace(self, **kw) -> "ConsistencyConfig":
+        return dataclasses.replace(self, **kw)
+
+
+def bsp(**kw) -> ConsistencyConfig:
+    return ConsistencyConfig(model="bsp", staleness=0, **kw)
+
+
+def ssp(staleness: int, **kw) -> ConsistencyConfig:
+    return ConsistencyConfig(model="ssp", staleness=staleness, **kw)
+
+
+def essp(staleness: int, **kw) -> ConsistencyConfig:
+    return ConsistencyConfig(model="essp", staleness=staleness, **kw)
+
+
+def vap(v0: float, **kw) -> ConsistencyConfig:
+    return ConsistencyConfig(model="vap", v0=v0, **kw)

@@ -1,0 +1,54 @@
+"""Network-delay / straggler models for the PS simulator.
+
+The paper's motivation for bounded staleness is *stragglers*: transient or
+persistent slow workers whose updates arrive late.  The simulator models
+delivery as per-channel Bernoulli trials each clock (geometric delays); this
+module adds structured heterogeneity on top:
+
+- ``worker_rates(cfg, P)``: per-*producer* delivery-rate multipliers — the
+  first ``straggler_workers`` workers push at ``straggler_rate`` of the
+  nominal rate (persistently slow machines);
+- ``delivery_matrix``: the full [reader, producer] delivery sample used by
+  `ps.simulate` each clock (channel congestion x producer slowness).
+
+Everything is driven by the ConsistencyConfig so experiment sweeps stay
+declarative (see benchmarks/stragglers.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .consistency import ConsistencyConfig
+
+
+def worker_rates(cfg: ConsistencyConfig, P: int) -> jax.Array:
+    """Per-producer delivery-rate multipliers in (0, 1]."""
+    n = min(getattr(cfg, "straggler_workers", 0), P)
+    rate = getattr(cfg, "straggler_rate", 1.0)
+    rates = jnp.ones((P,))
+    if n > 0:
+        rates = rates.at[:n].set(rate)
+    return rates
+
+
+def delivery_matrix(rng, cfg: ConsistencyConfig, P: int) -> jax.Array:
+    """Sample the end-of-clock delivery matrix [P(reader), P(producer)].
+
+    A channel delivers this clock iff (a) the producer's push lands
+    (Bernoulli(push_prob x producer_rate)) and (b) the channel is not
+    transiently congested (Bernoulli(straggler_prob) blocks it).
+    """
+    k1, k2 = jax.random.split(rng)
+    rates = worker_rates(cfg, P)
+    p = cfg.push_prob * rates[None, :]             # [1, producer]
+    pushed = jax.random.uniform(k1, (P, P)) < p
+    congested = jax.random.bernoulli(k2, cfg.straggler_prob, (P, P))
+    return pushed & ~congested
+
+
+def expected_delay(cfg: ConsistencyConfig, P: int) -> jax.Array:
+    """Analytic mean delivery delay per producer (geometric): 1/p clocks."""
+    rates = worker_rates(cfg, P)
+    p = cfg.push_prob * rates * (1.0 - cfg.straggler_prob)
+    return 1.0 / jnp.maximum(p, 1e-6)

@@ -1,0 +1,238 @@
+"""Vectorized parameter-server simulator (the paper's ESSPTable, in JAX).
+
+The simulator reproduces the *semantics* of SSPTable/ESSPTable — per-row
+cache clocks, lazy-vs-eager delivery, bounded staleness, value bounds — in a
+single deterministic ``lax.scan`` over clocks, with all ``P`` workers
+vectorized via ``vmap``.  This is what lets us measure the paper's claims
+(staleness distributions, convergence per clock, robustness, variance) with
+full control over the network-delay model and with exact repeatability.
+
+Mechanics
+---------
+The global model is a flat vector ``x ∈ R^d`` (apps pack/unpack their own
+structure).  Updates are additive (``x ← x + u``), matching the paper's INC
+semantics; they are kept in a ring buffer of the last ``W`` clocks, and the
+visibility of producer ``q``'s updates to reader ``r`` is tracked by a
+per-channel clock matrix ``cview[r, q]`` — the generalization of ESSPTable's
+per-row ``c_param``.  The reader's view is::
+
+    view[r] = base + Σ_{q, c' ≤ cview[r,q]} u[q, c']
+
+where ``base`` holds all updates old enough to be visible to everyone
+(folded out of the ring).  A consistency model is exactly a policy for
+advancing ``cview`` (see ``consistency.py``).
+
+Delivery model: at the end of each clock, every (reader, producer) channel
+independently delivers the fresh update with probability ``push_prob``
+(unless the channel is "congested" that clock, probability
+``straggler_prob``), giving geometric delivery delays with a heavy-tail knob
+— the simulator analogue of the paper's 1 GbE cluster network.  SSP ignores
+these pushes (SSPTable is pull-based): its caches refresh only when a read
+would violate the staleness bound.  ESSP applies them eagerly.
+
+Everything (drift of staleness, forced synchronous fetches, update
+magnitudes, losses, per-worker views) is recorded per clock into a `Trace`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from .consistency import ConsistencyConfig
+from .delays import delivery_matrix
+
+
+@dataclass
+class PSApp:
+    """An ML application running against the simulated parameter server.
+
+    Attributes:
+      name: identifier.
+      dim: size of the flat parameter vector.
+      n_workers: number of PS workers ``P``.
+      x0: initial parameters, shape ``[dim]``.
+      local0: worker-local state pytree; every leaf has leading axis ``P``
+        (data partitions, Gibbs assignments, doc-topic counts, ...).
+      worker_update: ``(view[d], local, worker_id, clock, rng) -> (u[d],
+        local')`` — one clock of work for one worker, vmapped by the
+        simulator.  ``u`` is the additive update sent to the server.
+      loss: ``(x[d], locals) -> scalar`` global training objective, where
+        ``locals`` is the stacked worker-local state.
+    """
+
+    name: str
+    dim: int
+    n_workers: int
+    x0: jax.Array
+    local0: Any
+    worker_update: Callable
+    loss: Callable
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class Trace:
+    """Per-clock traces from a simulation (leading axis = clock)."""
+
+    loss_ref: jax.Array        # [T] loss of the reference sequence x_t
+    loss_view: jax.Array       # [T] loss of worker 0's (stale) view
+    staleness: jax.Array       # [T, P, P] clock differential cview[r,q] - c
+    forced: jax.Array          # [T, P, P] synchronous (blocking) fetches
+    delivered: jax.Array       # [T, P, P] background deliveries this clock
+    u_l2: jax.Array            # [T, P] l2 norm of each worker's update
+    intransit_inf: jax.Array   # [T] max inf-norm of in-transit aggregates
+    views0: jax.Array | None   # [T, d] worker-0 views (if record_views)
+    x_final: jax.Array         # [d] final reference parameters
+    locals_final: Any          # final worker-local state
+
+
+def _delivery(rng, cfg: ConsistencyConfig, P: int):
+    """Sample the end-of-clock delivery matrix (see core/delays.py)."""
+    return delivery_matrix(rng, cfg, P)
+
+
+def simulate(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
+             seed=0, record_views: bool = False) -> Trace:
+    """Run ``n_clocks`` of the app under the given consistency model."""
+    P, d = app.n_workers, app.dim
+    W = cfg.effective_window
+    s = cfg.staleness
+    f32 = jnp.float32
+
+    base0 = app.x0.astype(f32)
+    uring0 = jnp.zeros((W, P, d), f32)
+    uclock0 = jnp.full((W,), -10**9, jnp.int32)   # slot -> clock stored
+    cview0 = jnp.full((P, P), -1, jnp.int32)      # everyone saw "clock -1"
+    rng0 = jax.random.PRNGKey(seed)
+
+    vmapped_update = jax.vmap(app.worker_update,
+                              in_axes=(0, 0, 0, None, 0))
+    worker_ids = jnp.arange(P, dtype=jnp.int32)
+
+    def enforce_vap(c, cview, uring, uclock):
+        """Force delivery of oldest in-transit updates so that the
+        per-producer aggregated in-transit update satisfies
+        ``||.||_inf <= v_t`` (paper eq. 1, v_t = v0/sqrt(t+1)).
+
+        For each producer q we compute the norm of the suffix aggregate of
+        its newest ``k`` clocks, and keep in transit the largest suffix that
+        satisfies the bound; anything older is force-delivered.
+        """
+        v_t = cfg.v0 / jnp.sqrt(c.astype(f32) + 1.0)
+        # S[k] = aggregate of the k newest clocks' updates, per producer.
+        suffix = [jnp.zeros((P, d), f32)]
+        for k in range(1, W + 1):
+            sel = (uclock == c - k).astype(f32)           # [W]
+            contrib = jnp.einsum("w,wpd->pd", sel, uring)
+            suffix.append(suffix[-1] + contrib)
+        norms = jnp.stack([jnp.max(jnp.abs(S), axis=-1) for S in suffix])  # [W+1, P]
+        ok = norms <= v_t                                  # [W+1, P]
+        ok = ok.at[0].set(True)                            # empty suffix always ok
+        # Per (reader, producer) channel: keep the *longest* suffix k that
+        # (a) satisfies the bound and (b) does not exceed the channel's
+        # current in-transit length (we can only deliver, never undeliver).
+        kcur = jnp.clip(c - 1 - cview, 0, W)               # [P, P] suffix length now
+        ks = jnp.arange(W + 1, dtype=jnp.int32)[:, None, None]
+        cond = ok[:, None, :] & (ks <= kcur[None, :, :])   # [W+1, r, q]
+        kbest = jnp.max(jnp.where(cond, ks, -1), axis=0)   # [r, q]
+        required = c - 1 - kbest
+        forced = cview < required
+        return jnp.maximum(cview, required), forced
+
+    def step(carry, c):
+        base, uring, uclock, cview, local, rng = carry
+        rng, k_upd, k_net = jax.random.split(rng, 3)
+
+        # --- 1. pre-read consistency enforcement (blocking fetches) -------
+        if cfg.model == "bsp":
+            forced = cview < (c - 1)
+            cview = jnp.full_like(cview, c - 1)
+        elif cfg.model in ("ssp", "essp"):
+            # SSP condition: a read at clock c must include all updates of
+            # clocks <= c - s - 1.  Lazy SSP refreshes the whole channel
+            # from the server (which holds everything through c-1) exactly
+            # when the bound trips; ESSP rarely trips thanks to pushes.
+            forced = cview < (c - s - 1)
+            cview = jnp.where(forced, c - 1, cview)
+        elif cfg.model == "vap":
+            cview, forced = enforce_vap(c, cview, uring, uclock)
+        else:  # async
+            forced = jnp.zeros_like(cview, dtype=bool)
+
+        if cfg.read_my_writes:
+            eye = jnp.eye(P, dtype=bool)
+            cview = jnp.where(eye, c - 1, cview)
+
+        staleness = cview - c                               # [P, P]
+
+        # VAP-condition metric: max over (reader, producer) channels of the
+        # inf-norm of the aggregated in-transit updates at read time.
+        valid = uclock[None, :, None] > -(10**8)
+        in_transit = (uclock[None, :, None] > cview[:, None, :]) & valid
+        agg = jnp.einsum("rwq,wqd->rqd", in_transit.astype(f32), uring)
+        intransit_inf = jnp.max(jnp.abs(agg))
+
+        # --- 2. materialize views ----------------------------------------
+        # mask[r, w, q] = slot w's clock is visible to reader r for prod. q
+        vis = (uclock[None, :, None] <= cview[:, None, :]) & \
+              (uclock[None, :, None] > -(10**8))
+        views = base[None, :] + jnp.einsum(
+            "rwq,wqd->rd", vis.astype(f32), uring)
+
+        # --- 3. worker computation ----------------------------------------
+        upd_keys = jax.random.split(k_upd, P)
+        u, local = vmapped_update(views, local, worker_ids, c, upd_keys)
+        u = u.astype(f32)
+
+        # --- 4. commit to server: fold oldest slot, write newest ----------
+        slot = jnp.mod(c, W)
+        old_valid = uclock[slot] > -(10**8)
+        base = base + jnp.where(old_valid, 1.0, 0.0) * jnp.sum(uring[slot], axis=0)
+        uring = uring.at[slot].set(u)
+        uclock = uclock.at[slot].set(c)
+
+        # --- 5. end-of-clock delivery (affects reads at c+1) --------------
+        if cfg.model == "bsp":
+            delivered = jnp.ones((P, P), bool)
+            cview = jnp.full_like(cview, c)
+        elif cfg.model == "ssp":
+            delivered = jnp.zeros((P, P), bool)   # pull-based: no pushes
+        else:  # essp / async / vap: delay-driven eager delivery
+            delivered = _delivery(k_net, cfg, P)
+            cview = jnp.where(delivered, c, cview)
+
+        # --- 6. record ------------------------------------------------------
+        x_ref = base + jnp.sum(uring * (uclock[:, None, None] > -(10**8)),
+                               axis=(0, 1))
+        loss_ref = app.loss(x_ref, local)
+        loss_view = app.loss(views[0], local)
+        out = dict(loss_ref=loss_ref, loss_view=loss_view,
+                   staleness=staleness, forced=forced, delivered=delivered,
+                   u_l2=jnp.linalg.norm(u, axis=-1),
+                   intransit_inf=intransit_inf)
+        if record_views:
+            out["views0"] = views[0]
+        return (base, uring, uclock, cview, local, rng), out
+
+    carry0 = (base0, uring0, uclock0, cview0, app.local0, rng0)
+    (base, uring, uclock, _, local, _), ys = jax.lax.scan(
+        step, carry0, jnp.arange(n_clocks, dtype=jnp.int32))
+
+    x_final = base + jnp.sum(uring * (uclock[:, None, None] > -(10**8)),
+                             axis=(0, 1))
+    return Trace(
+        loss_ref=ys["loss_ref"], loss_view=ys["loss_view"],
+        staleness=ys["staleness"], forced=ys["forced"],
+        delivered=ys["delivered"], u_l2=ys["u_l2"],
+        intransit_inf=ys["intransit_inf"],
+        views0=ys.get("views0"), x_final=x_final, locals_final=local)
+
+
+def simulate_jit(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
+                 seed=0, record_views: bool = False) -> Trace:
+    """jit-compiled run; ``seed`` may be a traced int (vmap over seeds)."""
+    fn = jax.jit(lambda sd: simulate(app, cfg, n_clocks, sd, record_views))
+    return fn(jnp.asarray(seed, jnp.uint32))

@@ -1,0 +1,56 @@
+"""Staleness (clock-differential) measurement — paper Fig 1 (left).
+
+The paper measures, at every read, the "clock differential": the difference
+between the clock of the parameter copy being read and the reader's own
+clock.  Under BSP this is always −1; under lazy SSP it is ≈uniform over the
+window [−s−1, −1]; under ESSP it concentrates at −1.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .ps import Trace
+
+
+def clock_differentials(trace: Trace, exclude_self: bool = True) -> np.ndarray:
+    """Flatten per-read clock differentials from a trace.
+
+    Returns an int array of ``cview[r,q] − c`` over all clocks and channels.
+    Self-channels (r == q) are excluded by default since read-my-writes pins
+    them at −1.
+    """
+    st = np.asarray(trace.staleness)               # [T, P, P]
+    if exclude_self:
+        P = st.shape[-1]
+        mask = ~np.eye(P, dtype=bool)
+        return st[:, mask].ravel()
+    return st.ravel()
+
+
+def histogram(trace: Trace, lo: int | None = None, hi: int = 0,
+              exclude_self: bool = True):
+    """Normalized histogram of clock differentials.
+
+    Returns ``(bin_values, probabilities)`` with bins ``lo..hi`` inclusive.
+    """
+    diffs = clock_differentials(trace, exclude_self)
+    if lo is None:
+        lo = int(diffs.min())
+    bins = np.arange(lo, hi + 2) - 0.5
+    counts, _ = np.histogram(diffs, bins=bins)
+    total = max(1, counts.sum())
+    return np.arange(lo, hi + 1), counts / total
+
+
+def summary(trace: Trace, exclude_self: bool = True) -> dict:
+    """Moment statistics of the staleness distribution (μ_γ, σ_γ of the
+    paper's Theorem 5 are driven by these)."""
+    diffs = clock_differentials(trace, exclude_self).astype(np.float64)
+    # Skip the warm-up clocks where cview is still the initial -1 everywhere.
+    return {
+        "mean": float(diffs.mean()),
+        "std": float(diffs.std()),
+        "min": int(diffs.min()),
+        "max": int(diffs.max()),
+        "frac_fresh": float((diffs >= -1).mean()),
+    }

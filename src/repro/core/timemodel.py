@@ -1,0 +1,75 @@
+"""Parametric wall-clock model for the simulator (paper Fig 1-right, and the
+time axis of Fig 2).
+
+The simulator advances in lockstep clocks; real wall time per clock differs
+by consistency model because of *synchronous* communication:
+
+- computation: per worker, lognormal around ``t_comp`` (stragglers);
+- BSP: a barrier every clock — the clock costs the *max* worker time plus a
+  full model sync;
+- SSP: forced cache refreshes are synchronous round-trips (the reader
+  blocks); each refresh pays latency + (channel bytes)/bandwidth;
+- ESSP: pushes ride in the background (overlapped with compute, as
+  ESSPTable's server-push does); only the rare forced refresh blocks.
+
+This is a *model* (the container has no cluster); constants default to the
+paper's hardware class (1 GbE: ~100 MB/s, 0.5 ms RTT).  All derived claims
+(C6 and Fig 2 time axes) are reported with the constants alongside.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from .ps import Trace
+
+
+@dataclass(frozen=True)
+class TimeModel:
+    t_comp: float = 0.050          # mean compute seconds per clock per worker
+    straggler_sigma: float = 0.3   # lognormal sigma of compute time
+    rtt: float = 0.0005            # synchronous fetch round-trip (s)
+    bandwidth: float = 100e6       # bytes/s (1 GbE)
+    bytes_per_channel: float = 4e6 # bytes of one producer's row set
+    barrier_overhead: float = 0.002
+    seed: int = 0
+
+    def per_clock(self, trace: Trace, model: str):
+        """Returns (wall[T], comp[T], comm[T]) per-clock seconds."""
+        forced = np.asarray(trace.forced)            # [T, P, P] sync fetches
+        T, P, _ = forced.shape
+        rng = np.random.default_rng(self.seed)
+        comp = self.t_comp * rng.lognormal(
+            0.0, self.straggler_sigma, size=(T, P))   # [T, P]
+
+        xfer = self.bytes_per_channel / self.bandwidth
+        sync = forced.sum(axis=2) * (self.rtt + xfer)  # [T, P] reader-side
+
+        if model == "bsp":
+            # barrier: everyone waits for the slowest, then full sync
+            comp_clock = comp.max(axis=1)
+            comm_clock = self.barrier_overhead + (P - 1) * xfer + self.rtt
+            comm_clock = np.full(T, comm_clock)
+        else:
+            # lockstep clocks: the clock takes the slowest worker's
+            # (compute + its own blocking fetches)
+            total = comp + sync
+            worst = total.argmax(axis=1)
+            comp_clock = comp[np.arange(T), worst]
+            comm_clock = sync[np.arange(T), worst]
+        return comp_clock + comm_clock, comp_clock, comm_clock
+
+    def wall_time(self, trace: Trace, model: str) -> np.ndarray:
+        wall, _, _ = self.per_clock(trace, model)
+        return np.cumsum(wall)
+
+    def breakdown(self, trace: Trace, model: str) -> dict:
+        """Fig 1-right style comm/comp split over the whole run."""
+        wall, comp, comm = self.per_clock(trace, model)
+        return {
+            "total_s": float(wall.sum()),
+            "comp_s": float(comp.sum()),
+            "comm_s": float(comm.sum()),
+            "comm_frac": float(comm.sum() / max(wall.sum(), 1e-12)),
+        }

@@ -1,0 +1,70 @@
+"""Deterministic synthetic data (no datasets ship offline).
+
+Token streams have learnable structure: each document draws a hidden affine
+rule ``next = (a * cur + b) mod V_eff`` plus noise, so per-token loss drops
+well below uniform entropy within a few hundred steps — enough to validate
+end-to-end training and the consistency-model comparisons on real gradients.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class TokenGenConfig:
+    vocab_size: int
+    seq_len: int
+    batch: int
+    v_eff: int = 256        # active vocabulary slice
+    noise: float = 0.05     # per-token corruption probability
+    seed: int = 0
+
+
+def token_batch(cfg: TokenGenConfig, step: int):
+    """One [batch, seq_len] int32 batch, deterministic in (seed, step)."""
+    rng = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), step)
+    k_a, k_b, k_s, k_n, k_m = jax.random.split(rng, 5)
+    v = min(cfg.v_eff, cfg.vocab_size)
+    B, S = cfg.batch, cfg.seq_len
+    a = 2 * jax.random.randint(k_a, (B, 1), 1, v // 2) + 1   # odd multiplier
+    b = jax.random.randint(k_b, (B, 1), 0, v)
+    x0 = jax.random.randint(k_s, (B, 1), 0, v)
+
+    def step_fn(x, _):
+        nxt = (a[:, 0] * x + b[:, 0]) % v
+        return nxt, nxt
+
+    _, seq = jax.lax.scan(step_fn, x0[:, 0], None, length=S - 1)
+    toks = jnp.concatenate([x0, seq.T], axis=1)
+    noise = jax.random.bernoulli(k_n, cfg.noise, (B, S))
+    rand = jax.random.randint(k_m, (B, S), 0, v)
+    return jnp.where(noise, rand, toks).astype(jnp.int32)
+
+
+def token_batches(cfg: TokenGenConfig, n_steps: int | None = None,
+                  extra: dict | None = None):
+    """Iterator of training batches ({"tokens": ...} + modality stubs)."""
+    gen = jax.jit(lambda s: token_batch(cfg, s))
+    step = 0
+    while n_steps is None or step < n_steps:
+        batch = {"tokens": gen(jnp.int32(step))}
+        if extra:
+            batch.update(extra)
+        yield batch
+        step += 1
+
+
+def modality_stub(cfg_model, batch: int, dtype=jnp.float32, seed: int = 7):
+    """Frame/patch embeddings for audio/vlm families (assignment carve-out)."""
+    rng = jax.random.PRNGKey(seed)
+    if cfg_model.family == "audio":
+        shape = (batch, cfg_model.encoder.n_ctx, cfg_model.d_model)
+        return {"frames": 0.1 * jax.random.normal(rng, shape, dtype)}
+    if cfg_model.family == "vlm":
+        shape = (batch, cfg_model.vision.n_image_tokens, cfg_model.d_model)
+        return {"image_embeds": 0.1 * jax.random.normal(rng, shape, dtype)}
+    return {}

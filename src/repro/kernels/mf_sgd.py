@@ -1,0 +1,132 @@
+"""Pallas TPU kernel for the paper's MF-SGD hot loop (dense-block form).
+
+The paper's benchmark updates rows of L and columns of R for every observed
+rating.  On TPU we adapt the insight (DESIGN.md §Hardware adaptation): the
+scatter-style per-rating update becomes a *dense block* update — ratings are
+tiled into MXU-aligned [block_n x block_m] blocks; each program instance:
+
+  1. loads its L [block_n, K] and R [K, block_m] tiles into VMEM,
+  2. computes the residual E = mask * (D - L R) on the MXU,
+  3. emits the paper's gradient-summed updates
+         dL = gamma (E R^T - lam * count_row * L)
+         dR = gamma (L^T E - lam * count_col * R)
+     and the block's squared-error loss.
+
+TPU constraint: an output tile may only be *accumulated* across consecutive
+(innermost) grid steps — revisiting a tile non-consecutively is undefined on
+hardware.  dL accumulates over column blocks and dR over row blocks, so we
+run two passes with transposed grids: pass 1 (grid i,j) accumulates dL+loss
+over the innermost j; pass 2 (grid j,i) accumulates dR over the innermost i.
+E is recomputed (cheap: one MXU matmul per tile) — trading flops for a
+hardware-legal accumulation pattern.
+
+K (the rank) stays whole in VMEM: an L tile is block_n x K x 4B = 128 KiB at
+K=256 — comfortably resident.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def supported(L, R, D) -> bool:
+    n, k = L.shape
+    m = R.shape[1]
+    return k % 8 == 0 and n % 8 == 0 and m % 128 == 0
+
+
+def _residual(L, R, D, mask):
+    pred = jnp.dot(L, R, preferred_element_type=jnp.float32)
+    return jnp.where(mask, D - pred, 0.0)
+
+
+def _dl_kernel(L_ref, R_ref, D_ref, mask_ref, dL_ref, loss_ref,
+               *, gamma, lam):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    L, R = L_ref[...], R_ref[...]
+    mask = mask_ref[...]
+    E = _residual(L, R, D_ref[...], mask)
+    cnt_row = jnp.sum(mask.astype(jnp.float32), axis=1, keepdims=True)
+    dL = gamma * (jnp.dot(E, R.T, preferred_element_type=jnp.float32)
+                  - lam * cnt_row * L)
+
+    @pl.when(j == 0)
+    def _zero_dl():
+        dL_ref[...] = jnp.zeros_like(dL_ref)
+
+    # the loss tile has a constant index map (visited every step) — zero it
+    # only on the very first program instance.
+    @pl.when((i == 0) & (j == 0))
+    def _zero_loss():
+        loss_ref[0, 0] = 0.0
+
+    dL_ref[...] += dL.astype(dL_ref.dtype)
+    loss_ref[0, 0] += jnp.sum(jnp.square(E))
+
+
+def _dr_kernel(L_ref, R_ref, D_ref, mask_ref, dR_ref, *, gamma, lam):
+    i = pl.program_id(1)                       # transposed grid: (j, i)
+    L, R = L_ref[...], R_ref[...]
+    mask = mask_ref[...]
+    E = _residual(L, R, D_ref[...], mask)
+    cnt_col = jnp.sum(mask.astype(jnp.float32), axis=0, keepdims=True)
+    dR = gamma * (jnp.dot(L.T, E, preferred_element_type=jnp.float32)
+                  - lam * cnt_col * R)
+
+    @pl.when(i == 0)
+    def _zero():
+        dR_ref[...] = jnp.zeros_like(dR_ref)
+
+    dR_ref[...] += dR.astype(dR_ref.dtype)
+
+
+def mf_sgd_block(L, R, D, mask, gamma, lam, *, block_n: int = 128,
+                 block_m: int = 128, interpret: bool = False):
+    """Contract identical to `ref.mf_sgd_block` (loss normalized by count)."""
+    n, K = L.shape
+    m = R.shape[1]
+    block_n = min(block_n, n)
+    block_m = min(block_m, m)
+    assert n % block_n == 0 and m % block_m == 0
+    n_n, n_m = n // block_n, m // block_m
+
+    dL, loss = pl.pallas_call(
+        functools.partial(_dl_kernel, gamma=gamma, lam=lam),
+        grid=(n_n, n_m),
+        in_specs=[
+            pl.BlockSpec((block_n, K), lambda i, j: (i, 0)),
+            pl.BlockSpec((K, block_m), lambda i, j: (0, j)),
+            pl.BlockSpec((block_n, block_m), lambda i, j: (i, j)),
+            pl.BlockSpec((block_n, block_m), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n, K), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, K), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(L, R, D, mask)
+
+    dR = pl.pallas_call(
+        functools.partial(_dr_kernel, gamma=gamma, lam=lam),
+        grid=(n_m, n_n),                        # transposed
+        in_specs=[
+            pl.BlockSpec((block_n, K), lambda j, i: (i, 0)),
+            pl.BlockSpec((K, block_m), lambda j, i: (0, j)),
+            pl.BlockSpec((block_n, block_m), lambda j, i: (i, j)),
+            pl.BlockSpec((block_n, block_m), lambda j, i: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((K, block_m), lambda j, i: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((K, m), jnp.float32),
+        interpret=interpret,
+    )(L, R, D, mask)
+
+    cnt = jnp.maximum(jnp.sum(mask), 1)
+    return dL, dR, loss[0, 0] / cnt

@@ -1,0 +1,120 @@
+"""Pallas TPU kernel for the Mamba-2 SSD chunked scan.
+
+One program instance processes one (batch, head, chunk) tile:
+
+  - intra-chunk dual form on the MXU: (C B^T ∘ decay ∘ causal) X,
+  - carries the inter-chunk SSM state [headdim, d_state] in VMEM scratch
+    across the chunk grid dimension (innermost), multiplying by the chunk's
+    cumulative decay and adding its summary state.
+
+Grid: (batch*heads, n_chunks); chunk is the innermost dimension so the
+state scratch persists across it (sequential dependence), while
+batch*heads programs are independent (parallel grid dim).
+
+Tiles: chunk length = 128 aligns the intra-chunk [l, l] score matmul to the
+MXU; headdim (64-256) x d_state (128) state tiles are VMEM-resident.
+
+Validated under interpret=True against `ref.ssd_chunked`.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def supported(x, B, chunk) -> bool:
+    b, s, h, p = x.shape
+    return s % chunk == 0 and p % 8 == 0 and B.shape[-1] % 8 == 0
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, st_ref,
+            *, chunk, n_chunks):
+    # st_ref is an *output* block revisited across the (innermost) chunk
+    # grid dim — it doubles as the carried SSM state (legal accumulation
+    # pattern on TPU; the value after the last chunk is the final state).
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        st_ref[...] = jnp.zeros_like(st_ref)
+
+    x = x_ref[...]                                   # [l, p]
+    dt = dt_ref[...]                                 # [l, 1]  (f32)
+    A = a_ref[0]                                     # scalar (f32, negative)
+    Bm = b_ref[...]                                  # [l, n]
+    Cm = c_ref[...]                                  # [l, n]
+
+    xbar = (x * dt).astype(jnp.float32)              # dt-weighted input
+    da = dt[:, 0] * A                                # [l] log decay
+    cum = jnp.cumsum(da)                             # [l]
+
+    # intra-chunk dual form
+    scores = jnp.dot(Cm, Bm.T, preferred_element_type=jnp.float32)  # [l, l]
+    # exponent clamped at 0 (upper triangle masked below; avoids inf)
+    decay = jnp.exp(jnp.minimum(cum[:, None] - cum[None, :], 0.0))
+    li = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    lj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    w = jnp.where(li >= lj, scores * decay, 0.0)
+    y = jnp.dot(w.astype(xbar.dtype), xbar,
+                preferred_element_type=jnp.float32)  # [l, p]
+
+    # inter-chunk contribution from the carried state
+    state = st_ref[...]                              # [p, n] f32
+    y += jnp.dot(Cm.astype(jnp.float32) * jnp.exp(cum)[:, None],
+                 state.T, preferred_element_type=jnp.float32)
+
+    # update carried state: decay to end-of-chunk, add chunk summary
+    decay_to_end = jnp.exp(cum[-1] - cum)            # [l]
+    summary = jnp.dot((xbar * decay_to_end[:, None]).T,
+                      Bm.astype(jnp.float32),
+                      preferred_element_type=jnp.float32)   # [p, n]
+    st_ref[...] = state * jnp.exp(cum[-1]) + summary
+
+    y_ref[...] = y.astype(y_ref.dtype)
+
+
+def ssd(x, dt, A, B, C, *, chunk: int = 128, interpret: bool = False):
+    """Contract identical to `ref.ssd_chunked` (returns y and final state).
+
+    x [b,s,h,p], dt [b,s,h] (f32), A [h], B/C [b,s,g,n] with g | h.
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    assert s % chunk == 0
+    nc = s // chunk
+
+    # flatten (batch, head); repeat B/C per head group
+    xt = x.transpose(0, 2, 1, 3).reshape(b * h, s, p)
+    dtt = dt.transpose(0, 2, 1).reshape(b * h, s, 1).astype(jnp.float32)
+    Bh = jnp.repeat(B, rep, axis=2).transpose(0, 2, 1, 3).reshape(b * h, s, n)
+    Ch = jnp.repeat(C, rep, axis=2).transpose(0, 2, 1, 3).reshape(b * h, s, n)
+    Ah = jnp.tile(A.astype(jnp.float32), (b,)).reshape(b * h, 1)
+
+    kernel = functools.partial(_kernel, chunk=chunk, n_chunks=nc)
+    y, st = pl.pallas_call(
+        kernel,
+        grid=(b * h, nc),
+        in_specs=[
+            pl.BlockSpec((None, chunk, p), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((None, chunk, 1), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((None, 1), lambda i, c: (i, 0)),
+            pl.BlockSpec((None, chunk, n), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((None, chunk, n), lambda i, c: (i, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, chunk, p), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((None, p, n), lambda i, c: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b * h, s, p), x.dtype),
+            jax.ShapeDtypeStruct((b * h, p, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xt, dtt, Ah, Bh, Ch)
+
+    y = y.reshape(b, h, s, p).transpose(0, 2, 1, 3)
+    return y, st.reshape(b, h, p, n)

@@ -1,0 +1,284 @@
+"""Logical-axis -> mesh-axis rules, and spec construction for the dry-run.
+
+Parameters carry logical axis names (see models/params.py); activations are
+annotated with `layers.shd`.  The rules here map those names onto the
+production mesh.  Two profiles:
+
+- "tp":       tensor parallel over "model" only; params replicated over the
+              data axes.  Right for <=30B-scale configs (params already /16).
+- "tp_fsdp":  additionally shards the params' "embed" dim over
+              ("pod","data") — ZeRO-3-style; required for jamba-398B.
+
+KV-cache and batch shardings are shape-dependent (decode batch may be 1, in
+which case the cache *sequence* dim takes the data axes instead).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import LONG_CONTEXT_WINDOW, ModelConfig, ShapeConfig
+from ..models import params as params_lib
+
+
+DATA_AXES = ("pod", "data")    # filtered to existing mesh axes automatically
+
+
+def param_rules(profile: str) -> dict:
+    rules = {
+        "vocab": "model",
+        "mlp": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "experts": "model",
+        "kv_lora": "model",
+        "head_dim": None,
+        "embed": None,
+        "layers": None,
+    }
+    if profile == "tp_fsdp":
+        rules["embed"] = DATA_AXES
+        # NOTE (§Perf jamba log, hypothesis refuted): routing experts onto
+        # the data axes ("expert parallelism without parameter gathers")
+        # made the partitioner un-shard the token batch instead — 2.3x the
+        # memory and 2.4x the flops.  Expert weights keep experts->model +
+        # embed->data (256-way sharded, gathered per group like the rest of
+        # the FSDP params).
+    return rules
+
+
+def activation_rules(shape: ShapeConfig | None = None) -> dict:
+    # Megatron-style sequence parallelism on the residual stream for
+    # full-sequence passes; decode steps have seq=1 (annotation drops).
+    sp = "model" if (shape is None or shape.kind != "decode") else None
+    return {
+        "batch": DATA_AXES,
+        "seq": None,
+        "seq_res": sp,
+        "embed": None,
+        "mlp": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "experts": "model",
+        "vocab": "model",
+    }
+
+
+def profile_for(cfg: ModelConfig) -> str:
+    """tp_fsdp for jamba-398B (cannot replicate) and for wide-expert MoE
+    (§Perf pair 2: sharding 30B of replicated expert state over the data
+    axes flips fits-HBM from 39.5 GiB to 11.8 GiB at ~equal collective
+    traffic); plain TP elsewhere."""
+    if cfg.n_layers * cfg.d_model >= 72 * 8192:
+        return "tp_fsdp"
+    if cfg.moe is not None and cfg.moe.n_experts >= 64:
+        return "tp_fsdp"
+    return "tp"
+
+
+def _filter_axes(mesh, axes, dim):
+    """Keep only mesh axes that exist and whose product divides dim."""
+    if axes is None:
+        return None
+    axes = (axes,) if isinstance(axes, str) else tuple(axes)
+    keep = []
+    prod = 1
+    for a in axes:
+        if a in mesh.axis_names and dim % (prod * mesh.shape[a]) == 0:
+            keep.append(a)
+            prod *= mesh.shape[a]
+    if not keep:
+        return None
+    return keep[0] if len(keep) == 1 else tuple(keep)
+
+
+def ns(mesh, shape, *axes):
+    """NamedSharding over `shape` with per-dim mesh-axis requests, dropping
+    non-dividing or missing axes (and axes already used by earlier dims)."""
+    used: set = set()
+    out = []
+    for dim, ax in zip(shape, axes):
+        ax = _filter_axes(mesh, ax, dim)
+        if ax is None:
+            out.append(None)
+            continue
+        t = (ax,) if isinstance(ax, str) else tuple(ax)
+        t = tuple(a for a in t if a not in used)
+        used.update(t)
+        out.append(t[0] if len(t) == 1 else (t if t else None))
+    return NamedSharding(mesh, P(*out))
+
+
+# --------------------------------------------------------------------------
+# batch input specs per shape
+# --------------------------------------------------------------------------
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                accum: int = 1) -> dict:
+    """ShapeDtypeStructs (with shardings) for the step's batch inputs.
+
+    ``accum > 1`` prepends a microbatch axis (gradient accumulation — the
+    paper's update coalescing); the global batch is split across it.
+    """
+    B = shape.global_batch
+    S = 1 if shape.kind == "decode" else shape.seq_len
+    assert B % accum == 0, (B, accum)
+    lead = (accum,) if accum > 1 else ()
+    lax_ = (None,) if accum > 1 else ()
+
+    def mk(shape_, dtype, *axes):
+        return jax.ShapeDtypeStruct(
+            lead + shape_, dtype, sharding=ns(mesh, lead + shape_,
+                                              *(lax_ + axes)))
+
+    tok = mk((B // accum, S), jnp.int32, DATA_AXES, None)
+    out = {"tokens": tok}
+    if shape.kind == "train":
+        out["labels"] = tok
+    if cfg.family == "audio" and shape.kind != "decode":
+        out["frames"] = mk((B // accum, cfg.encoder.n_ctx, cfg.d_model),
+                           cfg.cdtype, DATA_AXES, None, None)
+    if cfg.family == "vlm" and shape.kind != "decode":
+        out["image_embeds"] = mk(
+            (B // accum, cfg.vision.n_image_tokens, cfg.d_model),
+            cfg.cdtype, DATA_AXES, None, None)
+    return out
+
+
+# --------------------------------------------------------------------------
+# cache specs (decode/prefill)
+# --------------------------------------------------------------------------
+_CACHE_AXIS_PATTERNS = {
+    # leaf name -> axes request per trailing dim (after the [layers, batch])
+    "k": (None, "kv_heads", None),
+    "v": (None, "kv_heads", None),
+    "ckv": (None, "kv_lora"),
+    "krope": (None, None),
+    "conv": (None, "mlp"),
+    "ssm": ("heads", None, None),
+    "cross_k": (None, "kv_heads", None),
+    "cross_v": (None, "kv_heads", None),
+    "pos": (),
+}
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                batch_shardable: bool) -> Any:
+    """Shape/sharding specs for the stacked KV/SSM caches.
+
+    When the batch does not divide the data axes (long_500k, B=1), the cache
+    *sequence* dim (dim 2 of k/v/ckv/krope leaves) takes the data axes.
+    """
+    from ..models.registry import build_model
+    model = build_model(cfg)
+    shapes = jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len,
+                                 cfg.cdtype))
+
+    rules = param_rules("tp")  # head/group axes onto "model"
+    batch_ax = DATA_AXES if batch_shardable else None
+    seq_ax = None if batch_shardable else DATA_AXES
+
+    model_size = mesh.shape["model"]
+
+    def assign(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        pat = _CACHE_AXIS_PATTERNS.get(name)
+        if pat is None:
+            return jax.ShapeDtypeStruct(
+                leaf.shape, leaf.dtype,
+                sharding=NamedSharding(mesh, P(*([None] * len(leaf.shape)))))
+        # leaf dims: [<stack dims...>, batch, <pattern dims>]; hybrid caches
+        # have two stack dims (outer group, inner sublayer).
+        lead = leaf.ndim - len(pat) - 1
+        axes = [None] * lead + [batch_ax]
+        for i, a in enumerate(pat):
+            if i == 0 and name in ("k", "v", "ckv", "krope"):
+                # cache sequence dim: takes the data axes when the batch is
+                # not shardable; additionally takes "model" when the head /
+                # lora dim cannot absorb it (e.g. kv_heads=8 on a 16-way
+                # model axis) — the seq dim always divides.
+                head_dim_size = (leaf.shape[lead + 2]
+                                 if len(pat) >= 2 else 0)
+                head_rule = rules.get(pat[1]) if len(pat) >= 2 and \
+                    isinstance(pat[1], str) else None
+                head_ok = (head_rule == "model"
+                           and head_dim_size % model_size == 0)
+                if seq_ax is not None:
+                    req = (seq_ax if head_ok
+                           else tuple(seq_ax) + ("model",))
+                else:
+                    req = None if head_ok else "model"
+                axes.append(req)
+            else:
+                axes.append(rules.get(a) if isinstance(a, str) else a)
+        return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype,
+                                    sharding=ns(mesh, leaf.shape, *axes))
+
+    return jax.tree_util.tree_map_with_path(assign, shapes)
+
+
+# --------------------------------------------------------------------------
+# params / train-state specs
+# --------------------------------------------------------------------------
+def param_shardings(model_specs, mesh, profile: str):
+    return params_lib.shardings(model_specs, mesh, param_rules(profile))
+
+
+def param_structs(model_specs, mesh, profile: str):
+    return params_lib.shape_structs(model_specs, mesh, param_rules(profile))
+
+
+def state_structs(model, opt, sync, mesh, profile: str):
+    """ShapeDtypeStruct tree for the full TrainState, sharded."""
+    from ..train.state import init_state
+    shapes = jax.eval_shape(
+        lambda: init_state(model, opt, sync, jax.random.PRNGKey(0)))
+    pshard = param_shardings(model.param_specs, mesh, profile)
+
+    flat_p, pdef = jax.tree_util.tree_flatten(pshard)
+
+    def like_params(tree):
+        """Map a tree with params-shaped subtree onto param shardings."""
+        return jax.tree_util.tree_unflatten(pdef, flat_p)
+
+    repl = NamedSharding(mesh, P())
+
+    def assign_opt(shapes_opt):
+        out = {}
+        for k, v in shapes_opt.items():
+            if k in ("m", "v", "mu"):
+                sh = like_params(v)
+                out[k] = jax.tree.map(
+                    lambda leaf, s: jax.ShapeDtypeStruct(leaf.shape,
+                                                         leaf.dtype,
+                                                         sharding=s), v, sh)
+            else:
+                out[k] = jax.ShapeDtypeStruct(v.shape, v.dtype, sharding=repl)
+        return out
+
+    params_structs = jax.tree.map(
+        lambda leaf, s: jax.ShapeDtypeStruct(leaf.shape, leaf.dtype,
+                                             sharding=s),
+        shapes.params, pshard)
+
+    fifo = shapes.fifo
+    if fifo is not None:
+        buf = jax.tree.map(
+            lambda leaf, s: jax.ShapeDtypeStruct(
+                leaf.shape, leaf.dtype,
+                sharding=NamedSharding(
+                    mesh, P(*((None,) + tuple(s.spec)))) ),
+            fifo["buf"], pshard)
+        fifo = {"buf": buf,
+                "filled": jax.ShapeDtypeStruct((), jnp.int32, sharding=repl)}
+
+    from ..train.state import TrainState
+    return TrainState(
+        params=params_structs,
+        opt_state=assign_opt(shapes.opt_state),
+        fifo=fifo,
+        step=jax.ShapeDtypeStruct((), jnp.int32, sharding=repl))

@@ -1,0 +1,310 @@
+"""Attention variants: GQA (+qk-norm, sliding window), MLA, cross-attention.
+
+Each variant provides ``*_spec`` (ParamSpec tree), a full-sequence forward
+(training/prefill) and a single-token decode path against a KV cache.
+
+Cache layouts
+-------------
+GQA:   {"k": [B, C, Hkv, Dh], "v": [B, C, Hkv, Dh], "pos": [B] int32}
+        where C = min(max_len, window or max_len); ring-buffer writes when a
+        sliding window is configured.
+MLA:   {"ckv": [B, C, R], "krope": [B, C, Dr], "pos": [B]} — the compressed
+        KV latent is cached (the whole point of MLA), decompressed per read.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import AttnConfig, MLAConfig
+from .layers import head_rmsnorm, rope, shd, spec
+
+
+NEG_INF = -1e30
+
+
+# ==========================================================================
+# masks
+# ==========================================================================
+def causal_mask(q_pos, k_pos, window=None):
+    """Boolean [.., Sq, Sk] mask: k visible to q (causal, optional window)."""
+    ok = k_pos[..., None, :] <= q_pos[..., :, None]
+    if window is not None:
+        ok &= k_pos[..., None, :] > (q_pos[..., :, None] - window)
+    return ok
+
+
+def _sdpa(q, k, v, mask, scale):
+    """q [B,Sq,H,Dh], k/v [B,Sk,Hkv,Dh] with GQA head repetition."""
+    B, Sq, H, Dh = q.shape
+    Hkv = k.shape[2]
+    rep = H // Hkv
+    qg = q.reshape(B, Sq, Hkv, rep, Dh)
+    logits = jnp.einsum("bqgrd,bkgd->bgrqk", qg, k).astype(jnp.float32) * scale
+    logits = jnp.where(mask[:, None, None], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bgrqk,bkgd->bqgrd", w, v)
+    return out.reshape(B, Sq, H, Dh)
+
+
+# ==========================================================================
+# GQA attention
+# ==========================================================================
+def gqa_spec(cfg_attn: AttnConfig, d_model: int, dtype=jnp.float32):
+    a = cfg_attn
+    dh = a.head_dim if a.head_dim is not None else d_model // a.n_heads
+    p = {
+        "wq": spec((d_model, a.n_heads, dh), ("embed", "heads", "head_dim"),
+                   dtype=dtype),
+        "wk": spec((d_model, a.n_kv_heads, dh), ("embed", "kv_heads", "head_dim"),
+                   dtype=dtype),
+        "wv": spec((d_model, a.n_kv_heads, dh), ("embed", "kv_heads", "head_dim"),
+                   dtype=dtype),
+        "wo": spec((a.n_heads, dh, d_model), ("heads", "head_dim", "embed"),
+                   dtype=dtype),
+    }
+    if a.qk_norm:
+        p["q_norm"] = spec((dh,), ("head_dim",), init="ones", dtype=dtype)
+        p["k_norm"] = spec((dh,), ("head_dim",), init="ones", dtype=dtype)
+    return p
+
+
+def _project_qkv(p, a: AttnConfig, x, positions):
+    cdt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cdt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(cdt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(cdt))
+    if a.qk_norm:
+        q = head_rmsnorm(p["q_norm"], q)
+        k = head_rmsnorm(p["k_norm"], k)
+    q = rope(q, positions, a.rope_theta)
+    k = rope(k, positions, a.rope_theta)
+    return q, k, v
+
+
+def gqa_forward(p, a: AttnConfig, x, positions=None):
+    """Full-sequence attention, blocked (never materializes S x S logits)."""
+    from ..kernels import ops
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    q, k, v = _project_qkv(p, a, x, positions)
+    q = shd(q, "batch", "seq", "heads", None)
+    k = shd(k, "batch", "seq", "kv_heads", None)
+    dh = q.shape[-1]
+    out = ops.attention(q, k, v, scale=1.0 / np.sqrt(dh),
+                        q_pos=positions, kv_pos=positions,
+                        causal=a.causal, window=a.window)
+    out = shd(out, "batch", "seq", "heads", None)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+
+
+def gqa_init_cache(a: AttnConfig, d_model, batch, max_len, dtype):
+    dh = a.head_dim if a.head_dim is not None else d_model // a.n_heads
+    C = min(max_len, a.window) if a.window else max_len
+    z = jnp.zeros((batch, C, a.n_kv_heads, dh), dtype)
+    return {"k": z, "v": z,
+            "pos": jnp.zeros((batch,), jnp.int32)}
+
+
+def gqa_decode(p, a: AttnConfig, x, cache):
+    """Single-token decode. x: [B,1,d]; returns (out [B,1,d], new cache).
+
+    The cache is a ring buffer of size C (= window when sliding): slot
+    ``pos % C`` is overwritten; visibility is decided by true positions.
+    """
+    B = x.shape[0]
+    pos = cache["pos"]                                     # [B]
+    q, k, v = _project_qkv(p, a, x, pos[:, None])
+    C = cache["k"].shape[1]
+    slot = jnp.mod(pos, C)
+    bidx = jnp.arange(B)
+    knew = cache["k"].at[bidx, slot].set(k[:, 0])
+    vnew = cache["v"].at[bidx, slot].set(v[:, 0])
+    # true position of every cache slot given the ring write pattern
+    slots = jnp.arange(C)[None, :]                          # [1, C]
+    wraps = (pos[:, None] - slots + C) // C                 # writes so far
+    slot_pos = slots + wraps * C - C                        # last write position
+    slot_pos = jnp.where(slot_pos == pos[:, None], pos[:, None], slot_pos)
+    valid = (slot_pos >= 0) & (slot_pos <= pos[:, None])
+    if a.window:
+        valid &= slot_pos > (pos[:, None] - a.window)
+    mask = valid[:, None, :]                                # [B, 1, C]
+    dh = q.shape[-1]
+    out = _sdpa(q, knew, vnew, mask, 1.0 / np.sqrt(dh))
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return out, {"k": knew, "v": vnew, "pos": pos + 1}
+
+
+def gqa_prefill_cache(p, a: AttnConfig, x, positions, cache):
+    """Fill the cache from a full-sequence prefill (no sliding rewrap: the
+    last C positions land in their ring slots)."""
+    B, S, _ = x.shape
+    _, k, v = _project_qkv(p, a, x, positions)
+    C = cache["k"].shape[1]
+    take = min(S, C)
+    ks, vs = k[:, -take:], v[:, -take:]
+    pos_tail = positions[:, -take:]
+    slots = jnp.mod(pos_tail, C)
+    bidx = jnp.arange(B)[:, None]
+    knew = cache["k"].at[bidx, slots].set(ks)
+    vnew = cache["v"].at[bidx, slots].set(vs)
+    return {"k": knew, "v": vnew, "pos": positions[:, -1] + 1}
+
+
+# ==========================================================================
+# MLA (DeepSeek-V2 multi-head latent attention)
+# ==========================================================================
+def mla_spec(a: AttnConfig, d_model: int, dtype=jnp.float32):
+    m: MLAConfig = a.mla
+    H = a.n_heads
+    qd = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "wq": spec((d_model, H, qd), ("embed", "heads", "head_dim"), dtype=dtype),
+        "w_dkv": spec((d_model, m.kv_lora_rank), ("embed", "kv_lora"), dtype=dtype),
+        "w_krope": spec((d_model, m.qk_rope_head_dim), ("embed", None), dtype=dtype),
+        "kv_norm": spec((m.kv_lora_rank,), ("kv_lora",), init="ones", dtype=dtype),
+        "w_uk": spec((m.kv_lora_rank, H, m.qk_nope_head_dim),
+                     ("kv_lora", "heads", "head_dim"), dtype=dtype),
+        "w_uv": spec((m.kv_lora_rank, H, m.v_head_dim),
+                     ("kv_lora", "heads", "head_dim"), dtype=dtype),
+        "wo": spec((H, m.v_head_dim, d_model), ("heads", "head_dim", "embed"),
+                   dtype=dtype),
+    }
+
+
+def _mla_project(p, a: AttnConfig, x, positions):
+    m = a.mla
+    cdt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cdt))
+    q_nope, q_rope = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+    q_rope = rope(q_rope, positions, a.rope_theta)
+    ckv = x @ p["w_dkv"].astype(cdt)                        # [B,S,R]
+    ckv = head_rmsnorm(p["kv_norm"], ckv)
+    krope = x @ p["w_krope"].astype(cdt)                    # [B,S,Dr] (shared)
+    krope = rope(krope[..., None, :], positions, a.rope_theta)[..., 0, :]
+    return q_nope, q_rope, ckv, krope
+
+
+def _mla_attend(p, a: AttnConfig, q_nope, q_rope, ckv, krope, mask):
+    """Latent-space attention: scores via decompressed keys, values from the
+    latent, computed without materializing per-head K/V of full length."""
+    m = a.mla
+    cdt = q_nope.dtype
+    # absorb W_uk into the query: q_lat [B,S,H,R]
+    q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, p["w_uk"].astype(cdt))
+    scores = jnp.einsum("bshr,btr->bhst", q_lat, ckv)
+    scores += jnp.einsum("bshk,btk->bhst", q_rope, krope)
+    scale = 1.0 / np.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    logits = scores.astype(jnp.float32) * scale
+    logits = jnp.where(mask[:, None], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1).astype(cdt)
+    ctx = jnp.einsum("bhst,btr->bshr", w, ckv)              # latent context
+    out = jnp.einsum("bshr,rhk->bshk", ctx, p["w_uv"].astype(cdt))
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cdt))
+
+
+def mla_forward(p, a: AttnConfig, x, positions=None):
+    """Blocked latent attention: MLA is exactly MQA with shared "key" =
+    [c_kv ; k_rope] and "value" = c_kv, queries [W_uk-absorbed q_nope ;
+    q_rope] — so we reuse the blocked attention primitive (Dk != Dv)."""
+    from ..kernels import ops
+    m = a.mla
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    q_nope, q_rope, ckv, krope = _mla_project(p, a, x, positions)
+    cdt = q_nope.dtype
+    q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, p["w_uk"].astype(cdt))
+    q_cat = jnp.concatenate([q_lat, q_rope], axis=-1)       # [B,S,H,R+Dr]
+    k_cat = jnp.concatenate([ckv, krope], axis=-1)[:, :, None, :]  # MQA
+    v_lat = ckv[:, :, None, :]
+    scale = 1.0 / np.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    ctx = ops.attention(q_cat, k_cat, v_lat, scale=scale,
+                        q_pos=positions, kv_pos=positions,
+                        causal=a.causal, window=a.window)   # [B,S,H,R]
+    out = jnp.einsum("bshr,rhk->bshk", ctx, p["w_uv"].astype(cdt))
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cdt))
+
+
+def mla_init_cache(a: AttnConfig, batch, max_len, dtype):
+    m = a.mla
+    C = min(max_len, a.window) if a.window else max_len
+    return {
+        "ckv": jnp.zeros((batch, C, m.kv_lora_rank), dtype),
+        "krope": jnp.zeros((batch, C, m.qk_rope_head_dim), dtype),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def mla_decode(p, a: AttnConfig, x, cache):
+    B = x.shape[0]
+    pos = cache["pos"]
+    q_nope, q_rope, ckv, krope = _mla_project(p, a, x, pos[:, None])
+    C = cache["ckv"].shape[1]
+    slot = jnp.mod(pos, C)
+    bidx = jnp.arange(B)
+    ckv_new = cache["ckv"].at[bidx, slot].set(ckv[:, 0])
+    krope_new = cache["krope"].at[bidx, slot].set(krope[:, 0])
+    slots = jnp.arange(C)[None, :]
+    wraps = (pos[:, None] - slots + C) // C
+    slot_pos = slots + wraps * C - C
+    slot_pos = jnp.where(slot_pos == pos[:, None], pos[:, None], slot_pos)
+    valid = (slot_pos >= 0) & (slot_pos <= pos[:, None])
+    if a.window:
+        valid &= slot_pos > (pos[:, None] - a.window)
+    out = _mla_attend(p, a, q_nope, q_rope, ckv_new, krope_new,
+                      valid[:, None, :])
+    return out, {"ckv": ckv_new, "krope": krope_new, "pos": pos + 1}
+
+
+def mla_prefill_cache(p, a: AttnConfig, x, positions, cache):
+    B, S, _ = x.shape
+    _, _, ckv, krope = _mla_project(p, a, x, positions)
+    C = cache["ckv"].shape[1]
+    take = min(S, C)
+    slots = jnp.mod(positions[:, -take:], C)
+    bidx = jnp.arange(B)[:, None]
+    return {
+        "ckv": cache["ckv"].at[bidx, slots].set(ckv[:, -take:]),
+        "krope": cache["krope"].at[bidx, slots].set(krope[:, -take:]),
+        "pos": positions[:, -1] + 1,
+    }
+
+
+# ==========================================================================
+# cross-attention (VLM image layers, enc-dec)
+# ==========================================================================
+def cross_attn_spec(a: AttnConfig, d_model: int, dtype=jnp.float32):
+    dh = a.head_dim if a.head_dim is not None else d_model // a.n_heads
+    return {
+        "wq": spec((d_model, a.n_heads, dh), ("embed", "heads", "head_dim"),
+                   dtype=dtype),
+        "wk": spec((d_model, a.n_kv_heads, dh), ("embed", "kv_heads", "head_dim"),
+                   dtype=dtype),
+        "wv": spec((d_model, a.n_kv_heads, dh), ("embed", "kv_heads", "head_dim"),
+                   dtype=dtype),
+        "wo": spec((a.n_heads, dh, d_model), ("heads", "head_dim", "embed"),
+                   dtype=dtype),
+    }
+
+
+def cross_attn_kv(p, mem):
+    """Precompute cross-attention K/V from encoder/vision memory [B,M,d]."""
+    cdt = mem.dtype
+    k = jnp.einsum("bmd,dhk->bmhk", mem, p["wk"].astype(cdt))
+    v = jnp.einsum("bmd,dhk->bmhk", mem, p["wv"].astype(cdt))
+    return k, v
+
+
+def cross_attn(p, a: AttnConfig, x, mem_kv):
+    """x [B,S,d] attends to precomputed memory K/V (no positional enc)."""
+    k, v = mem_kv
+    cdt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cdt))
+    B, S = q.shape[:2]
+    M = k.shape[1]
+    mask = jnp.ones((B, S, M), bool)
+    out = _sdpa(q, k, v, mask, 1.0 / np.sqrt(q.shape[-1]))
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cdt))

@@ -1,0 +1,132 @@
+"""Whisper-style encoder-decoder backbone.
+
+The audio frontend (mel + conv downsampling) is stubbed per the assignment
+carve-out: ``frames`` inputs are precomputed frame embeddings
+[B, n_ctx, d_model].  We implement the transformer: a non-causal encoder and
+a causal decoder with per-layer cross-attention, plus the decode path with
+self-attn KV cache + precomputed cross KV cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import attention as attn_mod
+from .layers import mlp, mlp_spec, rmsnorm, rmsnorm_spec, shd, spec
+from .transformer import _attn_cache, _attn_decode, _attn_prefill, _attn_fwd, stack_specs
+
+
+def encoder_layer_spec(cfg: ModelConfig, dtype):
+    return {
+        "ln1": rmsnorm_spec(cfg.d_model, dtype),
+        "attn": attn_mod.gqa_spec(cfg.attn, cfg.d_model, dtype),
+        "ln2": rmsnorm_spec(cfg.d_model, dtype),
+        "ffn": mlp_spec(cfg.d_model, cfg.d_ff, cfg.act, dtype),
+    }
+
+
+def decoder_layer_spec(cfg: ModelConfig, dtype):
+    s = encoder_layer_spec(cfg, dtype)
+    s["lnx"] = rmsnorm_spec(cfg.d_model, dtype)
+    s["xattn"] = attn_mod.cross_attn_spec(cfg.attn, cfg.d_model, dtype)
+    return s
+
+
+def encdec_specs(cfg: ModelConfig, dtype):
+    enc_layers = cfg.encoder.n_layers
+    return {
+        "enc_pos": spec((cfg.encoder.n_ctx, cfg.d_model), (None, "embed"),
+                        init="embed", scale=0.02, dtype=dtype),
+        "encoder": stack_specs(enc_layers, encoder_layer_spec(cfg, dtype)),
+        "enc_norm": rmsnorm_spec(cfg.d_model, dtype),
+        "decoder": stack_specs(cfg.n_layers, decoder_layer_spec(cfg, dtype)),
+    }
+
+
+def _nc_attn_cfg(cfg: ModelConfig):
+    import dataclasses
+    return dataclasses.replace(cfg.attn, causal=False, window=None)
+
+
+def encode(p, cfg: ModelConfig, frames):
+    """frames [B, n_ctx, d_model] (stub frontend output) -> memory."""
+    x = frames + p["enc_pos"].astype(frames.dtype)[None]
+    a_nc = _nc_attn_cfg(cfg)
+
+    def layer(pl, x):
+        x = shd(x, "batch", "seq_res", "embed")
+        h = attn_mod.gqa_forward(pl["attn"], a_nc,
+                                 rmsnorm(pl["ln1"], x, cfg.norm_eps))
+        x = x + h
+        x = x + mlp(pl["ffn"], rmsnorm(pl["ln2"], x, cfg.norm_eps), cfg.act)
+        return x, 0.0
+
+    from .transformer import _scan_blocks
+    x, _ = _scan_blocks(layer, p["encoder"], x, 0.0, cfg.remat)
+    return rmsnorm(p["enc_norm"], x, cfg.norm_eps)
+
+
+def decoder_forward(p, cfg: ModelConfig, x, positions, memory):
+    """Causal decoder over token embeddings x, cross-attending to memory."""
+    def layer(pl, x):
+        x = shd(x, "batch", "seq_res", "embed")
+        h = _attn_fwd(pl["attn"], cfg,
+                      rmsnorm(pl["ln1"], x, cfg.norm_eps), positions)
+        x = x + h
+        mem_kv = attn_mod.cross_attn_kv(pl["xattn"], memory)
+        h = attn_mod.cross_attn(pl["xattn"], cfg.attn,
+                                rmsnorm(pl["lnx"], x, cfg.norm_eps), mem_kv)
+        x = x + h
+        x = x + mlp(pl["ffn"], rmsnorm(pl["ln2"], x, cfg.norm_eps), cfg.act)
+        return x, 0.0
+
+    from .transformer import _scan_blocks
+    x, _ = _scan_blocks(layer, p["decoder"], x, 0.0, cfg.remat)
+    return x
+
+
+def decoder_cache(cfg: ModelConfig, batch, max_len, dtype):
+    self_c = _attn_cache(cfg, batch, max_len, dtype)
+    dh = cfg.head_dim
+    memkv = jnp.zeros((batch, cfg.encoder.n_ctx, cfg.attn.n_kv_heads, dh),
+                      dtype)
+    one = {"self": self_c, "cross_k": memkv, "cross_v": memkv}
+    return jax.tree.map(
+        lambda v: jnp.broadcast_to(v, (cfg.n_layers,) + v.shape).copy(), one)
+
+
+def decoder_decode_step(p, cfg: ModelConfig, x, caches):
+    """One decoder token against stacked caches (cross KV precomputed)."""
+    def layer(x, inp):
+        pl, cl = inp
+        h, c_new = _attn_decode(pl["attn"], cfg,
+                                rmsnorm(pl["ln1"], x, cfg.norm_eps),
+                                cl["self"])
+        x = x + h
+        h = attn_mod.cross_attn(pl["xattn"], cfg.attn,
+                                rmsnorm(pl["lnx"], x, cfg.norm_eps),
+                                (cl["cross_k"], cl["cross_v"]))
+        x = x + h
+        x = x + mlp(pl["ffn"], rmsnorm(pl["ln2"], x, cfg.norm_eps), cfg.act)
+        return x, dict(cl, self=c_new)
+
+    return jax.lax.scan(layer, x, (p["decoder"], caches))
+
+
+def decoder_prefill(p, cfg: ModelConfig, x, positions, caches, memory):
+    """Prefill decoder self caches and compute/populate cross KV."""
+    def layer(x, inp):
+        pl, cl = inp
+        xn = rmsnorm(pl["ln1"], x, cfg.norm_eps)
+        c_new = _attn_prefill(pl["attn"], cfg, xn, positions, cl["self"])
+        x = x + _attn_fwd(pl["attn"], cfg, xn, positions)
+        mem_k, mem_v = attn_mod.cross_attn_kv(pl["xattn"], memory)
+        h = attn_mod.cross_attn(pl["xattn"], cfg.attn,
+                                rmsnorm(pl["lnx"], x, cfg.norm_eps),
+                                (mem_k, mem_v))
+        x = x + h
+        x = x + mlp(pl["ffn"], rmsnorm(pl["ln2"], x, cfg.norm_eps), cfg.act)
+        return x, dict(cl, self=c_new, cross_k=mem_k, cross_v=mem_v)
+
+    return jax.lax.scan(layer, x, (p["decoder"], caches))

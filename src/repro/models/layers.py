@@ -1,0 +1,138 @@
+"""Shared neural-net building blocks (pure functions + ParamSpec builders)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .params import spec
+
+
+# --------------------------------------------------------------------------
+# activation sharding hook: launch/sharding.py installs the active rules;
+# models annotate activations with logical axis names.
+# --------------------------------------------------------------------------
+_ACTIVATION_RULES: list = []
+
+
+def push_rules(mesh, rules):
+    _ACTIVATION_RULES.append((mesh, rules))
+
+
+def pop_rules():
+    _ACTIVATION_RULES.pop()
+
+
+def shd(x, *axes):
+    """Apply a sharding constraint by logical axis names (no-op outside a
+    launch context)."""
+    if not _ACTIVATION_RULES:
+        return x
+    mesh, rules = _ACTIVATION_RULES[-1]
+    from jax.sharding import NamedSharding, PartitionSpec
+    used: set = set()
+    names = []
+    for i, a in enumerate(axes):
+        assign = rules.get(a) if a is not None else None
+        if assign is None:
+            names.append(None)
+            continue
+        maxes = (assign,) if isinstance(assign, str) else tuple(assign)
+        maxes = tuple(m for m in maxes if m in mesh.axis_names and m not in used)
+        total = 1
+        for m in maxes:
+            total *= mesh.shape[m]
+        if not maxes or x.shape[i] % total != 0:
+            names.append(None)
+            continue
+        used.update(maxes)
+        names.append(maxes if len(maxes) > 1 else maxes[0])
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, PartitionSpec(*names)))
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+def rmsnorm_spec(d, dtype=jnp.float32):
+    return {"scale": spec((d,), ("embed",), init="ones", dtype=dtype)}
+
+
+def rmsnorm(p, x, eps=1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+def head_rmsnorm(scale, x, eps=1e-5):
+    """qwen3-style per-head q/k norm: x [..., H, Dh], scale [Dh]."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(dt)
+
+
+# --------------------------------------------------------------------------
+# rotary embeddings
+# --------------------------------------------------------------------------
+def rope(x, positions, theta=10000.0):
+    """Apply rotary embedding. x: [..., S, H, Dh], positions: [..., S]."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freq  # [..., S, half]
+    cos = jnp.cos(ang)[..., :, None, :]                       # [..., S, 1, half]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# MLP
+# --------------------------------------------------------------------------
+def mlp_spec(d, ff, act="swiglu", dtype=jnp.float32):
+    if act == "swiglu":
+        return {
+            "wi_gate": spec((d, ff), ("embed", "mlp"), dtype=dtype),
+            "wi_up": spec((d, ff), ("embed", "mlp"), dtype=dtype),
+            "wo": spec((ff, d), ("mlp", "embed"), dtype=dtype),
+        }
+    return {
+        "wi": spec((d, ff), ("embed", "mlp"), dtype=dtype),
+        "wo": spec((ff, d), ("mlp", "embed"), dtype=dtype),
+    }
+
+
+def mlp(p, x, act="swiglu"):
+    cdt = x.dtype
+    if act == "swiglu":
+        g = x @ p["wi_gate"].astype(cdt)
+        u = x @ p["wi_up"].astype(cdt)
+        h = jax.nn.silu(g) * u
+    else:
+        h = jax.nn.gelu(x @ p["wi"].astype(cdt))
+    h = shd(h, "batch", "seq", "mlp")
+    return h @ p["wo"].astype(cdt)
+
+
+# --------------------------------------------------------------------------
+# embeddings / unembedding
+# --------------------------------------------------------------------------
+def embed_spec(vocab, d, dtype=jnp.float32):
+    return {"embedding": spec((vocab, d), ("vocab", "embed"),
+                              init="embed", scale=1.0, dtype=dtype)}
+
+
+def embed(p, tokens, cdtype):
+    return p["embedding"].astype(cdtype)[tokens]
+
+
+def unembed(p, x):
+    return x @ p["embedding"].astype(x.dtype).T
+
+
+def linear_spec(d_in, d_out, axes=("embed", None), dtype=jnp.float32,
+                init="normal", scale=None):
+    return spec((d_in, d_out), axes, init=init, scale=scale, dtype=dtype)

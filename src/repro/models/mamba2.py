@@ -1,0 +1,139 @@
+"""Mamba-2 block (SSD — state-space duality form, arXiv:2405.21060).
+
+Forward path: in_proj -> short causal conv (x, B, C streams) -> SSD scan
+(chunked dual form; Pallas kernel on TPU) -> gated RMSNorm -> out_proj.
+
+Decode path: single-token recurrence with carried (conv window, SSM state).
+
+Cache layout: {"conv": [B, W-1, d_conv], "ssm": [B, H, P, N], "pos": [B]}.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import MambaConfig
+from .layers import rmsnorm, shd, spec
+
+
+def dims(cfg: MambaConfig, d_model: int):
+    d_inner = cfg.expand * d_model
+    n_heads = d_inner // cfg.headdim
+    n_groups = max(1, n_heads // 8)  # B/C groups (tensor-parallel friendly)
+    d_conv = d_inner + 2 * n_groups * cfg.d_state
+    return d_inner, n_heads, n_groups, d_conv
+
+
+def mamba_spec(cfg: MambaConfig, d_model: int, dtype=jnp.float32):
+    d_inner, H, G, d_conv = dims(cfg, d_model)
+    return {
+        # projections for [z (gate), x, B, C, dt]
+        "in_proj": spec((d_model, 2 * d_inner + 2 * G * cfg.d_state + H),
+                        ("embed", "mlp"), dtype=dtype),
+        "conv_w": spec((cfg.conv_width, d_conv), (None, "mlp"),
+                       scale=0.3, dtype=dtype),
+        "conv_b": spec((d_conv,), ("mlp",), init="zeros", dtype=dtype),
+        "a_log": spec((H,), ("heads",), init="ones", dtype=jnp.float32),
+        "dt_bias": spec((H,), ("heads",), init="zeros", dtype=jnp.float32),
+        "d_skip": spec((H,), ("heads",), init="ones", dtype=jnp.float32),
+        "norm_scale": spec((d_inner,), ("mlp",), init="ones", dtype=dtype),
+        "out_proj": spec((d_inner, d_model), ("mlp", "embed"), dtype=dtype),
+    }
+
+
+def _split(cfg: MambaConfig, d_model: int, zxbcdt):
+    d_inner, H, G, _ = dims(cfg, d_model)
+    n = cfg.d_state
+    z, xin, Braw, Craw, dt = jnp.split(
+        zxbcdt,
+        [d_inner, 2 * d_inner, 2 * d_inner + G * n, 2 * d_inner + 2 * G * n],
+        axis=-1)
+    return z, xin, Braw, Craw, dt
+
+
+def _gated_norm(p, y, z, eps=1e-5):
+    """Mamba-2's RMSNorm(y * silu(z)) with learned scale."""
+    h = y * jax.nn.silu(z)
+    hf = h.astype(jnp.float32)
+    var = jnp.mean(jnp.square(hf), axis=-1, keepdims=True)
+    out = hf * jax.lax.rsqrt(var + eps) * p["norm_scale"].astype(jnp.float32)
+    return out.astype(y.dtype)
+
+
+def mamba_forward(p, cfg: MambaConfig, d_model: int, x):
+    """x [B, S, d_model] -> [B, S, d_model].  S must divide by cfg.chunk
+    (the stack pads positions; configs guarantee divisibility)."""
+    from ..kernels import ops
+    B, S, _ = x.shape
+    d_inner, H, G, d_conv = dims(cfg, d_model)
+    n = cfg.d_state
+    cdt = x.dtype
+
+    zxbcdt = x @ p["in_proj"].astype(cdt)
+    z, xin, Braw, Craw, dt = _split(cfg, d_model, zxbcdt)
+
+    # short causal conv over the (x, B, C) streams
+    xbc = jnp.concatenate([xin, Braw, Craw], axis=-1)       # [B,S,d_conv]
+    w = p["conv_w"].astype(cdt)                              # [W, d_conv]
+    pad = cfg.conv_width - 1
+    xbc_p = jnp.pad(xbc, ((0, 0), (pad, 0), (0, 0)))
+    conv = sum(xbc_p[:, i:i + S] * w[i] for i in range(cfg.conv_width))
+    conv = jax.nn.silu(conv + p["conv_b"].astype(cdt))
+    xin, Braw, Craw = jnp.split(conv, [d_inner, d_inner + G * n], axis=-1)
+
+    xh = xin.reshape(B, S, H, cfg.headdim)
+    Bm = Braw.reshape(B, S, G, n)
+    Cm = Craw.reshape(B, S, G, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B,S,H]
+    A = -jnp.exp(p["a_log"])                                 # [H], negative
+
+    xh = shd(xh, "batch", "seq", "heads", None)
+    y, _ = ops.ssd(xh, dt, A, Bm, Cm, chunk=cfg.chunk)
+    y = y + p["d_skip"].astype(cdt)[None, None, :, None] * xh
+    y = y.reshape(B, S, d_inner)
+    y = _gated_norm(p, y, z)
+    return y @ p["out_proj"].astype(cdt)
+
+
+def mamba_init_cache(cfg: MambaConfig, d_model: int, batch: int, dtype):
+    d_inner, H, G, d_conv = dims(cfg, d_model)
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, d_conv), dtype),
+        "ssm": jnp.zeros((batch, H, cfg.headdim, cfg.d_state), dtype),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def mamba_decode(p, cfg: MambaConfig, d_model: int, x, cache):
+    """Single-token recurrent step. x [B,1,d_model]."""
+    from ..kernels import ops
+    B = x.shape[0]
+    d_inner, H, G, d_conv = dims(cfg, d_model)
+    n = cfg.d_state
+    cdt = x.dtype
+
+    zxbcdt = (x[:, 0] @ p["in_proj"].astype(cdt))
+    z, xin, Braw, Craw, dt = _split(cfg, d_model, zxbcdt)
+
+    xbc = jnp.concatenate([xin, Braw, Craw], axis=-1)       # [B, d_conv]
+    hist = jnp.concatenate([cache["conv"], xbc[:, None]], axis=1)  # [B,W,d_conv]
+    w = p["conv_w"].astype(cdt)
+    conv = jnp.einsum("bwd,wd->bd", hist, w)
+    conv = jax.nn.silu(conv + p["conv_b"].astype(cdt))
+    xin, Braw, Craw = jnp.split(conv, [d_inner, d_inner + G * n], axis=-1)
+
+    xh = xin.reshape(B, H, cfg.headdim)
+    Bm = Braw.reshape(B, G, n)
+    Cm = Craw.reshape(B, G, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B,H]
+    A = -jnp.exp(p["a_log"])
+
+    y, ssm = ops.ssd_decode(xh, dt, A, Bm, Cm, cache["ssm"])
+    y = y + p["d_skip"].astype(cdt)[None, :, None] * xh
+    y = y.reshape(B, d_inner).astype(cdt)
+    y = _gated_norm(p, y, z)
+    out = (y @ p["out_proj"].astype(cdt))[:, None]
+    new_cache = {"conv": hist[:, 1:].astype(cache["conv"].dtype),
+                 "ssm": ssm.astype(cache["ssm"].dtype),
+                 "pos": cache["pos"] + 1}
+    return out, new_cache

@@ -1,0 +1,206 @@
+"""Parameter-spec trees: one source of truth for init, shapes and sharding.
+
+No flax in this environment, so we roll a minimal functional parameter
+system.  A model is described by a nested dict of `ParamSpec`s; from that
+single tree we derive:
+
+- materialized parameters (`init_params`, per-path PRNG folding),
+- `jax.ShapeDtypeStruct` stand-ins with `NamedSharding` attached
+  (`shape_structs`) for `.lower()`-based dry-runs without allocation,
+- sharding trees (`shardings`) for `jax.jit` in/out specs.
+
+Every spec carries *logical axis names* (e.g. ``("vocab", "embed")``); the
+launcher maps logical names to mesh axes with a rules table
+(`repro.launch.sharding`).  This is the t5x/MaxText idiom, minus the
+dependency.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Axes = tuple  # tuple[str | None, ...]
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    """Declaration of one parameter tensor."""
+
+    shape: tuple
+    axes: Axes                    # logical axis name per dim (None = replicated)
+    init: str = "normal"          # normal | zeros | ones | scaled | embed
+    scale: float | None = None    # stddev override; default fan-in scaled
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(
+                f"shape {self.shape} and axes {self.axes} rank mismatch")
+
+
+def spec(shape, axes, init="normal", scale=None, dtype=jnp.float32) -> ParamSpec:
+    return ParamSpec(tuple(int(s) for s in shape), tuple(axes), init, scale, dtype)
+
+
+def _fan_in(shape) -> int:
+    # last-but-one dim heuristic: weights are [..., in, out]
+    return int(shape[-2]) if len(shape) >= 2 else int(shape[-1])
+
+
+def _init_one(ps: ParamSpec, key) -> jax.Array:
+    if ps.init == "zeros":
+        return jnp.zeros(ps.shape, ps.dtype)
+    if ps.init == "ones":
+        return jnp.ones(ps.shape, ps.dtype)
+    if ps.init == "embed":
+        std = ps.scale if ps.scale is not None else 1.0
+        return (std * jax.random.normal(key, ps.shape)).astype(ps.dtype)
+    # normal / scaled: truncated-normal, fan-in scaled
+    std = ps.scale if ps.scale is not None else 1.0 / np.sqrt(max(1, _fan_in(ps.shape)))
+    return (std * jax.random.truncated_normal(
+        key, -2.0, 2.0, ps.shape)).astype(ps.dtype)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _map_specs(fn: Callable[[str, ParamSpec], Any], tree, prefix=""):
+    if is_spec(tree):
+        return fn(prefix, tree)
+    if isinstance(tree, Mapping):
+        return {k: _map_specs(fn, v, f"{prefix}/{k}") for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        return type(tree)(_map_specs(fn, v, f"{prefix}/{i}")
+                          for i, v in enumerate(tree))
+    raise TypeError(f"unexpected node at {prefix}: {type(tree)}")
+
+
+def init_params(specs, rng) -> Any:
+    """Materialize a spec tree; PRNG folded per path for determinism."""
+    def make(path, ps):
+        key = jax.random.fold_in(rng, zlib_crc(path))
+        return _init_one(ps, key)
+    return _map_specs(make, specs)
+
+
+def zlib_crc(s: str) -> int:
+    import zlib
+    return zlib.crc32(s.encode()) & 0x7FFFFFFF
+
+
+def cast_params(specs, dtype):
+    """Return a spec tree with every float param cast to ``dtype``."""
+    def cast(path, ps):
+        if jnp.issubdtype(ps.dtype, jnp.floating):
+            return dataclasses.replace(ps, dtype=dtype)
+        return ps
+    return _map_specs(cast, specs)
+
+
+def logical_to_sharding(axes: Axes, mesh, rules: Mapping[str, Any]):
+    """Map logical axis names to a NamedSharding via a rules table.
+
+    ``rules[name]`` is a mesh-axis name, a tuple of mesh axes, or None.
+    Mesh axes already consumed by an earlier dim are dropped (a mesh axis may
+    shard only one dim of a given tensor).
+    """
+    from jax.sharding import NamedSharding, PartitionSpec
+    used: set = set()
+    out = []
+    for name in axes:
+        assign = rules.get(name) if name is not None else None
+        if assign is None:
+            out.append(None)
+            continue
+        maxes = (assign,) if isinstance(assign, str) else tuple(assign)
+        maxes = tuple(a for a in maxes
+                      if a in mesh.axis_names and a not in used)
+        # drop axes that do not divide the dim? checked by caller per shape
+        if not maxes:
+            out.append(None)
+        elif len(maxes) == 1:
+            out.append(maxes[0]); used.update(maxes)
+        else:
+            out.append(maxes); used.update(maxes)
+    return NamedSharding(mesh, PartitionSpec(*out))
+
+
+def _divisible(shape, sharding) -> bool:
+    from jax.sharding import PartitionSpec
+    spec_ = sharding.spec
+    mesh = sharding.mesh
+    for dim, names in zip(shape, tuple(spec_) + (None,) * (len(shape) - len(spec_))):
+        if names is None:
+            continue
+        names = (names,) if isinstance(names, str) else names
+        total = 1
+        for n in names:
+            total *= mesh.shape[n]
+        if dim % total != 0:
+            return False
+    return True
+
+
+def shardings(specs, mesh, rules):
+    """NamedSharding tree for a spec tree (replicating non-divisible dims)."""
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    def one(path, ps):
+        sh = logical_to_sharding(ps.axes, mesh, rules)
+        if not _divisible(ps.shape, sh):
+            # drop offending axes one by one (keep what divides)
+            names = []
+            used = set()
+            for dim, ax in zip(ps.shape, sh.spec + (None,) * (len(ps.shape) - len(sh.spec))):
+                if ax is None:
+                    names.append(None); continue
+                axs = (ax,) if isinstance(ax, str) else tuple(ax)
+                keep = []
+                for a in axs:
+                    size = mesh.shape[a]
+                    cur = int(np.prod([mesh.shape[k] for k in keep])) if keep else 1
+                    if dim % (cur * size) == 0 and a not in used:
+                        keep.append(a)
+                used.update(keep)
+                names.append(tuple(keep) if len(keep) > 1 else (keep[0] if keep else None))
+            sh = NamedSharding(mesh, PartitionSpec(*names))
+        return sh
+    return _map_specs(one, specs)
+
+
+def shape_structs(specs, mesh=None, rules=None):
+    """ShapeDtypeStruct tree (with shardings if mesh given) — dry-run inputs."""
+    shard_tree = shardings(specs, mesh, rules) if mesh is not None else None
+
+    def one(path, ps):
+        if shard_tree is None:
+            return jax.ShapeDtypeStruct(ps.shape, ps.dtype)
+        # look up the matching sharding by path
+        return jax.ShapeDtypeStruct(ps.shape, ps.dtype,
+                                    sharding=_lookup(shard_tree, path))
+    def _lookup(tree, path):
+        node = tree
+        for part in path.strip("/").split("/"):
+            if isinstance(node, Mapping):
+                node = node[part]
+            else:
+                node = node[int(part)]
+        return node
+    return _map_specs(one, specs)
+
+
+def param_count(specs) -> int:
+    total = 0
+
+    def count(path, ps):
+        nonlocal total
+        total += int(np.prod(ps.shape))
+        return ps
+    _map_specs(count, specs)
+    return total

@@ -1,0 +1,193 @@
+"""Top-level Model API: specs, forward, prefill, decode for every family.
+
+`build_model(cfg)` returns a `Model` whose methods are pure functions of
+(params, batch) — ready for `jax.jit`/`pjit` with shardings from
+`launch.sharding`.  Batch conventions:
+
+  train/prefill:  {"tokens": [B,S] int32, ("frames"|"image_embeds")...}
+  decode:         {"tokens": [B,1] int32} + cache pytree
+
+Modality stubs (assignment carve-out): whisper takes ``frames``
+[B, enc_ctx, d] and VLMs take ``image_embeds`` [B, n_img, d] — precomputed
+frontend embeddings provided by ``input_specs``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from . import encdec, transformer as tf
+from .layers import embed, embed_spec, rmsnorm, rmsnorm_spec, shd, unembed
+from .params import init_params, param_count, spec
+
+
+@dataclass
+class Model:
+    cfg: ModelConfig
+    param_specs: Any
+    forward: Callable          # (params, batch) -> (logits, aux)
+    init_cache: Callable       # (batch, max_len, dtype) -> cache
+    prefill: Callable          # (params, batch, cache) -> (logits_last, cache)
+    decode_step: Callable      # (params, batch, cache) -> (logits, cache)
+
+    def init(self, rng):
+        return init_params(self.param_specs, rng)
+
+    @property
+    def n_params(self) -> int:
+        return param_count(self.param_specs)
+
+
+def _n_outer(cfg: ModelConfig) -> int:
+    if cfg.family == "hybrid":
+        assert cfg.n_layers % cfg.attn_every == 0
+        return cfg.n_layers // cfg.attn_every
+    if cfg.family == "vlm":
+        assert cfg.n_layers % cfg.vision.cross_attn_every == 0
+        return cfg.n_layers // cfg.vision.cross_attn_every
+    return cfg.n_layers
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    dtype = cfg.pdtype
+    n_outer = _n_outer(cfg)
+
+    # ---------------- parameter specs ------------------------------------
+    if cfg.family == "audio":
+        body = encdec.encdec_specs(cfg, dtype)
+    elif cfg.family == "hybrid":
+        body = {"blocks": tf.stack_specs(n_outer, tf.hybrid_group_spec(cfg, dtype))}
+    elif cfg.family == "vlm":
+        body = {"blocks": tf.stack_specs(n_outer, tf.vlm_group_spec(cfg, dtype))}
+    elif cfg.family == "ssm":
+        body = {"blocks": tf.stack_specs(n_outer, tf.mamba_block_spec(cfg, dtype))}
+    else:  # dense | moe
+        body = {"blocks": tf.stack_specs(n_outer, tf.block_spec(cfg, dtype))}
+
+    specs = {
+        "embed": embed_spec(cfg.vocab_size, cfg.d_model, dtype),
+        **body,
+        "final_norm": rmsnorm_spec(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = spec((cfg.d_model, cfg.vocab_size),
+                                ("embed", "vocab"), dtype=dtype)
+
+    def logits_of(params, x):
+        x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        x = shd(x, "batch", "seq", "embed")
+        if cfg.tie_embeddings:
+            out = unembed(params["embed"], x)
+        else:
+            out = x @ params["lm_head"].astype(x.dtype)
+        return shd(out, "batch", "seq", "vocab")
+
+    def embed_tokens(params, tokens):
+        x = embed(params["embed"], tokens, cfg.cdtype)
+        return shd(x, "batch", "seq", "embed")
+
+    # ---------------- forward (train / full-seq) --------------------------
+    def forward(params, batch):
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        x = embed_tokens(params, tokens)
+
+        if cfg.family == "audio":
+            memory = encdec.encode(params, cfg, batch["frames"].astype(cfg.cdtype))
+            x = encdec.decoder_forward(params, cfg, x, positions, memory)
+            aux = 0.0
+        elif cfg.family == "hybrid":
+            fn = lambda p, x: tf.hybrid_group_fwd(p, cfg, x, positions)
+            x, aux = tf._scan_blocks(fn, params["blocks"], x, 0.0, cfg.remat,
+                                     cfg.scan_layers)
+        elif cfg.family == "vlm":
+            mem = batch["image_embeds"].astype(cfg.cdtype)
+            fn = lambda p, x: tf.vlm_group_fwd(p, cfg, x, positions, mem)
+            x, aux = tf._scan_blocks(fn, params["blocks"], x, 0.0, cfg.remat,
+                                     cfg.scan_layers)
+        elif cfg.family == "ssm":
+            fn = lambda p, x: tf.mamba_block_fwd(p, cfg, x)
+            x, aux = tf._scan_blocks(fn, params["blocks"], x, 0.0, cfg.remat,
+                                     cfg.scan_layers)
+        else:
+            fn = lambda p, x: tf.block_fwd(p, cfg, x, positions)
+            x, aux = tf._scan_blocks(fn, params["blocks"], x, 0.0, cfg.remat,
+                                     cfg.scan_layers)
+        return logits_of(params, x), aux
+
+    # ---------------- caches ----------------------------------------------
+    def init_cache(batch, max_len, dtype_=None):
+        dt = dtype_ or cfg.cdtype
+        if cfg.family == "audio":
+            return encdec.decoder_cache(cfg, batch, max_len, dt)
+        if cfg.family == "hybrid":
+            one = tf.hybrid_group_cache(cfg, batch, max_len, dt)
+        elif cfg.family == "vlm":
+            one = tf.vlm_group_cache(cfg, batch, max_len, dt)
+        elif cfg.family == "ssm":
+            from . import mamba2
+            one = mamba2.mamba_init_cache(cfg.mamba, cfg.d_model, batch, dt)
+        else:
+            one = tf._attn_cache(cfg, batch, max_len, dt)
+        return jax.tree.map(
+            lambda v: jnp.broadcast_to(v, (n_outer,) + v.shape).copy(), one)
+
+    # ---------------- decode step -----------------------------------------
+    def decode_step(params, batch, cache):
+        tokens = batch["tokens"]                      # [B, 1]
+        x = embed_tokens(params, tokens)
+        if cfg.family == "audio":
+            x, cache = encdec.decoder_decode_step(params, cfg, x, cache)
+        else:
+            if cfg.family == "hybrid":
+                fn = lambda p, x, c: tf.hybrid_group_decode(p, cfg, x, c)
+            elif cfg.family == "vlm":
+                fn = lambda p, x, c: tf.vlm_group_decode(p, cfg, x, c)
+            elif cfg.family == "ssm":
+                fn = lambda p, x, c: tf.mamba_block_decode(p, cfg, x, c)
+            else:
+                fn = lambda p, x, c: tf.block_decode(p, cfg, x, c)
+            x, cache = tf._scan_blocks_cache(fn, params["blocks"], cache, x)
+        return logits_of(params, x), cache
+
+    # ---------------- prefill ----------------------------------------------
+    def prefill(params, batch, cache):
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        x = embed_tokens(params, tokens)
+        if cfg.family == "audio":
+            memory = encdec.encode(params, cfg, batch["frames"].astype(cfg.cdtype))
+            x, cache = encdec.decoder_prefill(params, cfg, x, positions,
+                                              cache, memory)
+        else:
+            if cfg.family == "hybrid":
+                fn = lambda p, x, c: tf.hybrid_group_prefill(p, cfg, x,
+                                                             positions, c)
+            elif cfg.family == "vlm":
+                mem = batch["image_embeds"].astype(cfg.cdtype)
+                fn = lambda p, x, c: tf.vlm_group_prefill(p, cfg, x, positions,
+                                                          c, mem)
+            elif cfg.family == "ssm":
+                def fn(p, x, c):
+                    xn = rmsnorm(p["ln"], x, cfg.norm_eps)
+                    h, st = tf._mamba_forward_with_state(p["mixer"], cfg, xn)
+                    conv = tf._mamba_conv_tail(p["mixer"], cfg, xn, c["conv"])
+                    return x + h, {"conv": conv, "ssm": st,
+                                   "pos": positions[:, -1] + 1}
+            else:
+                fn = lambda p, x, c: tf.block_prefill(p, cfg, x, positions, c)
+            x, cache = tf._scan_blocks_cache(fn, params["blocks"], cache, x)
+        logits = logits_of(params, x[:, -1:])
+        return logits, cache
+
+
+    return Model(cfg=cfg, param_specs=specs, forward=forward,
+                 init_cache=init_cache, prefill=prefill,
+                 decode_step=decode_step)

@@ -1,0 +1,448 @@
+"""Decoder stacks for all assigned families (dense / moe / ssm / hybrid /
+vlm), built from stacked ParamSpec trees and executed with
+``lax.scan``-over-layers (+ optional remat) so that compile time and HBM
+stay bounded even for 72-layer × 512-device dry-runs.
+
+Layer stacking: per-layer specs get a leading "layers" axis; hybrid models
+scan over *groups* (e.g. Jamba's period of 7 mamba + 1 attention sublayer)
+so the scanned body stays homogeneous.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import attention as attn_mod
+from . import mamba2, moe as moe_mod
+from .layers import embed, embed_spec, mlp, mlp_spec, rmsnorm, rmsnorm_spec, shd
+from .params import ParamSpec, _map_specs, spec
+
+
+# --------------------------------------------------------------------------
+# spec stacking
+# --------------------------------------------------------------------------
+def stack_specs(n: int, tree):
+    """Prepend a ``layers`` axis of size n to every spec in the tree."""
+    def one(path, ps: ParamSpec):
+        return dataclasses.replace(
+            ps, shape=(n,) + ps.shape, axes=("layers",) + ps.axes)
+    return _map_specs(one, tree)
+
+
+def _scan_blocks(block_fn, stacked_params, x, aux0, remat: bool,
+                 scan: bool = True):
+    """Run x through stacked blocks; block_fn(p_layer, x) -> (x, aux)."""
+    f = jax.checkpoint(block_fn) if remat else block_fn
+
+    if not scan:
+        n = jax.tree.leaves(stacked_params)[0].shape[0]
+        aux = aux0
+        for i in range(n):
+            p_i = jax.tree.map(lambda a: a[i], stacked_params)
+            x, a = f(p_i, x)
+            aux = aux + a
+        return x, aux
+
+    def body(carry, p_layer):
+        x, aux = carry
+        x, a = f(p_layer, x)
+        return (x, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(body, (x, aux0), stacked_params)
+    return x, aux
+
+
+def _scan_blocks_cache(block_fn, stacked_params, caches, x):
+    """Decode/prefill through stacked blocks threading per-layer caches.
+
+    block_fn(p_layer, x, cache_layer) -> (x, new_cache_layer)."""
+    def body(x, inp):
+        p_layer, c_layer = inp
+        x, c_new = block_fn(p_layer, x, c_layer)
+        return x, c_new
+
+    return jax.lax.scan(body, x, (stacked_params, caches))
+
+
+# --------------------------------------------------------------------------
+# block definitions (specs + forward + decode) per family
+# --------------------------------------------------------------------------
+def _attn_spec(cfg: ModelConfig, dtype):
+    a = cfg.attn
+    if a.mla is not None:
+        return attn_mod.mla_spec(a, cfg.d_model, dtype)
+    return attn_mod.gqa_spec(a, cfg.d_model, dtype)
+
+
+def _attn_fwd(p, cfg: ModelConfig, x, positions):
+    a = cfg.attn
+    if a.mla is not None:
+        return attn_mod.mla_forward(p, a, x, positions)
+    return attn_mod.gqa_forward(p, a, x, positions)
+
+
+def _attn_decode(p, cfg: ModelConfig, x, cache):
+    a = cfg.attn
+    if a.mla is not None:
+        return attn_mod.mla_decode(p, a, x, cache)
+    return attn_mod.gqa_decode(p, a, x, cache)
+
+
+def _attn_cache(cfg: ModelConfig, batch, max_len, dtype):
+    a = cfg.attn
+    if a.mla is not None:
+        return attn_mod.mla_init_cache(a, batch, max_len, dtype)
+    return attn_mod.gqa_init_cache(a, cfg.d_model, batch, max_len, dtype)
+
+
+def _attn_prefill(p, cfg: ModelConfig, x, positions, cache):
+    a = cfg.attn
+    if a.mla is not None:
+        return attn_mod.mla_prefill_cache(p, a, x, positions, cache)
+    return attn_mod.gqa_prefill_cache(p, a, x, positions, cache)
+
+
+def _ffn_spec(cfg: ModelConfig, dtype, use_moe: bool):
+    if use_moe:
+        return moe_mod.moe_spec(cfg.moe, cfg.d_model, dtype)
+    return mlp_spec(cfg.d_model, cfg.d_ff, cfg.act, dtype)
+
+
+def _ffn_fwd(p, cfg: ModelConfig, x, use_moe: bool):
+    if use_moe:
+        return moe_mod.moe_forward(p, cfg.moe, x)
+    return mlp(p, x, cfg.act), 0.0
+
+
+# ---- standard transformer block (dense or MoE ffn) ------------------------
+def block_spec(cfg: ModelConfig, dtype, use_moe=None):
+    use_moe = cfg.moe is not None if use_moe is None else use_moe
+    return {
+        "ln1": rmsnorm_spec(cfg.d_model, dtype),
+        "attn": _attn_spec(cfg, dtype),
+        "ln2": rmsnorm_spec(cfg.d_model, dtype),
+        "ffn": _ffn_spec(cfg, dtype, use_moe),
+    }
+
+
+def block_fwd(p, cfg: ModelConfig, x, positions, use_moe=None):
+    use_moe = cfg.moe is not None if use_moe is None else use_moe
+    x = shd(x, "batch", "seq_res", "embed")
+    x = x + _attn_fwd(p["attn"], cfg, rmsnorm(p["ln1"], x, cfg.norm_eps),
+                      positions)
+    h, aux = _ffn_fwd(p["ffn"], cfg, rmsnorm(p["ln2"], x, cfg.norm_eps),
+                      use_moe)
+    return x + h, aux
+
+
+def block_decode(p, cfg: ModelConfig, x, cache, use_moe=None):
+    use_moe = cfg.moe is not None if use_moe is None else use_moe
+    h, cache = _attn_decode(p["attn"], cfg, rmsnorm(p["ln1"], x, cfg.norm_eps),
+                            cache)
+    x = x + h
+    h, _ = _ffn_fwd(p["ffn"], cfg, rmsnorm(p["ln2"], x, cfg.norm_eps), use_moe)
+    return x + h, cache
+
+
+def block_prefill(p, cfg: ModelConfig, x, positions, cache, use_moe=None):
+    use_moe = cfg.moe is not None if use_moe is None else use_moe
+    xn = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    cache = _attn_prefill(p["attn"], cfg, xn, positions, cache)
+    x = x + _attn_fwd(p["attn"], cfg, xn, positions)
+    h, _ = _ffn_fwd(p["ffn"], cfg, rmsnorm(p["ln2"], x, cfg.norm_eps), use_moe)
+    return x + h, cache
+
+
+# ---- mamba block -----------------------------------------------------------
+def mamba_block_spec(cfg: ModelConfig, dtype):
+    return {
+        "ln": rmsnorm_spec(cfg.d_model, dtype),
+        "mixer": mamba2.mamba_spec(cfg.mamba, cfg.d_model, dtype),
+    }
+
+
+def mamba_block_fwd(p, cfg: ModelConfig, x):
+    x = shd(x, "batch", "seq_res", "embed")
+    return x + mamba2.mamba_forward(p["mixer"], cfg.mamba, cfg.d_model,
+                                    rmsnorm(p["ln"], x, cfg.norm_eps)), 0.0
+
+
+def mamba_block_decode(p, cfg: ModelConfig, x, cache):
+    h, cache = mamba2.mamba_decode(p["mixer"], cfg.mamba, cfg.d_model,
+                                   rmsnorm(p["ln"], x, cfg.norm_eps), cache)
+    return x + h, cache
+
+
+# ---- hybrid (Jamba) group --------------------------------------------------
+# One group = `period` sublayers: (period-1) mamba + 1 attention, each
+# followed by an FFN sublayer alternating dense-MLP / MoE (MoE on odd
+# sublayer indices, as in Jamba's every-other-layer MoE).
+def hybrid_group_spec(cfg: ModelConfig, dtype):
+    period = cfg.attn_every
+    n_mamba = period - 1
+    n_moe = period // 2
+    n_mlp = period - n_moe
+    return {
+        "mamba": stack_specs(n_mamba, mamba_block_spec(cfg, dtype)),
+        "attn": {
+            "ln1": rmsnorm_spec(cfg.d_model, dtype),
+            "attn": _attn_spec(cfg, dtype),
+        },
+        "mlp": stack_specs(n_mlp, {
+            "ln": rmsnorm_spec(cfg.d_model, dtype),
+            "ffn": mlp_spec(cfg.d_model, cfg.d_ff, cfg.act, dtype)}),
+        "moe": stack_specs(n_moe, {
+            "ln": rmsnorm_spec(cfg.d_model, dtype),
+            "ffn": moe_mod.moe_spec(cfg.moe, cfg.d_model, dtype)}),
+    }
+
+
+def _hybrid_sublayers(cfg: ModelConfig):
+    period = cfg.attn_every
+    plan = []
+    i_mamba = i_mlp = i_moe = 0
+    for i in range(period):
+        mixer = ("attn", 0) if i == period - 1 else ("mamba", i_mamba)
+        if i != period - 1:
+            i_mamba += 1
+        if i % 2 == 1:
+            ffn = ("moe", i_moe); i_moe += 1
+        else:
+            ffn = ("mlp", i_mlp); i_mlp += 1
+        plan.append((mixer, ffn))
+    return plan
+
+
+def hybrid_group_fwd(p, cfg: ModelConfig, x, positions):
+    """Forward one Jamba group.
+
+    The first period-2 sublayers form (period//2 - 1) homogeneous
+    (mamba+mlp, mamba+moe) *pairs* executed with an inner ``lax.scan``: the
+    while-loop boundary forces XLA to release each pair's FSDP parameter
+    gathers before the next pair runs, bounding live gathered params to one
+    pair instead of the whole 45B-param group (§Perf jamba log: 67 GiB ->
+    measured below).  The tail (mamba+mlp, attn+moe) is unrolled+remat'ed.
+    """
+    aux = 0.0
+    take = lambda tree, i: jax.tree.map(lambda a: a[i], tree)
+    period = cfg.attn_every
+    n_pairs = period // 2 - 1
+
+    def sublayer(pm_pa_pf, x, mixer, ffn):
+        pm, pf = pm_pa_pf
+        x = shd(x, "batch", "seq_res", "embed")
+        if mixer == "mamba":
+            x, _ = mamba_block_fwd(pm, cfg, x)
+        else:
+            x = x + _attn_fwd(pm["attn"], cfg,
+                              rmsnorm(pm["ln1"], x, cfg.norm_eps), positions)
+        h, a = _ffn_fwd(pf["ffn"], cfg, rmsnorm(pf["ln"], x, cfg.norm_eps),
+                        use_moe=(ffn == "moe"))
+        return x + h, a
+
+    if n_pairs > 0:
+        sl = lambda tree, s: jax.tree.map(lambda a: a[s], tree)
+        pairs = {
+            "ma": sl(p["mamba"], slice(0, 2 * n_pairs, 2)),
+            "mb": sl(p["mamba"], slice(1, 2 * n_pairs, 2)),
+            "mlp": sl(p["mlp"], slice(0, n_pairs)),
+            "moe": sl(p["moe"], slice(0, n_pairs)),
+        }
+
+        def pair_fn(pp, x):
+            x, a1 = sublayer((pp["ma"], pp["mlp"]), x, "mamba", "mlp")
+            x, a2 = sublayer((pp["mb"], pp["moe"]), x, "mamba", "moe")
+            return x, a1 + a2
+
+        x, aux = _scan_blocks(pair_fn, pairs, x, aux, cfg.remat)
+
+    # tail: (mamba + mlp), (attn + moe)
+    tail = [(("mamba", 2 * n_pairs), ("mlp", n_pairs)),
+            (("attn", 0), ("moe", n_pairs))]
+    for (mixer, mi), (ffn, fi) in tail:
+        pm = take(p["mamba"], mi) if mixer == "mamba" else p["attn"]
+        pf = take(p[ffn], fi)
+        f = (jax.checkpoint(sublayer, static_argnums=(2, 3))
+             if cfg.remat else sublayer)
+        x, a = f((pm, pf), x, mixer, ffn)
+        aux = aux + a
+    return x, aux
+
+
+def hybrid_group_cache(cfg: ModelConfig, batch, max_len, dtype):
+    n_mamba = cfg.attn_every - 1
+    mcache = mamba2.mamba_init_cache(cfg.mamba, cfg.d_model, batch, dtype)
+    return {
+        "mamba": jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_mamba,) + a.shape).copy(), mcache),
+        "attn": _attn_cache(cfg, batch, max_len, dtype),
+    }
+
+
+def hybrid_group_decode(p, cfg: ModelConfig, x, cache):
+    take = lambda tree, i: jax.tree.map(lambda a: a[i], tree)
+    new_m = []
+    for (mixer, mi), (ffn, fi) in _hybrid_sublayers(cfg):
+        if mixer == "mamba":
+            x, c = mamba_block_decode(take(p["mamba"], mi), cfg, x,
+                                      take(cache["mamba"], mi))
+            new_m.append(c)
+        else:
+            pa = p["attn"]
+            h, ca = _attn_decode(pa["attn"], cfg,
+                                 rmsnorm(pa["ln1"], x, cfg.norm_eps),
+                                 cache["attn"])
+            x = x + h
+        pf = take(p[ffn], fi)
+        h, _ = _ffn_fwd(pf["ffn"], cfg, rmsnorm(pf["ln"], x, cfg.norm_eps),
+                        use_moe=(ffn == "moe"))
+        x = x + h
+    stacked_m = jax.tree.map(lambda *xs: jnp.stack(xs), *new_m)
+    return x, {"mamba": stacked_m, "attn": ca}
+
+
+def hybrid_group_prefill(p, cfg: ModelConfig, x, positions, cache):
+    """Prefill for hybrid: run the full-seq forward while (a) filling the
+    attention KV cache and (b) producing the final mamba SSM states."""
+    take = lambda tree, i: jax.tree.map(lambda a: a[i], tree)
+    new_m = []
+    for (mixer, mi), (ffn, fi) in _hybrid_sublayers(cfg):
+        if mixer == "mamba":
+            pm = take(p["mamba"], mi)
+            xn = rmsnorm(pm["ln"], x, cfg.norm_eps)
+            h, st = _mamba_forward_with_state(pm["mixer"], cfg, xn)
+            c = take(cache["mamba"], mi)
+            conv_hist = _mamba_conv_tail(pm["mixer"], cfg, xn, c["conv"])
+            new_m.append({"conv": conv_hist, "ssm": st,
+                          "pos": positions[:, -1] + 1})
+            x = x + h
+        else:
+            pa = p["attn"]
+            xn = rmsnorm(pa["ln1"], x, cfg.norm_eps)
+            ca = _attn_prefill(pa["attn"], cfg, xn, positions, cache["attn"])
+            x = x + _attn_fwd(pa["attn"], cfg, xn, positions)
+        pf = take(p[ffn], fi)
+        h, _ = _ffn_fwd(pf["ffn"], cfg, rmsnorm(pf["ln"], x, cfg.norm_eps),
+                        use_moe=(ffn == "moe"))
+        x = x + h
+    stacked_m = jax.tree.map(lambda *xs: jnp.stack(xs), *new_m)
+    return x, {"mamba": stacked_m, "attn": ca}
+
+
+def _mamba_forward_with_state(p, cfg: ModelConfig, x):
+    """mamba_forward that also returns the final SSM state (for prefill)."""
+    from ..kernels import ops
+    m = cfg.mamba
+    B, S, _ = x.shape
+    d_inner, H, G, d_conv = mamba2.dims(m, cfg.d_model)
+    n = m.d_state
+    cdt = x.dtype
+    zxbcdt = x @ p["in_proj"].astype(cdt)
+    z, xin, Braw, Craw, dt = mamba2._split(m, cfg.d_model, zxbcdt)
+    xbc = jnp.concatenate([xin, Braw, Craw], axis=-1)
+    w = p["conv_w"].astype(cdt)
+    pad = m.conv_width - 1
+    xbc_p = jnp.pad(xbc, ((0, 0), (pad, 0), (0, 0)))
+    conv = sum(xbc_p[:, i:i + S] * w[i] for i in range(m.conv_width))
+    conv = jax.nn.silu(conv + p["conv_b"].astype(cdt))
+    xin, Braw, Craw = jnp.split(conv, [d_inner, d_inner + G * n], axis=-1)
+    xh = xin.reshape(B, S, H, m.headdim)
+    Bm = Braw.reshape(B, S, G, n)
+    Cm = Craw.reshape(B, S, G, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["a_log"])
+    y, state = ops.ssd(xh, dt, A, Bm, Cm, chunk=m.chunk)
+    y = y + p["d_skip"].astype(cdt)[None, None, :, None] * xh
+    y = y.reshape(B, S, d_inner)
+    y = mamba2._gated_norm(p, y, z)
+    return y @ p["out_proj"].astype(cdt), state.astype(cdt)
+
+
+def _mamba_conv_tail(p, cfg: ModelConfig, x, conv_cache):
+    """Last (conv_width-1) pre-conv activations, for decode continuation."""
+    m = cfg.mamba
+    cdt = x.dtype
+    zxbcdt = x @ p["in_proj"].astype(cdt)
+    _, xin, Braw, Craw, _ = mamba2._split(m, cfg.d_model, zxbcdt)
+    xbc = jnp.concatenate([xin, Braw, Craw], axis=-1)
+    W = m.conv_width - 1
+    return xbc[:, -W:]
+
+
+# ---- VLM group (Llama-3.2-Vision style) ------------------------------------
+def vlm_group_spec(cfg: ModelConfig, dtype):
+    n_self = cfg.vision.cross_attn_every - 1
+    return {
+        "self": stack_specs(n_self, block_spec(cfg, dtype)),
+        "cross": {
+            "ln1": rmsnorm_spec(cfg.d_model, dtype),
+            "xattn": attn_mod.cross_attn_spec(cfg.attn, cfg.d_model, dtype),
+            "gate": spec((1,), (None,), init="zeros", dtype=dtype),
+            "ln2": rmsnorm_spec(cfg.d_model, dtype),
+            "ffn": mlp_spec(cfg.d_model, cfg.d_ff, cfg.act, dtype),
+        },
+    }
+
+
+def vlm_group_fwd(p, cfg: ModelConfig, x, positions, image_embeds):
+    def self_block(pl, x):
+        return block_fwd(pl, cfg, x, positions, use_moe=False)
+    x, aux = _scan_blocks(self_block, p["self"], x, 0.0, cfg.remat)
+    x = shd(x, "batch", "seq_res", "embed")
+    pc = p["cross"]
+    mem_kv = attn_mod.cross_attn_kv(pc["xattn"], image_embeds)
+    h = attn_mod.cross_attn(pc["xattn"], cfg.attn,
+                            rmsnorm(pc["ln1"], x, cfg.norm_eps), mem_kv)
+    x = x + jnp.tanh(pc["gate"].astype(x.dtype)) * h
+    h, _ = _ffn_fwd(pc["ffn"], cfg, rmsnorm(pc["ln2"], x, cfg.norm_eps), False)
+    return x + h, aux
+
+
+def vlm_group_cache(cfg: ModelConfig, batch, max_len, dtype):
+    n_self = cfg.vision.cross_attn_every - 1
+    a = _attn_cache(cfg, batch, max_len, dtype)
+    stacked = jax.tree.map(
+        lambda v: jnp.broadcast_to(v, (n_self,) + v.shape).copy(), a)
+    dh = cfg.head_dim
+    memkv = jnp.zeros((batch, cfg.vision.n_image_tokens,
+                       cfg.attn.n_kv_heads, dh), dtype)
+    return {"self": stacked, "cross_k": memkv, "cross_v": memkv}
+
+
+def vlm_group_decode(p, cfg: ModelConfig, x, cache):
+    def self_block(x, inp):
+        pl, cl = inp
+        x, c = block_decode(pl, cfg, x, cl, use_moe=False)
+        return x, c
+    x, new_self = jax.lax.scan(self_block, x, (p["self"], cache["self"]))
+    pc = p["cross"]
+    h = attn_mod.cross_attn(pc["xattn"], cfg.attn,
+                            rmsnorm(pc["ln1"], x, cfg.norm_eps),
+                            (cache["cross_k"], cache["cross_v"]))
+    x = x + jnp.tanh(pc["gate"].astype(x.dtype)) * h
+    h, _ = _ffn_fwd(pc["ffn"], cfg, rmsnorm(pc["ln2"], x, cfg.norm_eps), False)
+    return x + h, dict(cache, self=new_self)
+
+
+def vlm_group_prefill(p, cfg: ModelConfig, x, positions, cache, image_embeds):
+    def self_block(x, inp):
+        pl, cl = inp
+        xn = rmsnorm(pl["ln1"], x, cfg.norm_eps)
+        c = _attn_prefill(pl["attn"], cfg, xn, positions, cl)
+        x = x + _attn_fwd(pl["attn"], cfg, xn, positions)
+        h, _ = _ffn_fwd(pl["ffn"], cfg, rmsnorm(pl["ln2"], x, cfg.norm_eps),
+                        False)
+        return x + h, c
+    x, new_self = jax.lax.scan(self_block, x, (p["self"], cache["self"]))
+    pc = p["cross"]
+    mem_k, mem_v = attn_mod.cross_attn_kv(pc["xattn"], image_embeds)
+    h = attn_mod.cross_attn(pc["xattn"], cfg.attn,
+                            rmsnorm(pc["ln1"], x, cfg.norm_eps),
+                            (mem_k, mem_v))
+    x = x + jnp.tanh(pc["gate"].astype(x.dtype)) * h
+    h, _ = _ffn_fwd(pc["ffn"], cfg, rmsnorm(pc["ln2"], x, cfg.norm_eps), False)
+    return x + h, dict(cache, self=new_self, cross_k=mem_k, cross_v=mem_v)

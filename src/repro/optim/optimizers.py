@@ -1,0 +1,126 @@
+"""Optimizers (no optax in this environment): SGD, momentum, AdamW.
+
+API mirrors optax minimally: ``opt.init(params) -> state``;
+``opt.update(grads, state, params) -> (updates, state)`` where updates are
+*additive* deltas (the PS "INC" convention — apply with tree_add).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable
+
+
+def _cast_like(x, ref):
+    return x.astype(ref.dtype)
+
+
+def sgd(lr: float | Callable = 1e-2) -> Optimizer:
+    sched = lr if callable(lr) else (lambda step: lr)
+
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None):
+        step = state["step"]
+        g = sched(step)
+        upd = jax.tree.map(lambda gr: (-g * gr.astype(jnp.float32)), grads)
+        return upd, {"step": step + 1}
+
+    return Optimizer(init, update)
+
+
+def momentum(lr: float | Callable = 1e-2, beta: float = 0.9) -> Optimizer:
+    sched = lr if callable(lr) else (lambda step: lr)
+
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32),
+                "mu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                   params)}
+
+    def update(grads, state, params=None):
+        step = state["step"]
+        mu = jax.tree.map(lambda m, gr: beta * m + gr.astype(jnp.float32),
+                          state["mu"], grads)
+        g = sched(step)
+        upd = jax.tree.map(lambda m: -g * m, mu)
+        return upd, {"step": step + 1, "mu": mu}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: float | Callable = 3e-4, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.0,
+          state_dtype=jnp.float32) -> Optimizer:
+    """AdamW.  ``state_dtype=bfloat16`` halves optimizer memory — used for
+    the 398B config to fit one v5e pod (documented in DESIGN.md)."""
+    sched = lr if callable(lr) else (lambda step: lr)
+
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, state_dtype)
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": jax.tree.map(z, params),
+                "v": jax.tree.map(z, params)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        sf = step.astype(jnp.float32)
+        c1 = 1.0 - b1 ** sf
+        c2 = 1.0 - b2 ** sf
+
+        def upd_m(m, gr):
+            return (b1 * m.astype(jnp.float32)
+                    + (1 - b1) * gr.astype(jnp.float32)).astype(state_dtype)
+
+        def upd_v(v, gr):
+            g32 = gr.astype(jnp.float32)
+            return (b2 * v.astype(jnp.float32)
+                    + (1 - b2) * g32 * g32).astype(state_dtype)
+
+        m = jax.tree.map(upd_m, state["m"], grads)
+        v = jax.tree.map(upd_v, state["v"], grads)
+        g = sched(state["step"])
+
+        def delta(mm, vv, pp):
+            mhat = mm.astype(jnp.float32) / c1
+            vhat = vv.astype(jnp.float32) / c2
+            d = -g * (mhat / (jnp.sqrt(vhat) + eps)
+                      + weight_decay * pp.astype(jnp.float32))
+            return d
+
+        upd = jax.tree.map(delta, m, v, params)
+        return upd, {"step": step, "m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params, updates):
+    """params <- params + updates (PS INC semantics; dtype-preserving)."""
+    return jax.tree.map(lambda p, u: (p.astype(jnp.float32)
+                                      + u.astype(jnp.float32)).astype(p.dtype),
+                        params, updates)
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    min_frac: float = 0.1):
+    def sched(step):
+        s = step.astype(jnp.float32)
+        warm = jnp.minimum(1.0, (s + 1.0) / max(1, warmup))
+        prog = jnp.clip((s - warmup) / max(1, total - warmup), 0.0, 1.0)
+        cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return base_lr * warm * cos
+    return sched
+
+
+def inv_sqrt_schedule(base_lr: float, t0: float = 1.0):
+    """The paper's η_t = η/sqrt(t) schedule (SGD theory sections)."""
+    def sched(step):
+        return base_lr / jnp.sqrt(t0 + step.astype(jnp.float32))
+    return sched

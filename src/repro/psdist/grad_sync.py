@@ -1,0 +1,140 @@
+"""The paper's consistency models as gradient-synchronization policies for
+pod-scale SPMD training (see DESIGN.md §3 for the mapping).
+
+- BSP   — the standard fused end-of-step gradient mean over the data axes.
+- SSP(s) — *delayed gradient application*: the train state carries a FIFO of
+  ``s`` gradient pytrees; step ``t`` applies the (all-reduced) gradient from
+  step ``t-s`` and enqueues the fresh one.  On hardware, this lets the
+  collective for grad_t overlap up to ``s`` steps of compute — exactly SSP's
+  bounded-staleness window, with the staleness now buying collective-latency
+  hiding rather than straggler tolerance (there are no stragglers inside one
+  SPMD program).  ``s=0`` degenerates to BSP.
+- ESSP  — *eager bucketed collectives*: gradients are reduced per layer
+  bucket as they are produced instead of as one fused tree at the end,
+  mirroring ESSPTable's push-as-ready callbacks.  Same payload bytes, many
+  smaller collectives that the scheduler can overlap with the remaining
+  backward pass; we quantify the schedule difference in §Roofline.
+
+All three are expressed through two orthogonal knobs on `GradSync`:
+``staleness`` (FIFO depth) and ``n_buckets`` (collective granularity).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.consistency import ConsistencyConfig
+
+
+@dataclass(frozen=True)
+class GradSync:
+    model: str = "bsp"            # bsp | ssp | essp
+    staleness: int = 0            # SSP FIFO depth (0 = synchronous apply)
+    n_buckets: int = 1            # ESSP: number of eager collective buckets
+
+    @classmethod
+    def from_consistency(cls, c: ConsistencyConfig, n_buckets: int = 8):
+        if c.model == "bsp":
+            return cls("bsp", 0, 1)
+        if c.model == "ssp":
+            return cls("ssp", c.staleness, 1)
+        if c.model == "essp":
+            return cls("essp", c.staleness, n_buckets)
+        raise ValueError(f"{c.model} has no pod-side realization "
+                         "(VAP is simulator-only; see DESIGN.md)")
+
+
+# --------------------------------------------------------------------------
+# bucketed collective mean (ESSP's eager push schedule)
+# --------------------------------------------------------------------------
+def bucket_assignment(grads, n_buckets: int):
+    """Greedy size-balanced assignment of leaves to buckets."""
+    leaves, _ = jax.tree_util.tree_flatten(grads)
+    sizes = [int(np.prod(l.shape)) for l in leaves]
+    order = sorted(range(len(leaves)), key=lambda i: -sizes[i])
+    loads = [0] * n_buckets
+    assign = [0] * len(leaves)
+    for i in order:
+        b = loads.index(min(loads))
+        assign[i] = b
+        loads[b] += sizes[i]
+    return assign
+
+
+def psum_mean_bucketed(grads, axis_names, n_buckets: int):
+    """Mean-reduce gradients over mesh axes in ``n_buckets`` separate
+    collectives (1 bucket = the fused BSP schedule).
+
+    Inside ``shard_map`` this lowers to explicit psums; under plain pjit
+    (params replicated over data axes) XLA inserts the equivalent
+    all-reduces — bucketing still controls how many independent collectives
+    appear in the HLO.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    if n_buckets <= 1:
+        reduced = [jax.lax.pmean(l, axis_names) for l in leaves]
+        return jax.tree_util.tree_unflatten(treedef, reduced)
+    assign = bucket_assignment(grads, n_buckets)
+    out = [None] * len(leaves)
+    for b in range(n_buckets):
+        idx = [i for i, a in enumerate(assign) if a == b]
+        if not idx:
+            continue
+        # one logical collective per bucket: reduce leaves of this bucket
+        group = [jax.lax.pmean(leaves[i], axis_names) for i in idx]
+        for i, g in zip(idx, group):
+            out[i] = g
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# --------------------------------------------------------------------------
+# SSP gradient FIFO
+# --------------------------------------------------------------------------
+def init_fifo(sync: GradSync, params):
+    """Gradient FIFO of depth ``staleness`` (empty for BSP/ESSP with s=0).
+
+    Leaves are stacked along a leading FIFO axis to keep the pytree static.
+    """
+    if sync.staleness == 0:
+        return None
+    def z(p):
+        return jnp.zeros((sync.staleness,) + p.shape, jnp.float32)
+    return {"buf": jax.tree.map(z, params),
+            "filled": jnp.zeros((), jnp.int32)}
+
+
+def push_pop(fifo, grads):
+    """Push fresh grads, pop the stalest entry.
+
+    Returns (stale_grads, new_fifo, valid) — ``valid`` is 0 during warm-up
+    (the FIFO not yet full: apply nothing, matching SSP's first ``s`` clocks
+    where nothing is guaranteed-visible yet).
+    """
+    s = jax.tree.leaves(fifo["buf"])[0].shape[0]
+    popped = jax.tree.map(lambda b: b[0], fifo["buf"])
+    pushed = jax.tree.map(
+        lambda b, g: jnp.concatenate(
+            [b[1:], g.astype(jnp.float32)[None]], axis=0),
+        fifo["buf"], grads)
+    filled = jnp.minimum(fifo["filled"] + 1, s)
+    valid = (fifo["filled"] >= s).astype(jnp.float32)
+    return popped, {"buf": pushed, "filled": filled}, valid
+
+
+def sync_gradients(sync: GradSync, grads, fifo, data_axes=("data",)):
+    """Full consistency pipeline for one step.
+
+    Returns (grads_to_apply, new_fifo, apply_scale).  ``apply_scale`` is 0/1
+    during SSP warm-up.  When running under pjit (no named axes in scope),
+    pass ``data_axes=()`` — the all-reduce is implicit in the sharding.
+    """
+    if data_axes:
+        grads = psum_mean_bucketed(grads, data_axes, sync.n_buckets)
+    if sync.staleness == 0 or fifo is None:
+        return grads, fifo, jnp.ones(())
+    stale, fifo, valid = push_pop(fifo, grads)
+    return stale, fifo, valid

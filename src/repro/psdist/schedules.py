@@ -1,0 +1,66 @@
+"""Collective-schedule analysis: the ESSP exposure model on pods.
+
+The paper's Fig 1-right argument — eager pushes hide communication behind
+computation — maps on a pod to *collective exposure*: how much collective
+time cannot be overlapped with compute.  Given per-step compute time and a
+bucketed collective schedule, this module computes the exposed time under
+the simple "overlap with remaining backward" model:
+
+- **lazy (1 bucket)**: the fused gradient collective starts when the whole
+  backward pass is done — fully exposed.
+- **eager (B buckets)**: bucket i's collective starts as soon as its layers'
+  gradients exist, overlapping the remaining backward compute; only what
+  spills past the end of compute is exposed.
+
+This is the scheduling intuition behind the ESSP mapping; the dry-run HLO
+gives the bytes (utils/hlo.py) and compute/collective terms (roofline),
+and this model turns a (compute_s, collective_s, n_buckets) triple into an
+exposed-time estimate used in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ScheduleModel:
+    compute_s: float          # backward-pass compute time per step
+    collective_s: float       # total gradient-collective time per step
+    n_buckets: int = 1
+
+    def exposed_s(self) -> float:
+        """Exposed (non-overlapped) collective seconds per step.
+
+        Buckets become ready uniformly through the backward pass; bucket i
+        (0-based, reverse layer order) is ready at compute * (i+1)/B and
+        takes collective_s/B.  Each bucket runs after both its readiness
+        and the previous bucket's completion (one shared ICI channel).
+        """
+        B = max(1, self.n_buckets)
+        t = 0.0
+        per = self.collective_s / B
+        for i in range(B):
+            ready = self.compute_s * (i + 1) / B
+            t = max(t, ready) + per
+        return max(0.0, t - self.compute_s)
+
+    def speedup_vs_lazy(self) -> float:
+        lazy = ScheduleModel(self.compute_s, self.collective_s, 1)
+        mine = self.compute_s + self.exposed_s()
+        base = lazy.compute_s + lazy.exposed_s()
+        return base / mine
+
+
+def exposure_table(compute_s: float, collective_s: float,
+                   buckets=(1, 2, 4, 8, 16, 32)) -> list:
+    """Exposed seconds + step time for a sweep of bucket counts."""
+    rows = []
+    for b in buckets:
+        m = ScheduleModel(compute_s, collective_s, b)
+        e = m.exposed_s()
+        rows.append({"buckets": b, "exposed_s": e,
+                     "step_s": compute_s + e,
+                     "speedup_vs_lazy": m.speedup_vs_lazy()})
+    return rows

@@ -1,0 +1,83 @@
+"""Batched serving: prefill + autoregressive decode against the KV cache."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..models.registry import Model
+
+
+def greedy_sample(logits, rng=None, temperature: float = 0.0):
+    if temperature and rng is not None:
+        return jax.random.categorical(rng, logits[:, -1] / temperature)
+    return jnp.argmax(logits[:, -1], axis=-1)
+
+
+def make_serve_step(model: Model):
+    """One decode step: (params, tokens [B,1], cache) -> (logits, cache).
+    This is what the decode-shape dry-runs lower."""
+    def serve_step(params, batch, cache):
+        return model.decode_step(params, batch, cache)
+    return serve_step
+
+
+def generate(model: Model, params, prompt_tokens, max_new: int,
+             max_len: int | None = None, temperature: float = 0.0,
+             rng=None, extra_inputs: dict | None = None):
+    """Prefill on the prompt then greedily decode ``max_new`` tokens.
+
+    Returns [B, max_new] generated token ids.  ``extra_inputs`` carries
+    modality stubs (frames / image_embeds) for audio/vlm models.
+    """
+    B, S = prompt_tokens.shape
+    max_len = max_len or (S + max_new)
+    cache = model.init_cache(B, max_len)
+    batch = {"tokens": prompt_tokens, **(extra_inputs or {})}
+    logits, cache = jax.jit(model.prefill)(params, batch, cache)
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    tok = greedy_sample(logits, rng, temperature)
+
+    decode = jax.jit(model.decode_step)
+
+    def body(carry, key):
+        tok, cache = carry
+        logits, cache = decode(params, {"tokens": tok[:, None]}, cache)
+        nxt = greedy_sample(logits, key, temperature)
+        return (nxt, cache), nxt
+
+    keys = jax.random.split(rng, max_new)
+    out = [tok]
+    carry = (tok, cache)
+    for k in keys[:-1]:
+        carry, nxt = body(carry, k)
+        out.append(nxt)
+    return jnp.stack(out, axis=1)
+
+
+def generate_scan(model: Model, params, prompt_tokens, max_new: int,
+                  max_len: int | None = None, extra_inputs: dict | None = None):
+    """Fully-jitted greedy generation (decode loop inside lax.scan)."""
+    B, S = prompt_tokens.shape
+    max_len = max_len or (S + max_new)
+    cache = model.init_cache(B, max_len)
+    batch = {"tokens": prompt_tokens, **(extra_inputs or {})}
+
+    @jax.jit
+    def run(params, batch, cache):
+        logits, cache = model.prefill(params, batch, cache)
+        tok = jnp.argmax(logits[:, -1], axis=-1)
+
+        def body(carry, _):
+            tok, cache = carry
+            logits, cache = model.decode_step(
+                params, {"tokens": tok[:, None]}, cache)
+            nxt = jnp.argmax(logits[:, -1], axis=-1)
+            return (nxt, cache), nxt
+
+        (last, cache), toks = jax.lax.scan(body, (tok, cache), None,
+                                           length=max_new - 1)
+        return jnp.concatenate([tok[:, None], toks.T], axis=1)
+
+    return run(params, batch, cache)

@@ -1,0 +1,27 @@
+"""Training losses."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def softmax_xent(logits, labels, z_loss: float = 1e-4):
+    """Mean next-token cross entropy with optional z-loss regularizer.
+
+    logits [B, S, V] (any float dtype), labels [B, S] int32.
+    """
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    loss = jnp.mean(nll)
+    if z_loss:
+        loss = loss + z_loss * jnp.mean(jnp.square(lse))
+    return loss
+
+
+def shift_labels(tokens):
+    """Next-token prediction targets: labels[t] = tokens[t+1], last = pad."""
+    labels = jnp.concatenate(
+        [tokens[:, 1:], jnp.zeros_like(tokens[:, :1])], axis=1)
+    return labels

@@ -1,0 +1,369 @@
+"""HLO-text analysis for the roofline model.
+
+``compiled.cost_analysis()`` visits every computation **once** — ``while``
+bodies (lax.scan layers, microbatch accumulation, blocked-attention chunk
+loops) are not multiplied by their trip counts, so its flops/bytes are large
+undercounts for scanned models, and it reports no collective bytes at all.
+
+This module parses the optimized HLO text instead:
+
+1. split the module into computations,
+2. recover each ``while`` op's trip count from its condition computation
+   (XLA emits ``compare(iv, constant(N)), direction=LT`` for lax.scan),
+3. propagate execution multiplicity through the call graph
+   (while bodies × trip count; call/conditional × 1),
+4. accumulate per-computation:
+   - matmul flops from ``dot`` instructions (2 · prod(result) · K, K from
+     the printed contracting dims),
+   - bytes accessed (operand + result sizes of real instructions),
+   - collective bytes/counts by op kind.
+
+Shapes in SPMD modules are per-device shard shapes, so every number below is
+*per device* — exactly what the per-chip roofline needs.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1,
+    "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+COLLECTIVE_OPS = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+    "collective-broadcast",
+    "ragged-all-to-all",
+)
+
+# ops whose operand/result bytes we do NOT count as memory traffic
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "custom-call", "partition-id", "replica-id", "iota",
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_COMP_START_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{$")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*((?:\([^()]*\)|[\w\[\],{}/: ]+?))\s+"
+    r"([\w\-]+)\(")
+_WHILE_RE = re.compile(
+    r"while\(.*?\).*?condition=%?([\w.\-]+).*?body=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALL_RE = re.compile(r"(?:to_apply|calls)=%?([\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_DOT_DIMS_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*")
+_OPERANDS_RE = re.compile(r"[\w\-]+\(([^()]*)\)")
+
+
+def shape_bytes(shape_str: str) -> int:
+    m = _SHAPE_RE.match(shape_str.strip())
+    if not m:
+        return 0
+    dtype, dims = m.groups()
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _all_shapes_bytes(text: str) -> int:
+    return sum(shape_bytes(f"{dt}[{dims}]")
+               for dt, dims in _SHAPE_RE.findall(text))
+
+
+def _shape_dims(shape_str: str):
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return None
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",") if d] if dims else []
+
+
+@dataclass
+class Computation:
+    name: str
+    lines: list = field(default_factory=list)
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    coll_bytes: dict = field(default_factory=dict)
+    coll_count: dict = field(default_factory=dict)
+    whiles: list = field(default_factory=list)   # (cond_name, body_name)
+    calls: list = field(default_factory=list)    # called computation names
+
+
+def _split_computations(hlo: str) -> dict:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if not stripped:
+            continue
+        m = _COMP_START_RE.match(stripped)
+        if m:
+            cur = Computation(m.group(1))
+            comps[cur.name] = cur
+            continue
+        if stripped.startswith("}"):
+            cur = None
+            continue
+        if cur is not None:
+            cur.lines.append(line)
+    return comps
+
+
+def _operand_names(line: str):
+    """Operand %names of an instruction (from the first paren group)."""
+    m = _OPERANDS_RE.search(line)
+    if not m:
+        return []
+    return [t.strip().lstrip("%") for t in m.group(1).split(",")
+            if t.strip().startswith("%")]
+
+
+def _dot_flops(line: str, result_str: str, table: dict) -> float:
+    """2 * prod(result) * K for a dot instruction line (operand shapes are
+    looked up in the computation's symbol table — CPU HLO prints operands
+    as bare %names)."""
+    res_dims = _shape_dims(result_str)
+    if res_dims is None:
+        return 0.0
+    ops = _operand_names(line)
+    lhs_dims = _shape_dims(table.get(ops[0], "")) if ops else None
+    if not lhs_dims:
+        return 0.0
+    mcd = _DOT_DIMS_RE.search(line)
+    if mcd and mcd.group(1):
+        cdims = [int(x) for x in mcd.group(1).split(",") if x]
+        K = 1
+        for c in cdims:
+            if c < len(lhs_dims):
+                K *= lhs_dims[c]
+    else:
+        K = lhs_dims[-1] if lhs_dims else 1
+    n_res = 1
+    for d in res_dims:
+        n_res *= d
+    return 2.0 * n_res * K
+
+
+def _analyze_computation(comp: Computation):
+    # symbol table: instruction name -> result type string
+    table: dict[str, str] = {}
+    for line in comp.lines:
+        m = _INSTR_RE.match(line)
+        dm = _DEF_RE.match(line)
+        if m and dm:
+            table[dm.group(1)] = m.group(1)
+    for line in comp.lines:
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        result_str, op = m.groups()
+        base = op[:-6] if op.endswith("-start") else op
+        if op.endswith("-done"):
+            continue
+        if base == "while":
+            wm = _WHILE_RE.search(line)
+            if wm:
+                tm = _TRIP_RE.search(line)
+                trips = int(tm.group(1)) if tm else None
+                comp.whiles.append((wm.group(1), wm.group(2), trips))
+            continue
+        if base in ("call", "fusion", "reduce", "map", "sort", "scatter",
+                    "select-and-scatter", "reduce-window", "all-reduce"):
+            cm = _CALL_RE.search(line)
+            if cm and base == "call":
+                comp.calls.append(cm.group(1))
+        if base == "conditional":
+            bm = _BRANCH_RE.search(line)
+            if bm:
+                comp.calls.extend(
+                    x.strip().lstrip("%") for x in bm.group(1).split(","))
+        if base == "dot":
+            comp.flops += _dot_flops(line, result_str, table)
+        if base in COLLECTIVE_OPS:
+            nbytes = _all_shapes_bytes(result_str)
+            comp.coll_bytes[base] = comp.coll_bytes.get(base, 0) + nbytes
+            comp.coll_count[base] = comp.coll_count.get(base, 0) + 1
+        dm = _DEF_RE.match(line)
+        instr_name = dm.group(1) if dm else ""
+        if base in ("dynamic-update-slice", "scatter"):
+            # in-place update: traffic = the update tensor (read) + the
+            # written region (+ indices), NOT the whole target buffer
+            # (XLA aliases the target).
+            ops_ = _operand_names(line)
+            upd_idx = 1 if base == "dynamic-update-slice" else 2
+            upd = table.get(ops_[upd_idx], "") if len(ops_) > upd_idx else ""
+            comp.bytes_accessed += 2 * _all_shapes_bytes(upd)
+        elif base in ("dynamic-slice", "gather"):
+            # read traffic = the fetched region, not the whole table
+            comp.bytes_accessed += 2 * _all_shapes_bytes(result_str)
+        elif base == "fusion" and "dynamic-update-slice" in instr_name:
+            # XLA-CPU wraps in-place slice updates of loop carries in
+            # fusions whose result is the whole carried buffer; charge the
+            # written region (smallest real operand) instead.
+            sizes = [s_ for s_ in (_all_shapes_bytes(table.get(n, ""))
+                                   for n in _operand_names(line)) if s_ > 0]
+            comp.bytes_accessed += 2 * (min(sizes) if sizes else 0)
+        elif base == "fusion" and ("convert" in instr_name
+                                   or "bitcast" in instr_name):
+            # dtype-convert/slice-view fusions: charge the produced view
+            # only — the (often whole-buffer) operand is merely sliced,
+            # and the converted value is re-charged at its consumers.
+            comp.bytes_accessed += _all_shapes_bytes(result_str)
+        elif base not in _SKIP_BYTES_OPS:
+            # bytes accessed ~ result bytes + operand bytes (via table)
+            comp.bytes_accessed += _all_shapes_bytes(result_str)
+            for name in _operand_names(line):
+                comp.bytes_accessed += _all_shapes_bytes(table.get(name, ""))
+
+
+def _trip_count(cond: Computation) -> int:
+    """Trip count from a lax.scan-style condition: max int constant."""
+    best = 1
+    for line in cond.lines:
+        for c in _CONST_RE.findall(line):
+            best = max(best, int(c))
+    return best
+
+
+@dataclass
+class HloStats:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    coll_bytes: dict = field(default_factory=dict)
+    coll_count: dict = field(default_factory=dict)
+
+    @property
+    def collective_bytes(self) -> float:
+        return float(sum(self.coll_bytes.values()))
+
+    @property
+    def collective_count(self) -> int:
+        return int(sum(self.coll_count.values()))
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops,
+            "bytes_accessed": self.bytes_accessed,
+            "total_bytes": self.collective_bytes,
+            "total_count": self.collective_count,
+            "bytes_by_op": dict(self.coll_bytes),
+            "count_by_op": dict(self.coll_count),
+        }
+
+
+def analyze(hlo: str, entry: str | None = None) -> HloStats:
+    """Multiplicity-aware flops / bytes / collective totals (per device)."""
+    comps = _split_computations(hlo)
+    for c in comps.values():
+        _analyze_computation(c)
+
+    if entry is None:
+        for name in comps:
+            if name.startswith("main") or ".main" in name:
+                entry = name
+                break
+        else:
+            entry = next(iter(comps))
+
+    stats = HloStats()
+    visited_stack: set = set()
+
+    def visit(name: str, mult: float):
+        comp = comps.get(name)
+        if comp is None or name in visited_stack:
+            return
+        visited_stack.add(name)
+        stats.flops += mult * comp.flops
+        stats.bytes_accessed += mult * comp.bytes_accessed
+        for k, v in comp.coll_bytes.items():
+            stats.coll_bytes[k] = stats.coll_bytes.get(k, 0) + mult * v
+        for k, v in comp.coll_count.items():
+            stats.coll_count[k] = stats.coll_count.get(k, 0) + mult * v
+        for cond_name, body_name, trips in comp.whiles:
+            if trips is None:
+                trips = (_trip_count(comps[cond_name])
+                         if cond_name in comps else 1)
+            visit(body_name, mult * trips)
+            visit(cond_name, mult * trips)
+        for callee in comp.calls:
+            visit(callee, mult)
+        visited_stack.discard(name)
+
+    visit(entry, 1.0)
+    return stats
+
+
+# ---- legacy single-pass API (kept for tests / quick summaries) -----------
+@dataclass
+class CollectiveStats:
+    bytes_by_op: dict = field(default_factory=dict)
+    count_by_op: dict = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_op.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_op.values())
+
+    def as_dict(self) -> dict:
+        return {
+            "total_bytes": self.total_bytes,
+            "total_count": self.total_count,
+            "bytes_by_op": dict(self.bytes_by_op),
+            "count_by_op": dict(self.count_by_op),
+        }
+
+
+def collective_stats(hlo_text: str, multiplicity: bool = True) -> CollectiveStats:
+    """Collective byte totals; multiplicity-aware by default."""
+    out = CollectiveStats()
+    if multiplicity:
+        st = analyze(hlo_text)
+        out.bytes_by_op = {k: int(v) for k, v in st.coll_bytes.items()}
+        out.count_by_op = {k: int(v) for k, v in st.coll_count.items()}
+        return out
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        result_str, opcode = m.groups()
+        base = opcode
+        if base.endswith("-start"):
+            base = base[: -len("-start")]
+        elif base.endswith("-done"):
+            continue
+        if base not in COLLECTIVE_OPS:
+            continue
+        nbytes = _all_shapes_bytes(result_str)
+        out.bytes_by_op[base] = out.bytes_by_op.get(base, 0) + nbytes
+        out.count_by_op[base] = out.count_by_op.get(base, 0) + 1
+    return out
+
+
+def count_op(hlo_text: str, opcode: str) -> int:
+    n = 0
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if m and m.group(2) == opcode:
+            n += 1
+    return n

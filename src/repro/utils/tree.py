@@ -1,0 +1,57 @@
+"""Small pytree helpers (no external deps beyond jax)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_size(tree) -> int:
+    """Total number of elements across all leaves."""
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))
+
+
+def tree_bytes(tree) -> int:
+    return sum(int(np.prod(x.shape)) * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+def tree_zeros_like(tree):
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_scale(a, s):
+    return jax.tree.map(lambda x: x * s, a)
+
+
+def tree_norm(tree) -> jax.Array:
+    """Global l2 norm over all leaves."""
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def tree_any_nan(tree) -> jax.Array:
+    return jnp.any(jnp.stack([jnp.any(~jnp.isfinite(x.astype(jnp.float32)))
+                              for x in jax.tree.leaves(tree)]))
+
+
+def flatten_path(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def named_leaves(tree):
+    """Yield (path_string, leaf) pairs."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    for path, leaf in flat:
+        yield flatten_path(path), leaf

@@ -1,0 +1,37 @@
+import os
+import sys
+
+# Tests must see the default single CPU device (the dry-run sets its own
+# XLA_FLAGS in a subprocess); make sure nothing leaks in.
+os.environ.pop("XLA_FLAGS", None)
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import pytest  # noqa: E402
+
+from repro.core.ps import PSApp  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def quad_app():
+    """Tiny quadratic PS app: minimize ||x||^2 with noisy worker gradients.
+
+    Fast enough for hypothesis sweeps over consistency configs.
+    """
+    P, d = 4, 16
+    eta = 0.3
+
+    def worker_update(view, local, wid, clock, rng):
+        g = view + 0.05 * jax.random.normal(rng, view.shape)
+        step = eta / jnp.sqrt(1.0 + clock)
+        return -step * g / P, local
+
+    def loss(x, locals_):
+        return jnp.sum(jnp.square(x))
+
+    x0 = jnp.ones((d,)) * 2.0
+    return PSApp(name="quad", dim=d, n_workers=P, x0=x0,
+                 local0={"_": jnp.zeros((P, 1))},
+                 worker_update=worker_update, loss=loss)

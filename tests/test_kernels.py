@@ -1,0 +1,236 @@
+"""Pallas kernels vs pure-jnp oracles (interpret=True on CPU).
+
+Per instructions: sweep shapes/dtypes and assert_allclose against ref.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.mf_sgd import mf_sgd_block
+from repro.kernels.ssd_scan import ssd
+from repro.kernels import ops
+
+
+def _attn_inputs(B, Sq, Sk, H, Hkv, Dk, Dv, dtype, seed=0):
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(kq, (B, Sq, H, Dk), dtype)
+    k = jax.random.normal(kk, (B, Sk, Hkv, Dk), dtype)
+    v = jax.random.normal(kv, (B, Sk, Hkv, Dv), dtype)
+    qp = jnp.broadcast_to(jnp.arange(Sk - Sq, Sk), (B, Sq))
+    kp = jnp.broadcast_to(jnp.arange(Sk), (B, Sk))
+    return q, k, v, qp, kp
+
+
+ATTN_CASES = [
+    # B, Sq, Sk, H, Hkv, Dk, Dv, causal, window, dtype
+    (2, 128, 128, 4, 2, 32, 32, True, None, jnp.float32),
+    (1, 200, 200, 8, 8, 64, 64, True, None, jnp.float32),
+    (2, 64, 256, 4, 1, 32, 16, True, None, jnp.float32),   # MQA, Dv != Dk
+    (2, 128, 128, 4, 2, 32, 32, True, 48, jnp.float32),    # sliding window
+    (2, 128, 128, 4, 2, 32, 32, False, None, jnp.float32),
+    (2, 128, 128, 8, 4, 64, 64, True, None, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("case", ATTN_CASES)
+def test_flash_attention_matches_dense(case):
+    B, Sq, Sk, H, Hkv, Dk, Dv, causal, window, dtype = case
+    q, k, v, qp, kp = _attn_inputs(B, Sq, Sk, H, Hkv, Dk, Dv, dtype)
+    scale = 1.0 / np.sqrt(Dk)
+    want = ref.attention_dense(q, k, v, scale=scale, q_pos=qp, kv_pos=kp,
+                               causal=causal, window=window)
+    got = flash_attention(q, k, v, scale=scale, q_pos=qp, kv_pos=kp,
+                          causal=causal, window=window,
+                          block_q=64, block_k=64, interpret=True)
+    tol = 6e-2 if dtype == jnp.bfloat16 else 3e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_blocked_ref_matches_dense():
+    """The production (CPU) blocked path equals the quadratic oracle."""
+    q, k, v, qp, kp = _attn_inputs(2, 96, 96, 4, 2, 32, 32, jnp.float32)
+    want = ref.attention_dense(q, k, v, scale=0.18, q_pos=qp, kv_pos=kp)
+    got = ref.attention(q, k, v, scale=0.18, q_pos=qp, kv_pos=kp,
+                        kv_chunk=32, q_chunk=32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(sq=st.sampled_from([32, 64, 96]), sk=st.sampled_from([64, 128]),
+       hkv=st.sampled_from([1, 2, 4]), rep=st.sampled_from([1, 2]),
+       causal=st.booleans(), seed=st.integers(0, 3))
+def test_flash_attention_hypothesis(sq, sk, hkv, rep, causal, seed):
+    if sq > sk:
+        sq = sk
+    q, k, v, qp, kp = _attn_inputs(1, sq, sk, hkv * rep, hkv, 32, 32,
+                                   jnp.float32, seed)
+    want = ref.attention_dense(q, k, v, scale=0.2, q_pos=qp, kv_pos=kp,
+                               causal=causal)
+    got = flash_attention(q, k, v, scale=0.2, q_pos=qp, kv_pos=kp,
+                          causal=causal, block_q=32, block_k=32,
+                          interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-5)
+
+
+SSD_CASES = [
+    (2, 128, 4, 32, 2, 32, 32, jnp.float32),
+    (1, 256, 8, 64, 1, 64, 64, jnp.float32),
+    (2, 128, 4, 32, 4, 32, 32, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("case", SSD_CASES)
+def test_ssd_kernel_matches_ref(case):
+    b, s, h, p, g, n, chunk, dtype = case
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    x = jax.random.normal(ks[0], (b, s, h, p), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    B = jax.random.normal(ks[3], (b, s, g, n), dtype)
+    C = jax.random.normal(ks[4], (b, s, g, n), dtype)
+    yw, stw = ref.ssd_chunked(x, dt, A, B, C, chunk)
+    yg, stg = ssd(x, dt, A, B, C, chunk=chunk, interpret=True)
+    yw, yg = np.asarray(yw, np.float32), np.asarray(yg, np.float32)
+    scale = max(1.0, np.abs(yw).max())
+    rtol = 1e-2 if dtype == jnp.bfloat16 else 1e-4
+    assert np.abs(yw - yg).max() / scale < rtol
+    np.testing.assert_allclose(np.asarray(stg), np.asarray(stw),
+                               atol=scale * rtol)
+
+
+def test_ssd_ref_matches_naive_recurrence():
+    """The chunked dual form equals the exact token-by-token recurrence."""
+    b, s, h, p, g, n, chunk = 1, 64, 2, 16, 1, 16, 16
+    ks = jax.random.split(jax.random.PRNGKey(7), 5)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    B = jax.random.normal(ks[3], (b, s, g, n))
+    C = jax.random.normal(ks[4], (b, s, g, n))
+
+    y_chunk, st_chunk = ref.ssd_chunked(x, dt, A, B, C, chunk)
+
+    state = jnp.zeros((b, h, p, n))
+    ys = []
+    for t in range(s):
+        yt, state = ref.ssd_recurrent(x[:, t], dt[:, t], A, B[:, t], C[:, t],
+                                      state)
+        ys.append(yt)
+    y_naive = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_naive),
+                               atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st_chunk), np.asarray(state),
+                               atol=2e-4)
+
+
+@pytest.mark.parametrize("N,M,K", [(256, 256, 16), (128, 384, 32),
+                                   (128, 128, 8)])
+def test_mf_sgd_kernel_matches_ref(N, M, K):
+    ks = jax.random.split(jax.random.PRNGKey(1), 4)
+    L = jax.random.normal(ks[0], (N, K))
+    R = jax.random.normal(ks[1], (K, M))
+    D = jax.random.normal(ks[2], (N, M))
+    mask = jax.random.bernoulli(ks[3], 0.3, (N, M))
+    dLw, dRw, lw = ref.mf_sgd_block(L, R, D, mask, 0.1, 1e-3)
+    dLg, dRg, lg = mf_sgd_block(L, R, D, mask, 0.1, 1e-3, interpret=True)
+    np.testing.assert_allclose(np.asarray(dLg), np.asarray(dLw), atol=1e-3)
+    np.testing.assert_allclose(np.asarray(dRg), np.asarray(dRw), atol=1e-3)
+    assert abs(float(lw - lg)) < 1e-3
+
+
+@settings(max_examples=6, deadline=None)
+@given(nb=st.sampled_from([1, 2]), mb=st.sampled_from([1, 3]),
+       k=st.sampled_from([8, 16]), density=st.floats(0.05, 0.9),
+       seed=st.integers(0, 2))
+def test_mf_sgd_hypothesis(nb, mb, k, density, seed):
+    N, M = 128 * nb, 128 * mb
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    L = jax.random.normal(ks[0], (N, k))
+    R = jax.random.normal(ks[1], (k, M))
+    D = jax.random.normal(ks[2], (N, M))
+    mask = jax.random.bernoulli(ks[3], density, (N, M))
+    dLw, dRw, lw = ref.mf_sgd_block(L, R, D, mask, 0.05, 1e-4)
+    dLg, dRg, lg = mf_sgd_block(L, R, D, mask, 0.05, 1e-4, interpret=True)
+    np.testing.assert_allclose(np.asarray(dLg), np.asarray(dLw), atol=1e-3)
+    np.testing.assert_allclose(np.asarray(dRg), np.asarray(dRw), atol=1e-3)
+
+
+def test_ops_backend_dispatch():
+    ops.set_backend("ref")
+    try:
+        q, k, v, qp, kp = _attn_inputs(1, 32, 32, 2, 2, 16, 16, jnp.float32)
+        out = ops.attention(q, k, v, scale=0.25, q_pos=qp, kv_pos=kp)
+        assert out.shape == (1, 32, 2, 16)
+        ops.set_backend("pallas_interpret")
+        out2 = ops.attention(q, k, v, scale=0.25, q_pos=qp, kv_pos=kp)
+        np.testing.assert_allclose(np.asarray(out2), np.asarray(out),
+                                   atol=3e-5)
+    finally:
+        ops.set_backend("auto")
+
+
+def test_static_causal_prefix_matches_dense():
+    """§Perf static-causal path: identical numerics, fewer KV blocks."""
+    q, k, v, qp, kp = _attn_inputs(2, 96, 96, 4, 2, 32, 32, jnp.float32)
+    for win in (None, 24):
+        want = ref.attention_dense(q, k, v, scale=0.2, q_pos=qp, kv_pos=kp,
+                                   window=win)
+        got = ref.attention(q, k, v, scale=0.2, q_pos=qp, kv_pos=kp,
+                            window=win, kv_chunk=16, q_chunk=32,
+                            assume_prefix=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=3e-5)
+
+
+def test_static_causal_flag_dispatch():
+    from repro.kernels import ops as _ops
+    q, k, v, qp, kp = _attn_inputs(1, 64, 64, 2, 2, 16, 16, jnp.float32)
+    base = _ops.attention(q, k, v, scale=0.25, q_pos=qp, kv_pos=kp,
+                          q_chunk=32, kv_chunk=32)
+    _ops.set_flag("static_causal", True)
+    try:
+        opt = _ops.attention(q, k, v, scale=0.25, q_pos=qp, kv_pos=kp,
+                             q_chunk=32, kv_chunk=32)
+    finally:
+        _ops.set_flag("static_causal", False)
+    np.testing.assert_allclose(np.asarray(opt), np.asarray(base), atol=3e-5)
+
+
+def test_flash_attention_decode_ring_buffer_layout():
+    """Serving path on TPU: single-token decode against a ring-buffer KV
+    cache.  Slot validity/window are encoded in kv_pos (-1 = empty slot);
+    the flash kernel must match the dense decode reference exactly."""
+    B, C, H, Hkv, D = 2, 64, 4, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (B, 1, H, D))
+    k = jax.random.normal(ks[1], (B, C, Hkv, D))
+    v = jax.random.normal(ks[2], (B, C, Hkv, D))
+    pos = jnp.array([37, 80])                       # wrapped for sample 1
+    # ring-buffer slot positions (as computed by gqa_decode)
+    slots = jnp.arange(C)[None, :]
+    wraps = (pos[:, None] - slots + C) // C
+    slot_pos = slots + wraps * C - C
+    slot_pos = jnp.where(slot_pos == pos[:, None], pos[:, None], slot_pos)
+    valid = (slot_pos >= 0) & (slot_pos <= pos[:, None])
+    kv_pos = jnp.where(valid, slot_pos, -1)
+    qp = pos[:, None]
+
+    want = ref.attention_dense(q, k, v, scale=0.18, q_pos=qp, kv_pos=kv_pos,
+                               causal=True)
+    got = flash_attention(q, k, v, scale=0.18, q_pos=qp, kv_pos=kv_pos,
+                          causal=True, block_q=8, block_k=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-5)
+    # and with a sliding window shorter than the filled cache
+    want_w = ref.attention_dense(q, k, v, scale=0.18, q_pos=qp,
+                                 kv_pos=kv_pos, causal=True, window=24)
+    got_w = flash_attention(q, k, v, scale=0.18, q_pos=qp, kv_pos=kv_pos,
+                            causal=True, window=24, block_q=8, block_k=32,
+                            interpret=True)
+    np.testing.assert_allclose(np.asarray(got_w), np.asarray(want_w),
+                               atol=3e-5)

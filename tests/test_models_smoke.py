@@ -1,0 +1,108 @@
+"""Per-assigned-architecture smoke tests (reduced configs, CPU):
+forward shapes + no NaNs + one train step (deliverable f)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, get_smoke_config
+from repro.data.synthetic import modality_stub
+from repro.models.registry import build_model
+from repro.optim.optimizers import adamw
+from repro.psdist.grad_sync import GradSync
+from repro.train.state import init_state, make_train_step
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_smoke_config(arch)
+    assert cfg.n_layers <= 10 and cfg.d_model <= 512
+    if cfg.moe:
+        assert cfg.moe.n_experts <= 4
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    B, S = 2, 64
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                cfg.vocab_size)
+    batch = {"tokens": tokens, **modality_stub(cfg, B)}
+
+    logits, aux = jax.jit(model.forward)(params, batch)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+    opt = adamw(1e-3)
+    sync = GradSync("bsp")
+    state = init_state(model, opt, sync, jax.random.PRNGKey(2))
+    step = jax.jit(make_train_step(model, opt, sync))
+    state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    state, m2 = step(state, batch)
+    assert float(m2["loss"]) < float(metrics["loss"]) + 1.0  # sane scale
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_matches_assignment(arch):
+    """The FULL configs carry the exact assigned hyperparameters."""
+    cfg = get_config(arch)
+    expected = {
+        "whisper-medium": dict(n_layers=24, d_model=1024, vocab_size=51865),
+        "qwen3-4b": dict(n_layers=36, d_model=2560, d_ff=9728,
+                         vocab_size=151936),
+        "deepseek-v2-lite-16b": dict(n_layers=27, d_model=2048,
+                                     vocab_size=102400),
+        "jamba-1.5-large-398b": dict(n_layers=72, d_model=8192, d_ff=24576,
+                                     vocab_size=65536),
+        "llama-3.2-vision-11b": dict(n_layers=40, d_model=4096, d_ff=14336,
+                                     vocab_size=128256),
+        "stablelm-3b": dict(n_layers=32, d_model=2560, d_ff=6912,
+                            vocab_size=50304),
+        "mamba2-130m": dict(n_layers=24, d_model=768, vocab_size=50280),
+        "qwen3-moe-30b-a3b": dict(n_layers=48, d_model=2048,
+                                  vocab_size=151936),
+        "llama3-8b": dict(n_layers=32, d_model=4096, d_ff=14336,
+                          vocab_size=128256),
+        "qwen3-0.6b": dict(n_layers=28, d_model=1024, d_ff=3072,
+                           vocab_size=151936),
+    }[arch]
+    for k, v in expected.items():
+        assert getattr(cfg, k) == v, (arch, k, getattr(cfg, k), v)
+    assert cfg.source
+
+
+def test_assigned_attention_settings():
+    c = get_config("qwen3-4b")
+    assert c.attn.n_heads == 32 and c.attn.n_kv_heads == 8 and c.attn.qk_norm
+    c = get_config("deepseek-v2-lite-16b")
+    assert c.attn.mla is not None and c.attn.mla.kv_lora_rank == 512
+    assert c.moe.n_experts == 64 and c.moe.top_k == 6 and c.moe.n_shared == 2
+    c = get_config("jamba-1.5-large-398b")
+    assert c.attn_every == 8 and c.moe.n_experts == 16 and c.moe.top_k == 2
+    c = get_config("qwen3-moe-30b-a3b")
+    assert c.moe.n_experts == 128 and c.moe.top_k == 8
+    c = get_config("mamba2-130m")
+    assert c.attn is None and c.mamba.d_state == 128
+    c = get_config("llama-3.2-vision-11b")
+    assert c.vision.cross_attn_every == 5
+    c = get_config("whisper-medium")
+    assert c.encoder.n_layers == 24 and c.encoder.n_ctx == 1500
+
+
+def test_param_counts_match_scale():
+    """Full-config parameter counts land near the advertised sizes."""
+    expect = {
+        "qwen3-0.6b": (0.4e9, 0.9e9),
+        "llama3-8b": (7e9, 9e9),
+        "qwen3-4b": (3.3e9, 5e9),
+        "deepseek-v2-lite-16b": (13e9, 18e9),
+        "qwen3-moe-30b-a3b": (28e9, 33e9),
+        "jamba-1.5-large-398b": (370e9, 420e9),
+        "llama-3.2-vision-11b": (9e9, 12e9),
+        "mamba2-130m": (0.1e9, 0.2e9),
+        "stablelm-3b": (2.5e9, 4e9),
+        "whisper-medium": (0.6e9, 0.95e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = build_model(get_config(arch)).n_params
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B not in [{lo/1e9}, {hi/1e9}]"
