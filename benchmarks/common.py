@@ -32,3 +32,19 @@ def save_json(name: str, payload: dict):
     os.makedirs(RESULTS_DIR, exist_ok=True)
     with open(os.path.join(RESULTS_DIR, f"{name}.json"), "w") as f:
         json.dump(payload, f, indent=1, default=float)
+
+
+def us_per_config(res) -> float:
+    """Steady-state execution us attributed to one (config, seed) point of a
+    `core.sweep.SweepResult` (compile time is reported separately)."""
+    t = res.t_exec_s if res.t_exec_s is not None else res.t_first_s
+    return float(t * 1e6 / max(1, len(res.configs) * len(res.seeds)))
+
+
+def sweep_meta(res) -> dict:
+    """Compile-count / timing evidence of a sweep, for the JSON artifacts."""
+    return {"n_configs": len(res.configs), "n_seeds": len(res.seeds),
+            "n_compiles": res.n_compiles, "t_first_s": res.t_first_s,
+            "t_exec_s": res.t_exec_s,
+            "families": {"/".join(map(str, k)): v
+                         for k, v in res.families.items()}}

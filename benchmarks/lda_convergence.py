@@ -1,31 +1,34 @@
-"""Paper Fig 2 (LDA): predictive NLL vs iteration and vs modeled time."""
+"""Paper Fig 2 (LDA): predictive NLL vs iteration and vs modeled time.
+
+The three consistency models run through the batched sweep engine (one
+compile per model family).
+"""
 from __future__ import annotations
 
-import jax
 import numpy as np
 
 from repro.apps.lda import LDAConfig, make_lda_app
-from repro.core import bsp, essp, simulate, ssp
+from repro.core import bsp, essp, ssp, sweep
 from repro.core.timemodel import TimeModel
 
-from .common import emit, save_json, timed
+from .common import emit, save_json, sweep_meta, us_per_config
 
 
 def run(T: int = 80, s: int = 5, seed: int = 0):
     app = make_lda_app(LDAConfig())
     tm = TimeModel(t_comp=0.2, bytes_per_channel=2e6)   # Gibbs clocks cost more
-    out = {"time_model": tm.__dict__}
-    for name, cfg, kind in [("bsp", bsp(), "bsp"), (f"ssp{s}", ssp(s), "ssp"),
-                            (f"essp{s}", essp(s), "essp")]:
-        fn = jax.jit(lambda c=cfg: simulate(app, c, T, seed=seed))
-        us = timed(fn, warmup=1, iters=1)
-        tr = fn()
+    named = [("bsp", bsp(), "bsp"), (f"ssp{s}", ssp(s), "ssp"),
+             (f"essp{s}", essp(s), "essp")]
+    res = sweep(app, [c for _, c, _ in named], T, seeds=[seed], timeit=True)
+    us = us_per_config(res)
+    out = {"time_model": tm.__dict__, "sweep": sweep_meta(res)}
+    for i, (name, _, kind) in enumerate(named):
+        tr = res.trace(i)
         nll = np.asarray(tr.loss_ref)
         wall = tm.wall_time(tr, kind)
         out[name] = {"nll": nll.tolist(), "wall_s": wall.tolist(), "us": us}
         emit(f"lda_convergence/{name}", us, f"nll_T={nll[-1]:.4f}")
 
-    tail = slice(T // 2, None)
     m = {n: float(np.mean(out[n]["nll"][T // 2:]))
          for n in ("bsp", f"ssp{s}", f"essp{s}")}
     out["claim_C2_lda"] = {

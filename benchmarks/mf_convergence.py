@@ -2,29 +2,30 @@
 
 The time axis uses the parametric TimeModel (1 GbE-class constants, stated
 in the output) — C2: ESSP >= SSP convergence per clock *and* per second.
+The three consistency models run through the batched sweep engine (one
+compile per model family).
 """
 from __future__ import annotations
 
-import jax
 import numpy as np
 
 from repro.apps.matfact import MFConfig, make_mf_app
-from repro.core import bsp, essp, simulate, ssp
+from repro.core import bsp, essp, ssp, sweep
 from repro.core.timemodel import TimeModel
 
-from .common import emit, save_json, timed
+from .common import emit, save_json, sweep_meta, us_per_config
 
 
 def run(T: int = 300, s: int = 5, seed: int = 0):
     app = make_mf_app(MFConfig())
     tm = TimeModel()
-    out = {"time_model": tm.__dict__}
-    for name, cfg, tm_kind in [("bsp", bsp(), "bsp"),
-                               (f"ssp{s}", ssp(s), "ssp"),
-                               (f"essp{s}", essp(s), "essp")]:
-        fn = jax.jit(lambda c=cfg: simulate(app, c, T, seed=seed))
-        us = timed(fn, warmup=1, iters=1)
-        tr = fn()
+    named = [("bsp", bsp(), "bsp"), (f"ssp{s}", ssp(s), "ssp"),
+             (f"essp{s}", essp(s), "essp")]
+    res = sweep(app, [c for _, c, _ in named], T, seeds=[seed], timeit=True)
+    us = us_per_config(res)
+    out = {"time_model": tm.__dict__, "sweep": sweep_meta(res)}
+    for i, (name, _, tm_kind) in enumerate(named):
+        tr = res.trace(i)
         loss = np.asarray(tr.loss_ref)
         wall = tm.wall_time(tr, tm_kind)
         out[name] = {"loss": loss.tolist(), "wall_s": wall.tolist(),

@@ -3,40 +3,44 @@
 With an aggressive step size, lazy SSP becomes unstable/diverges at high
 staleness (staleness effectively amplifies the step), while ESSP's
 concentrated staleness profile keeps convergence stable across all s.
+
+The full (model x staleness) grid runs through the sweep engine: one
+compiled program per model family (SSP and ESSP), with the staleness bound
+a traced value rather than a recompile.
 """
 from __future__ import annotations
 
-import dataclasses
-
-import jax
 import numpy as np
 
 from repro.apps.matfact import MFConfig, make_mf_app
-from repro.core import essp, simulate, ssp
+from repro.core import essp, ssp, sweep
 
-from .common import emit, save_json, timed
+from .common import emit, save_json, sweep_meta, us_per_config
+
+STALENESS_GRID = (0, 3, 7, 15)
 
 
 def run(T: int = 200, seed: int = 0):
     # "step size chosen large while still converging with staleness 0"
     cfg_mf = MFConfig(lr=1.4, lr_decay=True)
     app = make_mf_app(cfg_mf)
-    out = {"lr": cfg_mf.lr, "ssp": {}, "essp": {}}
-    for s in (0, 3, 7, 15):
-        for name, mk in (("ssp", ssp), ("essp", essp)):
-            c = mk(s) if s > 0 else mk(0)
-            fn = jax.jit(lambda cc=c: simulate(app, cc, T, seed=seed))
-            us = timed(fn, warmup=1, iters=1)
-            tr = fn()
-            loss = np.asarray(tr.loss_ref)
-            final = float(np.mean(loss[-20:]))
-            # oscillation measure over the tail ("shaky" convergence)
-            shake = float(np.std(np.diff(loss[T // 2:])))
-            diverged = bool(~np.isfinite(loss).all() or final > loss[0])
-            out[name][s] = {"final": final, "shake": shake,
-                            "diverged": diverged}
-            emit(f"robustness/{name}_s{s}", us,
-                 f"final={final:.4f};shake={shake:.5f};div={diverged}")
+    named = [(name, s, mk(s))
+             for name, mk in (("ssp", ssp), ("essp", essp))
+             for s in STALENESS_GRID]
+    res = sweep(app, [c for _, _, c in named], T, seeds=[seed], timeit=True)
+    us = us_per_config(res)
+    out = {"lr": cfg_mf.lr, "ssp": {}, "essp": {}, "sweep": sweep_meta(res)}
+    for i, (name, s, _) in enumerate(named):
+        tr = res.trace(i)
+        loss = np.asarray(tr.loss_ref)
+        final = float(np.mean(loss[-20:]))
+        # oscillation measure over the tail ("shaky" convergence)
+        shake = float(np.std(np.diff(loss[T // 2:])))
+        diverged = bool(~np.isfinite(loss).all() or final > loss[0])
+        out[name][s] = {"final": final, "shake": shake,
+                        "diverged": diverged}
+        emit(f"robustness/{name}_s{s}", us,
+             f"final={final:.4f};shake={shake:.5f};div={diverged}")
     hi = max(out["ssp"].keys())
     out["claim_C3"] = {
         "ssp_high_s_worse": bool(

@@ -14,7 +14,8 @@ def main() -> None:
     t0 = time.time()
     from . import (comm_comp, kernels_bench, lda_convergence,
                    lm_consistency, mf_convergence, robustness,
-                   staleness_profile, stragglers, theory_validation)
+                   staleness_profile, stragglers, sweep_bench,
+                   theory_validation)
 
     claims = {}
     print("name,us_per_call,derived")
@@ -28,6 +29,9 @@ def main() -> None:
     theory = theory_validation.run()
     claims["C4_variance"] = theory["variance"]
     claims["C5_vap"] = theory["vap"]
+    sb = sweep_bench.run()
+    claims["sweep_engine"] = {"speedup": round(sb["speedup"], 1),
+                              "pass_3x": sb["pass_3x"]}
     kernels_bench.run()
 
     print("\n=== paper-fidelity claim summary ===")

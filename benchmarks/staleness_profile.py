@@ -3,28 +3,26 @@
 Runs MF on the PS simulator under BSP / SSP(s) / ESSP(s) and reports the
 normalized histogram of clock differentials; the paper's claim C1 is that
 SSP is ~uniform over the window while ESSP concentrates at -1.
+
+All three configs run through the batched sweep engine: one compiled
+program per consistency-model family instead of one per data point.
 """
 from __future__ import annotations
 
-import time
-
-import jax
-import numpy as np
-
 from repro.apps.matfact import MFConfig, make_mf_app
-from repro.core import bsp, essp, simulate, ssp, staleness
+from repro.core import bsp, essp, ssp, staleness, sweep
 
-from .common import emit, save_json, timed
+from .common import emit, save_json, sweep_meta, us_per_config
 
 
 def run(T: int = 200, s: int = 5, seed: int = 0):
     app = make_mf_app(MFConfig())
-    out = {}
-    for name, cfg in [("bsp", bsp()), (f"ssp{s}", ssp(s)),
-                      (f"essp{s}", essp(s))]:
-        fn = jax.jit(lambda c=cfg: simulate(app, c, T, seed=seed))
-        us = timed(fn, warmup=1, iters=1)
-        tr = fn()
+    named = [("bsp", bsp()), (f"ssp{s}", ssp(s)), (f"essp{s}", essp(s))]
+    res = sweep(app, [c for _, c in named], T, seeds=[seed], timeit=True)
+    us = us_per_config(res)
+    out = {"sweep": sweep_meta(res)}
+    for i, (name, _) in enumerate(named):
+        tr = res.trace(i)
         bins, probs = staleness.histogram(tr, lo=-(s + 2))
         summ = staleness.summary(tr)
         out[name] = {"bins": bins.tolist(), "probs": probs.tolist(),

@@ -6,43 +6,45 @@ With n slow producers (pushing at 25% of the nominal rate):
 - lazy SSP's forced refreshes spike (its reads hit the bound constantly);
 - ESSP degrades gracefully: staleness of the slow channels grows toward the
   bound but everyone else stays fresh, and convergence barely moves.
+
+The (model x n_slow) grid runs through the sweep engine — straggler count
+and rate are traced knobs, so each model family compiles once.
 """
 from __future__ import annotations
 
-import dataclasses
-
-import jax
 import numpy as np
 
 from repro.apps.matfact import MFConfig, make_mf_app
-from repro.core import essp, simulate, ssp, staleness
+from repro.core import essp, ssp, staleness, sweep
 from repro.core.timemodel import TimeModel
 
-from .common import emit, save_json, timed
+from .common import emit, save_json, sweep_meta, us_per_config
 
 
 def run(T: int = 150, s: int = 5, seed: int = 0):
     app = make_mf_app(MFConfig())
     tm = TimeModel()
-    out = {}
-    for n_slow in (0, 1, 2):
-        for name, mk, kind in (("ssp", ssp, "ssp"), ("essp", essp, "essp")):
-            cfg = mk(s).replace(straggler_workers=n_slow,
-                                straggler_rate=0.25)
-            fn = jax.jit(lambda c=cfg: simulate(app, c, T, seed=seed))
-            us = timed(fn, warmup=1, iters=1)
-            tr = fn()
-            loss = float(np.asarray(tr.loss_ref)[-10:].mean())
-            forced = float(np.asarray(tr.forced).sum() / T)
-            summ = staleness.summary(tr)
-            br = tm.breakdown(tr, kind)
-            key = f"{name}_slow{n_slow}"
-            out[key] = {"final_loss": loss, "forced_per_clock": forced,
-                        "stale_mean": summ["mean"], "stale_min": summ["min"],
-                        "comm_frac": br["comm_frac"]}
-            emit(f"stragglers/{key}", us,
-                 f"loss={loss:.4f};forced={forced:.1f};"
-                 f"stale_mean={summ['mean']:.2f}")
+    named = [(name, kind, n_slow,
+              mk(s).replace(straggler_workers=n_slow, straggler_rate=0.25))
+             for name, mk, kind in (("ssp", ssp, "ssp"),
+                                    ("essp", essp, "essp"))
+             for n_slow in (0, 1, 2)]
+    res = sweep(app, [c for *_, c in named], T, seeds=[seed], timeit=True)
+    us = us_per_config(res)
+    out = {"sweep": sweep_meta(res)}
+    for i, (name, kind, n_slow, _) in enumerate(named):
+        tr = res.trace(i)
+        loss = float(np.asarray(tr.loss_ref)[-10:].mean())
+        forced = float(np.asarray(tr.forced).sum() / T)
+        summ = staleness.summary(tr)
+        br = tm.breakdown(tr, kind)
+        key = f"{name}_slow{n_slow}"
+        out[key] = {"final_loss": loss, "forced_per_clock": forced,
+                    "stale_mean": summ["mean"], "stale_min": summ["min"],
+                    "comm_frac": br["comm_frac"]}
+        emit(f"stragglers/{key}", us,
+             f"loss={loss:.4f};forced={forced:.1f};"
+             f"stale_mean={summ['mean']:.2f}")
     out["claim"] = {
         # ESSP's convergence is robust to stragglers
         "essp_loss_stable": bool(out["essp_slow2"]["final_loss"]

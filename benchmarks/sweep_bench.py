@@ -1,0 +1,107 @@
+"""Batched sweep engine vs the sequential per-config loop (compile counts +
+wall clock).
+
+The seed implementation ran every paper figure as a Python loop of
+``jax.jit(lambda: simulate(app, cfg, T))()`` — one trace + XLA compile per
+configuration, because the numeric knobs were baked into the graph as
+constants.  The sweep engine compiles one vmapped program per consistency
+family and feeds the whole (config × seed) grid through it.
+
+This benchmark measures both paths on the same staleness × seed grid and
+reports compile counts (via trace counters) and wall time.  Acceptance
+target: >= 3x wall-clock reduction on CPU.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import simulate, ssp, sweep
+from repro.core.ps import PSApp
+from repro.core.sweep import family_window, trace_count
+
+from .common import emit, save_json, sweep_meta
+
+
+def _quad_app(P: int = 8, d: int = 256, eta: float = 0.3) -> PSApp:
+    def worker_update(view, local, wid, clock, rng):
+        g = view + 0.05 * jax.random.normal(rng, view.shape)
+        step = eta / jnp.sqrt(1.0 + clock)
+        return -step * g / P, local
+
+    return PSApp(name="quad", dim=d, n_workers=P, x0=jnp.ones((d,)) * 2.0,
+                 local0={"_": jnp.zeros((P, 1))},
+                 worker_update=worker_update,
+                 loss=lambda x, l: jnp.sum(jnp.square(x)))
+
+
+def run(T: int = 100, n_seeds: int = 2, staleness_grid=tuple(range(12)),
+        seed0: int = 0):
+    app = _quad_app()
+    configs = [ssp(s) for s in staleness_grid]
+    seeds = np.arange(seed0, seed0 + n_seeds)
+    # Same harmonized ring window on both paths so the simulated physics
+    # (and compiled shapes) are identical; only the batching differs.
+    W = family_window(configs)
+
+    # -- sequential: one jit per config (the seed benchmark pattern) -------
+    seq_compiles = {"count": 0}
+
+    def run_one(cfg):
+        def fn(sd):
+            seq_compiles["count"] += 1
+            return simulate(app, cfg.replace(window=W), T, seed=sd)
+        return jax.jit(fn)
+
+    t0 = time.perf_counter()
+    seq_losses = []
+    for cfg in configs:
+        fn = run_one(cfg)
+        for sd in seeds:
+            tr = jax.block_until_ready(fn(jnp.uint32(sd)))
+            seq_losses.append(np.asarray(tr.loss_ref))
+    t_seq = time.perf_counter() - t0
+
+    # -- batched: one compiled program for the whole grid ------------------
+    n_before = trace_count()
+    t0 = time.perf_counter()
+    res = sweep(app, configs, T, seeds=seeds)
+    t_batched = time.perf_counter() - t0
+    batched_compiles = trace_count() - n_before
+
+    # per-config traces must match the sequential path
+    max_err = 0.0
+    for i in range(len(configs)):
+        for j in range(n_seeds):
+            got = np.asarray(res.trace(i, j).loss_ref)
+            want = seq_losses[i * n_seeds + j]
+            max_err = max(max_err, float(np.abs(got - want).max()))
+    assert max_err < 1e-5, f"batched trace diverged: {max_err}"
+
+    speedup = t_seq / max(t_batched, 1e-9)
+    out = {
+        "n_configs": len(configs), "n_seeds": n_seeds, "T": T,
+        "sequential": {"wall_s": t_seq, "compiles": seq_compiles["count"]},
+        "batched": {"wall_s": t_batched, "compiles": batched_compiles,
+                    **sweep_meta(res)},
+        "speedup": speedup, "max_trace_err": max_err,
+        "pass_3x": bool(speedup >= 3.0),
+    }
+    emit("sweep_bench/sequential", t_seq * 1e6,
+         f"compiles={seq_compiles['count']}")
+    emit("sweep_bench/batched", t_batched * 1e6,
+         f"compiles={batched_compiles}")
+    emit("sweep_bench/speedup", 0.0,
+         f"x{speedup:.1f};max_err={max_err:.1e}")
+    save_json("sweep_bench", out)
+    return out
+
+
+if __name__ == "__main__":
+    r = run()
+    print({k: r[k] for k in ("speedup", "pass_3x")},
+          r["sequential"], {k: r["batched"][k]
+                            for k in ("wall_s", "compiles")})

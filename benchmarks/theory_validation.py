@@ -1,16 +1,21 @@
 """Theorem-level validation (C4/C5): regret decay, decreasing variance,
-VAP bound enforcement + sync cost, Theorem 5 moment sensitivity."""
+VAP bound enforcement + sync cost, Theorem 5 moment sensitivity.
+
+Every multi-config measurement (regret models, Theorem 5 staleness moments,
+the VAP v0 grid) runs through the batched sweep engine — the VAP grid in
+particular is one compiled program for all three value bounds, where the
+seed implementation recompiled per v0.
+"""
 from __future__ import annotations
 
-import jax
 import numpy as np
 
 from repro.apps.matfact import MFConfig, make_mf_app
-from repro.core import essp, simulate, ssp, vap
+from repro.core import essp, ssp, sweep, vap
 from repro.core import staleness as stal
 from repro.core import theory
 
-from .common import emit, save_json, timed
+from .common import emit, save_json, sweep_meta, us_per_config
 
 
 def _quadratic_app(n_workers=8, dim=32, eta=0.4, noise=0.3):
@@ -36,16 +41,17 @@ def run(seed: int = 0):
     app = make_mf_app(MFConfig())
 
     # Theorem 1/3: regret decays ~ 1/sqrt(T)
-    for name, cfg in (("essp3", essp(3)), ("vap", vap(0.5, staleness=6))):
-        fn = jax.jit(lambda c=cfg: simulate(app, c, 300, seed=seed))
-        us = timed(fn, warmup=1, iters=1)
-        tr = fn()
-        lv = np.asarray(tr.loss_view)
+    regret_named = [("essp3", essp(3)), ("vap", vap(0.5, staleness=6))]
+    res_r = sweep(app, [c for _, c in regret_named], 300, seeds=[seed],
+                  timeit=True)
+    us_r = us_per_config(res_r)
+    for i, (name, _) in enumerate(regret_named):
+        lv = np.asarray(res_r.trace(i).loss_view)
         curve = theory.regret_curve(lv, loss_star=float(lv.min()))
         expo = theory.sqrt_decay_fit(curve, skip=20)
         out[f"regret_{name}"] = {"exponent": expo,
                                  "final_regret": float(curve[-1])}
-        emit(f"theory/regret_{name}", us, f"fit_exponent={expo:.2f}")
+        emit(f"theory/regret_{name}", us_r, f"fit_exponent={expo:.2f}")
 
     # Theorem 2/6: variance decreasing; ESSP <= SSP.
     # Measured on a CONVEX objective (noisy quadratic) — the theorem's
@@ -70,10 +76,9 @@ def run(seed: int = 0):
          f"ssp_late={out['variance']['ssp_late']:.3e}")
 
     # Theorem 5: measured staleness moments -> bound ingredients
-    tr_ssp = jax.jit(lambda: simulate(app, ssp(5), 200, seed=seed))()
-    tr_essp = jax.jit(lambda: simulate(app, essp(5), 200, seed=seed))()
-    for name, tr in (("ssp5", tr_ssp), ("essp5", tr_essp)):
-        s = stal.summary(tr)
+    res_t = sweep(app, [ssp(5), essp(5)], 200, seeds=[seed])
+    for i, name in enumerate(("ssp5", "essp5")):
+        s = stal.summary(res_t.trace(i))
         mu_g, sd_g = abs(s["mean"]) - 1, s["std"]   # staleness beyond -1
         b = theory.theorem5_bound(T=200, s=5, P=8, eta=0.5, L=1.0, F=1.0,
                                   mu_gamma=max(mu_g, 0), sigma_gamma=sd_g,
@@ -84,11 +89,15 @@ def run(seed: int = 0):
     out["thm5_essp_tighter"] = bool(
         out["thm5_essp5"]["threshold"] < out["thm5_ssp5"]["threshold"])
 
-    # VAP (C5): bound holds; sync cost explodes as v0 -> 0
+    # VAP (C5): bound holds; sync cost explodes as v0 -> 0.  One compiled
+    # program for the whole v0 grid (v0 is a traced knob).
+    v0_grid = (1.0, 0.1, 0.01)
+    res_v = sweep(app, [vap(v, staleness=6) for v in v0_grid], 100,
+                  seeds=[seed])
+    out["vap_sweep"] = sweep_meta(res_v)
     forced = {}
-    for v0 in (1.0, 0.1, 0.01):
-        tr = jax.jit(lambda v=v0: simulate(app, vap(v, staleness=6), 100,
-                                           seed=seed))()
+    for i, v0 in enumerate(v0_grid):
+        tr = res_v.trace(i)
         it = np.asarray(tr.intransit_inf)
         vt = v0 / np.sqrt(np.arange(1, 101))
         forced[v0] = {"forced_per_clock": float(np.asarray(tr.forced).sum()

@@ -1,8 +1,10 @@
 """The paper's contribution: PS consistency models + ESSPTable simulator."""
 from .consistency import ConsistencyConfig, bsp, ssp, essp, vap, MODELS
 from .ps import PSApp, Trace, simulate, simulate_jit
+from .sweep import SweepResult, stack_configs, sweep
 from . import staleness, theory, timemodel
 
 __all__ = ["ConsistencyConfig", "bsp", "ssp", "essp", "vap", "MODELS",
            "PSApp", "Trace", "simulate", "simulate_jit",
+           "SweepResult", "stack_configs", "sweep",
            "staleness", "theory", "timemodel"]

@@ -22,13 +22,48 @@ view contains at each clock.  Following the paper we implement:
              has global knowledge; the paper's point that this requires
              strong-consistency-grade synchronization shows up as the forced
              synchronous deliveries we count in the time model.
+
+Sweep support
+-------------
+``ConsistencyConfig`` is registered as a JAX pytree whose *numeric* knobs
+(``staleness``, ``v0``, ``push_prob``, ``straggler_prob``,
+``straggler_workers``, ``straggler_rate``) are data leaves, while the
+*structural* knobs (``model``, ``read_my_writes``, ``window``,
+``max_extra_delay``) are static metadata.  The numeric knobs may therefore
+hold traced values or batched arrays: ``core.sweep`` vmaps ``simulate`` over
+a whole config grid in one compiled XLA program instead of recompiling per
+configuration.  Structural knobs select Python-level control flow inside the
+simulator and must stay concrete; configs sharing them form one *family*
+(one compiled program per family).
+
+The ring-buffer size (``effective_window``) shapes the compiled program, so
+it must be static.  When ``staleness`` is traced/batched, set ``window``
+explicitly (``core.sweep`` does this automatically, harmonizing a family to
+its maximum window — results are unchanged for bounded models since updates
+older than the bound are visible to every reader anyway).
 """
 from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
 
+import jax
+import numpy as np
+
 MODELS = ("bsp", "ssp", "essp", "async", "vap")
+
+# Numeric knobs: pytree data leaves, traceable/batchable (see module doc).
+DATA_FIELDS = ("staleness", "v0", "push_prob", "straggler_prob",
+               "straggler_workers", "straggler_rate")
+# Structural knobs: static pytree metadata, baked into the compiled program.
+META_FIELDS = ("model", "read_my_writes", "window", "max_extra_delay")
+
+
+def _concrete(x) -> bool:
+    """True for plain Python/numpy scalars (validate eagerly); traced values
+    and arrays skip validation — ``core.sweep`` validates per-config up
+    front."""
+    return isinstance(x, (bool, int, float, np.integer, np.floating))
 
 
 @dataclass(frozen=True)
@@ -53,7 +88,8 @@ class ConsistencyConfig:
         the theory section of the paper does *not* assume it, so tests cover
         both).
       window: ring-buffer window override; defaults to ``staleness +
-        max_extra_delay + 2``.
+        max_extra_delay + 2``.  Must be set explicitly when ``staleness`` is
+        a traced value (the window shapes the compiled program).
       max_extra_delay: cap on delay beyond the eager path used to size the
         update window for unbounded models (async/vap).
     """
@@ -73,9 +109,9 @@ class ConsistencyConfig:
         if self.model not in MODELS:
             raise ValueError(f"unknown consistency model {self.model!r}; "
                              f"expected one of {MODELS}")
-        if self.staleness < 0:
+        if _concrete(self.staleness) and self.staleness < 0:
             raise ValueError("staleness must be >= 0")
-        if self.model == "vap" and self.v0 <= 0:
+        if self.model == "vap" and _concrete(self.v0) and self.v0 <= 0:
             raise ValueError("vap requires v0 > 0")
 
     @property
@@ -83,14 +119,40 @@ class ConsistencyConfig:
         """Size of the update ring buffer (clocks kept before folding)."""
         if self.window is not None:
             return self.window
+        if not _concrete(self.staleness):
+            raise ValueError(
+                "effective_window needs a concrete staleness; set `window` "
+                "explicitly when sweeping staleness as a traced value")
         if self.model == "bsp":
             return 2
         if self.model in ("async", "vap"):
             return self.staleness + self.max_extra_delay + 2
         return self.staleness + 2
 
+    @property
+    def family(self) -> tuple:
+        """Static structure shared by configs that can compile together once
+        their ring windows are harmonized (see ``core.sweep``).
+
+        For bounded models (bsp/ssp/essp) the window only affects float
+        summation order, so it is harmonizable and stays out of the key.
+        For unbounded models (async/vap) recycling a ring slot force-folds
+        undelivered updates into the globally visible base — the window is
+        part of the simulated physics — so it joins the key and configs
+        with different windows compile separately."""
+        key = (self.model, bool(self.read_my_writes),
+               int(self.max_extra_delay))
+        if self.model in ("async", "vap"):
+            key += (self.effective_window,)
+        return key
+
     def replace(self, **kw) -> "ConsistencyConfig":
         return dataclasses.replace(self, **kw)
+
+
+jax.tree_util.register_dataclass(
+    ConsistencyConfig, data_fields=list(DATA_FIELDS),
+    meta_fields=list(META_FIELDS))
 
 
 def bsp(**kw) -> ConsistencyConfig:

@@ -23,13 +23,16 @@ from .consistency import ConsistencyConfig
 
 
 def worker_rates(cfg: ConsistencyConfig, P: int) -> jax.Array:
-    """Per-producer delivery-rate multipliers in (0, 1]."""
-    n = min(getattr(cfg, "straggler_workers", 0), P)
+    """Per-producer delivery-rate multipliers in (0, 1].
+
+    ``straggler_workers`` / ``straggler_rate`` may be traced values (the
+    sweep engine vmaps over them), so the slow-producer prefix is selected
+    with a data-dependent ``where`` rather than Python slicing.
+    """
+    n = getattr(cfg, "straggler_workers", 0)
     rate = getattr(cfg, "straggler_rate", 1.0)
-    rates = jnp.ones((P,))
-    if n > 0:
-        rates = rates.at[:n].set(rate)
-    return rates
+    ids = jnp.arange(P)
+    return jnp.where(ids < n, jnp.asarray(rate, jnp.float32), 1.0)
 
 
 def delivery_matrix(rng, cfg: ConsistencyConfig, P: int) -> jax.Array:

@@ -32,6 +32,17 @@ would violate the staleness bound.  ESSP applies them eagerly.
 
 Everything (drift of staleness, forced synchronous fetches, update
 magnitudes, losses, per-worker views) is recorded per clock into a `Trace`.
+
+Hot path & sweeps
+-----------------
+The per-clock view materialization and the VAP suffix-aggregate norms go
+through ``kernels.ops`` (pure-jnp reference on CPU, Pallas kernels on
+TPU/interpret — see ``kernels/ps_view.py``).  The numeric knobs of
+``ConsistencyConfig`` (staleness, push_prob, v0, straggler_*) are consumed
+as *values*, never as Python control flow, so they may be traced arrays:
+``core.sweep`` vmaps ``simulate`` over an entire config grid × seed batch in
+one compiled program.  Only ``cfg.model``/``read_my_writes`` and the ring
+window select code structure and must be concrete.
 """
 from __future__ import annotations
 
@@ -41,6 +52,7 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
+from ..kernels import ops
 from .consistency import ConsistencyConfig
 from .delays import delivery_matrix
 
@@ -112,23 +124,16 @@ def simulate(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
                               in_axes=(0, 0, 0, None, 0))
     worker_ids = jnp.arange(P, dtype=jnp.int32)
 
-    def enforce_vap(c, cview, uring, uclock):
+    def enforce_vap(c, cview, norms):
         """Force delivery of oldest in-transit updates so that the
         per-producer aggregated in-transit update satisfies
         ``||.||_inf <= v_t`` (paper eq. 1, v_t = v0/sqrt(t+1)).
 
-        For each producer q we compute the norm of the suffix aggregate of
-        its newest ``k`` clocks, and keep in transit the largest suffix that
-        satisfies the bound; anything older is force-delivered.
+        ``norms[k, q]`` is the inf-norm of the suffix aggregate of producer
+        q's newest ``k`` clocks (kernels/ps_view.py); we keep in transit the
+        largest suffix that satisfies the bound and force-deliver the rest.
         """
         v_t = cfg.v0 / jnp.sqrt(c.astype(f32) + 1.0)
-        # S[k] = aggregate of the k newest clocks' updates, per producer.
-        suffix = [jnp.zeros((P, d), f32)]
-        for k in range(1, W + 1):
-            sel = (uclock == c - k).astype(f32)           # [W]
-            contrib = jnp.einsum("w,wpd->pd", sel, uring)
-            suffix.append(suffix[-1] + contrib)
-        norms = jnp.stack([jnp.max(jnp.abs(S), axis=-1) for S in suffix])  # [W+1, P]
         ok = norms <= v_t                                  # [W+1, P]
         ok = ok.at[0].set(True)                            # empty suffix always ok
         # Per (reader, producer) channel: keep the *longest* suffix k that
@@ -146,6 +151,11 @@ def simulate(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
         base, uring, uclock, cview, local, rng = carry
         rng, k_upd, k_net = jax.random.split(rng, 3)
 
+        # Per-producer suffix-aggregate inf-norms of the newest k clocks
+        # (kernels/ps_view.py): drives both VAP enforcement and the
+        # in-transit metric below.
+        norms = ops.vap_suffix_norms(uring, uclock, c)      # [W+1, P]
+
         # --- 1. pre-read consistency enforcement (blocking fetches) -------
         if cfg.model == "bsp":
             forced = cview < (c - 1)
@@ -158,7 +168,7 @@ def simulate(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
             forced = cview < (c - s - 1)
             cview = jnp.where(forced, c - 1, cview)
         elif cfg.model == "vap":
-            cview, forced = enforce_vap(c, cview, uring, uclock)
+            cview, forced = enforce_vap(c, cview, norms)
         else:  # async
             forced = jnp.zeros_like(cview, dtype=bool)
 
@@ -169,18 +179,15 @@ def simulate(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
         staleness = cview - c                               # [P, P]
 
         # VAP-condition metric: max over (reader, producer) channels of the
-        # inf-norm of the aggregated in-transit updates at read time.
-        valid = uclock[None, :, None] > -(10**8)
-        in_transit = (uclock[None, :, None] > cview[:, None, :]) & valid
-        agg = jnp.einsum("rwq,wqd->rqd", in_transit.astype(f32), uring)
-        intransit_inf = jnp.max(jnp.abs(agg))
+        # inf-norm of the aggregated in-transit updates at read time.  The
+        # channel (r, q) has exactly the newest `c - 1 - cview[r,q]` clocks
+        # of producer q in transit, so its norm is one gather from `norms`.
+        kcur = jnp.clip(c - 1 - cview, 0, W)                # [P(r), P(q)]
+        intransit_inf = jnp.max(norms[kcur, jnp.arange(P)[None, :]])
 
         # --- 2. materialize views ----------------------------------------
-        # mask[r, w, q] = slot w's clock is visible to reader r for prod. q
-        vis = (uclock[None, :, None] <= cview[:, None, :]) & \
-              (uclock[None, :, None] > -(10**8))
-        views = base[None, :] + jnp.einsum(
-            "rwq,wqd->rd", vis.astype(f32), uring)
+        # visibility mask x update ring -> per-reader views (Pallas on TPU)
+        views = ops.ring_view(base, uring, uclock, cview)
 
         # --- 3. worker computation ----------------------------------------
         upd_keys = jax.random.split(k_upd, P)

@@ -12,11 +12,8 @@ from __future__ import annotations
 
 import numpy as np
 
-import jax
-import jax.numpy as jnp
-
 from .consistency import ConsistencyConfig
-from .ps import PSApp, simulate
+from .ps import PSApp
 
 
 def regret_curve(loss_view: np.ndarray, loss_star: float) -> np.ndarray:
@@ -43,15 +40,14 @@ def variance_trace(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
                    n_seeds: int = 8) -> np.ndarray:
     """Var_t = Σ_i E[x̃_{t,i}²] − E[x̃_{t,i}]² across seeds (paper Thm 2/6).
 
-    Runs ``n_seeds`` independent simulations (vmapped) and returns the
-    summed component-wise variance of worker-0's view at every clock.
+    Runs ``n_seeds`` independent simulations (one compiled program via the
+    sweep engine) and returns the summed component-wise variance of
+    worker-0's view at every clock.
     """
-    def run(seed):
-        tr = simulate(app, cfg, n_clocks, seed=seed, record_views=True)
-        return tr.views0                                    # [T, d]
+    from .sweep import sweep
 
-    views = jax.jit(jax.vmap(run))(jnp.arange(n_seeds, dtype=jnp.uint32))
-    views = np.asarray(views, np.float64)                   # [S, T, d]
+    res = sweep(app, [cfg], n_clocks, seeds=n_seeds, record_views=True)
+    views = np.asarray(res.traces[0].views0, np.float64)    # [S, T, d]
     return views.var(axis=0).sum(axis=-1)                   # [T]
 
 

@@ -66,6 +66,30 @@ def attention(q, k, v, *, scale, q_pos, kv_pos, causal=True, window=None,
                          assume_prefix=_FLAGS["static_causal"])
 
 
+def ring_view(base, uring, uclock, cview):
+    """PS view materialization; see `ref.ring_view` for the contract."""
+    backend = get_backend()
+    if backend in ("pallas", "pallas_interpret"):
+        from . import ps_view
+        if ps_view.supported(uring):
+            return ps_view.ring_view(
+                base, uring, uclock, cview,
+                interpret=(backend == "pallas_interpret"))
+    return ref.ring_view(base, uring, uclock, cview)
+
+
+def vap_suffix_norms(uring, uclock, c):
+    """VAP suffix-aggregate inf-norms; see `ref.vap_suffix_norms`."""
+    backend = get_backend()
+    if backend in ("pallas", "pallas_interpret"):
+        from . import ps_view
+        if ps_view.supported(uring):
+            return ps_view.vap_suffix_norms(
+                uring, uclock, c,
+                interpret=(backend == "pallas_interpret"))
+    return ref.vap_suffix_norms(uring, uclock, c)
+
+
 def mf_sgd_block(L, R, D, mask, gamma, lam):
     backend = get_backend()
     if backend in ("pallas", "pallas_interpret"):

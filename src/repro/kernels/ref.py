@@ -146,6 +146,43 @@ def _attention_impl(q, k, v, *, scale, q_pos, kv_pos, causal, window,
 
 
 # ==========================================================================
+# PS simulator ring-buffer ops (core/ps.py per-clock hot path)
+# ==========================================================================
+RING_INVALID = -(10**8)   # uclock values below this mark empty ring slots
+
+
+def ring_view(base, uring, uclock, cview):
+    """Materialize per-reader parameter views from the update ring.
+
+    base [d], uring [W,P,d] (slot, producer, dim), uclock [W] (clock stored
+    in each slot; < RING_INVALID when empty), cview [P,P] (reader, producer)
+    visibility clocks.  Returns views [P,d]:
+
+        view[r] = base + Σ_{w,q : uclock[w] <= cview[r,q], slot valid} uring[w,q]
+    """
+    valid = uclock > RING_INVALID
+    vis = (uclock[None, :, None] <= cview[:, None, :]) & valid[None, :, None]
+    return base[None, :] + jnp.einsum("rwq,wqd->rd", vis.astype(uring.dtype),
+                                      uring)
+
+
+def vap_suffix_norms(uring, uclock, c):
+    """Inf-norms of per-producer suffix aggregates of the newest k clocks.
+
+    Returns norms [W+1, P] with norms[k, q] = || Σ_{j=1..k} u_q(c-j) ||_inf
+    (norms[0] = 0: the empty suffix).  This is the quantity VAP bounds by
+    v_t, and the one-gather source of the in-transit metric in `ps.py`.
+    """
+    W, P, _ = uring.shape
+    ks = jnp.arange(1, W + 1, dtype=uclock.dtype)
+    sel = (uclock[None, :] == (c - ks)[:, None]).astype(uring.dtype)  # [k,w]
+    contrib = jnp.einsum("kw,wqd->kqd", sel, uring)
+    suffix = jnp.cumsum(contrib, axis=0)
+    norms = jnp.max(jnp.abs(suffix), axis=-1)                         # [W,P]
+    return jnp.concatenate([jnp.zeros((1, P), norms.dtype), norms], axis=0)
+
+
+# ==========================================================================
 # MF-SGD block update (the paper's hot loop, dense-block form)
 # ==========================================================================
 def mf_sgd_block(L, R, D, mask, gamma, lam):

@@ -111,7 +111,11 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
         pop_rules()
 
     mem = compiled.memory_analysis()
+    # jax 0.4.37 returns a single-element *list* of cost dicts (one per
+    # executable); older/newer versions return the dict directly.
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     stats = analyze(hlo)   # multiplicity-aware (scan bodies x trip count)
 

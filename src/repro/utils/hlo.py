@@ -127,13 +127,24 @@ def _split_computations(hlo: str) -> dict:
     return comps
 
 
+_OPERAND_NAME_RE = re.compile(r"%([\w.\-]+)\s*$")
+
+
 def _operand_names(line: str):
-    """Operand %names of an instruction (from the first paren group)."""
+    """Operand %names of an instruction (from the first paren group).
+
+    Depending on the XLA printer the operands appear bare (``%name``) or
+    typed (``f32[64,64]{1,0} %name`` — scheduled modules); take the
+    trailing %name either way."""
     m = _OPERANDS_RE.search(line)
     if not m:
         return []
-    return [t.strip().lstrip("%") for t in m.group(1).split(",")
-            if t.strip().startswith("%")]
+    names = []
+    for tok in m.group(1).split(","):
+        nm = _OPERAND_NAME_RE.search(tok.strip())
+        if nm:
+            names.append(nm.group(1))
+    return names
 
 
 def _dot_flops(line: str, result_str: str, table: dict) -> float:

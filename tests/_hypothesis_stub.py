@@ -1,0 +1,85 @@
+"""Minimal deterministic stand-in for `hypothesis`, used only when the real
+package is unavailable (offline containers).  CI installs the real one via
+``pip install -e .[test]``; this stub keeps the property tests *collectable
+and meaningful* offline by replaying a fixed pseudo-random sample of each
+strategy (``max_examples`` draws, seeded once per test).
+
+Only the surface this repo uses is provided: ``given``, ``settings``, and
+``strategies.{integers,floats,booleans,sampled_from}``.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+
+DEFAULT_EXAMPLES = 10
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rnd: random.Random):
+        return self._draw(rnd)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda r: r.randint(min_value, max_value))
+
+
+def floats(min_value: float, max_value: float) -> _Strategy:
+    return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda r: r.random() < 0.5)
+
+
+def sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+    return _Strategy(lambda r: elements[r.randrange(len(elements))])
+
+
+def settings(max_examples: int = DEFAULT_EXAMPLES, deadline=None, **_kw):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strategies):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_stub_max_examples", DEFAULT_EXAMPLES)
+            rnd = random.Random(0)
+            for _ in range(n):
+                drawn = {k: s.draw(rnd) for k, s in strategies.items()}
+                fn(*args, **kwargs, **drawn)
+
+        # Hide the strategy-supplied parameters from pytest's fixture
+        # resolution (real hypothesis does the same).
+        sig = inspect.signature(fn)
+        params = [p for name, p in sig.parameters.items()
+                  if name not in strategies]
+        wrapper.__signature__ = sig.replace(parameters=params)
+        return wrapper
+    return deco
+
+
+def install() -> None:
+    """Register this stub as the importable `hypothesis` package."""
+    mod = types.ModuleType("hypothesis")
+    mod.__doc__ = __doc__
+    strat = types.ModuleType("hypothesis.strategies")
+    for fn in (integers, floats, booleans, sampled_from):
+        setattr(strat, fn.__name__, fn)
+    mod.given = given
+    mod.settings = settings
+    mod.strategies = strat
+    mod.__stub__ = True
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = strat

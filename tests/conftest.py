@@ -6,6 +6,16 @@ import sys
 os.environ.pop("XLA_FLAGS", None)
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    # Offline containers: fall back to the deterministic stub so the
+    # property tests still collect and run.  CI installs the real package
+    # (`pip install -e .[test]`).
+    import _hypothesis_stub
+    _hypothesis_stub.install()
 
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
