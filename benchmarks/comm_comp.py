@@ -8,16 +8,15 @@ from __future__ import annotations
 import jax
 import numpy as np
 
-from repro.apps.lda import LDAConfig, make_lda_app
+from repro.apps.lda import LDAConfig, lda_time_model, make_lda_app
 from repro.core import bsp, essp, simulate, ssp
-from repro.core.timemodel import TimeModel
 
 from .common import emit, save_json, timed
 
 
 def run(T: int = 60, seed: int = 0):
     app = make_lda_app(LDAConfig())
-    tm = TimeModel(t_comp=0.2, bytes_per_channel=2e6)
+    tm = lda_time_model()
     out = {"time_model": tm.__dict__}
     for s in (1, 3, 5):
         for name, cfg, kind in [(f"ssp{s}", ssp(s), "ssp"),

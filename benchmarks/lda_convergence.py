@@ -7,16 +7,15 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.apps.lda import LDAConfig, make_lda_app
+from repro.apps.lda import LDAConfig, lda_time_model, make_lda_app
 from repro.core import bsp, essp, ssp, sweep
-from repro.core.timemodel import TimeModel
 
 from .common import emit, save_json, sweep_meta, us_per_config
 
 
 def run(T: int = 80, s: int = 5, seed: int = 0):
     app = make_lda_app(LDAConfig())
-    tm = TimeModel(t_comp=0.2, bytes_per_channel=2e6)   # Gibbs clocks cost more
+    tm = lda_time_model()                      # Gibbs clocks cost more
     named = [("bsp", bsp(), "bsp"), (f"ssp{s}", ssp(s), "ssp"),
              (f"essp{s}", essp(s), "essp")]
     res = sweep(app, [c for _, c, _ in named], T, seeds=[seed], timeit=True)

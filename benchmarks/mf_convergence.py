@@ -9,16 +9,15 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.apps.matfact import MFConfig, make_mf_app
+from repro.apps.matfact import MFConfig, make_mf_app, mf_time_model
 from repro.core import bsp, essp, ssp, sweep
-from repro.core.timemodel import TimeModel
 
 from .common import emit, save_json, sweep_meta, us_per_config
 
 
 def run(T: int = 300, s: int = 5, seed: int = 0):
     app = make_mf_app(MFConfig())
-    tm = TimeModel()
+    tm = mf_time_model()
     named = [("bsp", bsp(), "bsp"), (f"ssp{s}", ssp(s), "ssp"),
              (f"essp{s}", essp(s), "essp")]
     res = sweep(app, [c for _, c, _ in named], T, seeds=[seed], timeit=True)

@@ -12,9 +12,9 @@ import time
 
 def main() -> None:
     t0 = time.time()
-    from . import (comm_comp, kernels_bench, lda_convergence,
-                   lm_consistency, mf_convergence, robustness,
-                   staleness_profile, stragglers, sweep_bench,
+    from . import (autotune_bench, comm_comp, kernels_bench,
+                   lda_convergence, lm_consistency, mf_convergence,
+                   robustness, staleness_profile, stragglers, sweep_bench,
                    theory_validation)
 
     claims = {}
@@ -32,6 +32,7 @@ def main() -> None:
     sb = sweep_bench.run()
     claims["sweep_engine"] = {"speedup": round(sb["speedup"], 1),
                               "pass_3x": sb["pass_3x"]}
+    claims["autotune"] = autotune_bench.run()["claim"]
     kernels_bench.run()
 
     print("\n=== paper-fidelity claim summary ===")

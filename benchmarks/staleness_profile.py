@@ -23,7 +23,9 @@ def run(T: int = 200, s: int = 5, seed: int = 0):
     out = {"sweep": sweep_meta(res)}
     for i, (name, _) in enumerate(named):
         tr = res.trace(i)
-        bins, probs = staleness.histogram(tr, lo=-(s + 2))
+        # skip_warmup keeps the histogram consistent with summary(), which
+        # always drops the cold-start reads (cview still at the initial -1)
+        bins, probs = staleness.histogram(tr, lo=-(s + 2), skip_warmup=True)
         summ = staleness.summary(tr)
         out[name] = {"bins": bins.tolist(), "probs": probs.tolist(),
                      "summary": summ, "us": us}

@@ -14,16 +14,15 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.apps.matfact import MFConfig, make_mf_app
+from repro.apps.matfact import MFConfig, make_mf_app, mf_time_model
 from repro.core import essp, ssp, staleness, sweep
-from repro.core.timemodel import TimeModel
 
 from .common import emit, save_json, sweep_meta, us_per_config
 
 
 def run(T: int = 150, s: int = 5, seed: int = 0):
     app = make_mf_app(MFConfig())
-    tm = TimeModel()
+    tm = mf_time_model()
     named = [(name, kind, n_slow,
               mk(s).replace(straggler_workers=n_slow, straggler_rate=0.25))
              for name, mk, kind in (("ssp", ssp, "ssp"),

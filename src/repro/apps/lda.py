@@ -23,6 +23,21 @@ import jax
 import jax.numpy as jnp
 
 from ..core.ps import PSApp
+from ..core.timemodel import TimeModel
+
+
+def lda_time_model(**kw) -> TimeModel:
+    """Paper-class wall-clock constants for the LDA/Gibbs app.
+
+    A Gibbs clock resamples half of each worker's tokens, so it costs more
+    compute than an SGD minibatch (t_comp = 0.2 s), while a producer's
+    per-clock count deltas are sparser than MF factor rows (2 MB per
+    channel).  Single source of truth for every LDA time axis (Fig 2,
+    comm/comp split, auto-tuner).
+    """
+    kw.setdefault("t_comp", 0.2)
+    kw.setdefault("bytes_per_channel", 2e6)
+    return TimeModel(**kw)
 
 
 @dataclass(frozen=True)

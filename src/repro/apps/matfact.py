@@ -20,6 +20,18 @@ import jax
 import jax.numpy as jnp
 
 from ..core.ps import PSApp
+from ..core.timemodel import TimeModel
+
+
+def mf_time_model(**kw) -> TimeModel:
+    """Paper-class wall-clock constants for the MF/SGD app.
+
+    The 1 GbE defaults of `TimeModel` already describe the paper's MF
+    cluster (50 ms SGD clocks, ~4 MB of factor rows per producer); this is
+    the single place benchmarks get them from, so the Fig 2 time axis and
+    the auto-tuner stay on the same constants.
+    """
+    return TimeModel(**kw)
 
 
 @dataclass(frozen=True)

@@ -2,9 +2,10 @@
 from .consistency import ConsistencyConfig, bsp, ssp, essp, vap, MODELS
 from .ps import PSApp, Trace, simulate, simulate_jit
 from .sweep import SweepResult, stack_configs, sweep
-from . import staleness, theory, timemodel
+from .timemodel import TimeModel
+from . import staleness, theory, timemodel, tune
 
 __all__ = ["ConsistencyConfig", "bsp", "ssp", "essp", "vap", "MODELS",
            "PSApp", "Trace", "simulate", "simulate_jit",
-           "SweepResult", "stack_configs", "sweep",
-           "staleness", "theory", "timemodel"]
+           "SweepResult", "stack_configs", "sweep", "TimeModel",
+           "staleness", "theory", "timemodel", "tune"]

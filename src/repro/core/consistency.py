@@ -58,6 +58,20 @@ DATA_FIELDS = ("staleness", "v0", "push_prob", "straggler_prob",
 # Structural knobs: static pytree metadata, baked into the compiled program.
 META_FIELDS = ("model", "read_my_writes", "window", "max_extra_delay")
 
+# Physically meaningful ranges of the numeric knobs ((lo, hi), None = open).
+# The auto-tuner (`core.tune`) clips its coarse→fine refinement proposals to
+# these.
+KNOB_BOUNDS = {
+    "staleness": (0, None),
+    "v0": (1e-3, None),
+    "push_prob": (0.05, 1.0),
+    "straggler_prob": (0.0, 0.95),
+    "straggler_workers": (0, None),
+    "straggler_rate": (0.01, 1.0),
+}
+# Knobs that live on an integer lattice (refinement rounds to these).
+INT_KNOBS = ("staleness", "straggler_workers")
+
 
 def _concrete(x) -> bool:
     """True for plain Python/numpy scalars (validate eagerly); traced values

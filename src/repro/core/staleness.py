@@ -12,30 +12,44 @@ import numpy as np
 from .ps import Trace
 
 
-def clock_differentials(trace: Trace, exclude_self: bool = True) -> np.ndarray:
+def clock_differentials(trace: Trace, exclude_self: bool = True,
+                        skip_warmup: bool = False) -> np.ndarray:
     """Flatten per-read clock differentials from a trace.
 
     Returns an int array of ``cview[r,q] − c`` over all clocks and channels.
     Self-channels (r == q) are excluded by default since read-my-writes pins
     them at −1.
+
+    ``skip_warmup`` drops the leading clocks where every off-diagonal
+    ``cview`` entry is still the initial −1 (no delivery or forced refresh
+    has happened yet): those reads return the shared initial parameters, so
+    their "staleness" is an artifact of the cold start, not a property of
+    the consistency model.
     """
     st = np.asarray(trace.staleness)               # [T, P, P]
+    P = st.shape[-1]
+    off = ~np.eye(P, dtype=bool)
+    if skip_warmup and st.shape[0]:
+        # cview[t] = staleness[t] + t; warm clocks have cview == -1 on every
+        # off-diagonal channel.
+        cview = st + np.arange(st.shape[0])[:, None, None]
+        warm = (cview[:, off] == -1).all(axis=1)    # [T]
+        n_warm = int(np.argmin(warm)) if not warm.all() else st.shape[0]
+        st = st[n_warm:]
     if exclude_self:
-        P = st.shape[-1]
-        mask = ~np.eye(P, dtype=bool)
-        return st[:, mask].ravel()
+        return st[:, off].ravel()
     return st.ravel()
 
 
 def histogram(trace: Trace, lo: int | None = None, hi: int = 0,
-              exclude_self: bool = True):
+              exclude_self: bool = True, skip_warmup: bool = False):
     """Normalized histogram of clock differentials.
 
     Returns ``(bin_values, probabilities)`` with bins ``lo..hi`` inclusive.
     """
-    diffs = clock_differentials(trace, exclude_self)
+    diffs = clock_differentials(trace, exclude_self, skip_warmup)
     if lo is None:
-        lo = int(diffs.min())
+        lo = int(diffs.min()) if diffs.size else -1
     bins = np.arange(lo, hi + 2) - 0.5
     counts, _ = np.histogram(diffs, bins=bins)
     total = max(1, counts.sum())
@@ -44,9 +58,17 @@ def histogram(trace: Trace, lo: int | None = None, hi: int = 0,
 
 def summary(trace: Trace, exclude_self: bool = True) -> dict:
     """Moment statistics of the staleness distribution (μ_γ, σ_γ of the
-    paper's Theorem 5 are driven by these)."""
-    diffs = clock_differentials(trace, exclude_self).astype(np.float64)
-    # Skip the warm-up clocks where cview is still the initial -1 everywhere.
+    paper's Theorem 5 are driven by these).
+
+    Warm-up clocks (cview still at the initial −1 on every channel) are
+    skipped; if the whole trace is warm-up (e.g. lazy SSP with a bound
+    longer than the run) the unskipped distribution is used so the moments
+    stay defined.
+    """
+    diffs = clock_differentials(trace, exclude_self,
+                                skip_warmup=True).astype(np.float64)
+    if diffs.size == 0:
+        diffs = clock_differentials(trace, exclude_self).astype(np.float64)
     return {
         "mean": float(diffs.mean()),
         "std": float(diffs.std()),

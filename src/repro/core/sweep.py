@@ -26,7 +26,14 @@ it over the whole (config-grid × seeds) batch:
   configs with different windows into separate compiles;
 - with multiple devices the flattened (config × seed) batch is sharded over
   a 1-D mesh via ``shard_map`` (pad-to-multiple, slice after), spreading a
-  paper figure across a pod with the same single compile.
+  paper figure across a pod with the same single compile;
+- traced consumers (``core.tune``, the traced ``TimeModel``) can ride
+  *inside* the compiled program via ``post``: a callable ``post(trace, cfg,
+  seed, cfg_idx) -> pytree`` applied to each (config, seed) trace on device,
+  before anything is fetched to host.  With ``keep_traces=False`` the full
+  per-clock traces are dropped on device and only the (typically tiny) post
+  outputs come back — a frontier over hundreds of grid points then moves
+  O(points x T) floats instead of O(points x T x P^2).
 
 Example::
 
@@ -101,10 +108,24 @@ class SweepResult:
     t_first_s: float          # first execution, including compile
     t_exec_s: float | None    # steady-state re-execution (timeit=True)
     families: dict = field(default_factory=dict)
+    posts: list = field(default_factory=list)   # per-config batched post out
 
     def trace(self, i: int, seed_idx: int = 0) -> Trace:
-        """Unbatched `Trace` for config ``i`` at seed index ``seed_idx``."""
+        """Unbatched `Trace` for config ``i`` at seed index ``seed_idx``.
+
+        Unavailable when the sweep ran with ``keep_traces=False``."""
+        if self.traces[i] is None:
+            raise ValueError("sweep ran with keep_traces=False; only `posts` "
+                             "outputs were kept")
         return jax.tree_util.tree_map(lambda x: x[seed_idx], self.traces[i])
+
+    def post(self, i: int, seed_idx: int | None = None):
+        """Post-callback output for config ``i`` (one seed, or batched)."""
+        if not self.posts or self.posts[i] is None:
+            raise ValueError("sweep ran without a post callback")
+        if seed_idx is None:
+            return self.posts[i]
+        return jax.tree_util.tree_map(lambda x: x[seed_idx], self.posts[i])
 
 
 def _device_mesh(devices):
@@ -113,18 +134,24 @@ def _device_mesh(devices):
     return list(devices)
 
 
-def _family_runner(app: PSApp, n_clocks: int, record_views: bool, devices):
+def _family_runner(app: PSApp, n_clocks: int, record_views: bool, devices,
+                   post=None, keep_traces: bool = True):
     """Build the once-compiled runner for one family: `simulate` vmapped
     over a flat (config × seed) batch, sharded over devices when more than
-    one is available.  Returns ``fn(stacked_flat, seeds_flat) -> Trace``;
-    repeated calls with the same batch shape reuse the compiled program."""
+    one is available.  Returns ``fn(stacked_flat, seeds_flat, idx_flat) ->
+    {"trace": Trace|None, "post": pytree|None}``; repeated calls with the
+    same batch shape reuse the compiled program."""
 
-    def one(cfg, seed):
+    def one(cfg, seed, cfg_idx):
         _TRACE_COUNTER["count"] += 1          # fires once per trace/compile
-        return simulate(app, cfg, n_clocks, seed=seed,
-                        record_views=record_views)
+        tr = simulate(app, cfg, n_clocks, seed=seed,
+                      record_views=record_views)
+        return {
+            "trace": tr if (keep_traces or post is None) else None,
+            "post": None if post is None else post(tr, cfg, seed, cfg_idx),
+        }
 
-    batched = jax.vmap(one, in_axes=(0, 0))
+    batched = jax.vmap(one, in_axes=(0, 0, 0))
     n_dev = len(devices)
     if n_dev == 1:
         return jax.jit(batched)
@@ -134,10 +161,10 @@ def _family_runner(app: PSApp, n_clocks: int, record_views: bool, devices):
 
     mesh = Mesh(np.array(devices), ("batch",))
     sharded = jax.jit(shard_map(batched, mesh=mesh,
-                                in_specs=(P("batch"), P("batch")),
+                                in_specs=(P("batch"), P("batch"), P("batch")),
                                 out_specs=P("batch")))
 
-    def fn(stacked_flat, seeds_flat):
+    def fn(stacked_flat, seeds_flat, idx_flat):
         n = seeds_flat.shape[0]
         pad = (-n) % n_dev
         if pad:
@@ -145,7 +172,8 @@ def _family_runner(app: PSApp, n_clocks: int, record_views: bool, devices):
                 [x, jnp.broadcast_to(x[:1], (pad,) + x.shape[1:])])
             stacked_flat = jax.tree_util.tree_map(padder, stacked_flat)
             seeds_flat = padder(seeds_flat)
-        out = sharded(stacked_flat, seeds_flat)
+            idx_flat = padder(idx_flat)
+        out = sharded(stacked_flat, seeds_flat, idx_flat)
         if pad:
             out = jax.tree_util.tree_map(lambda x: x[:n], out)
         return out
@@ -155,7 +183,8 @@ def _family_runner(app: PSApp, n_clocks: int, record_views: bool, devices):
 
 def sweep(app: PSApp, configs: Sequence[ConsistencyConfig], n_clocks: int,
           seeds: int | Sequence[int] = 1, record_views: bool = False,
-          devices=None, timeit: bool = False) -> SweepResult:
+          devices=None, timeit: bool = False, post=None,
+          keep_traces: bool = True) -> SweepResult:
     """Run every (config, seed) pair with one compiled program per family.
 
     Args:
@@ -169,7 +198,16 @@ def sweep(app: PSApp, configs: Sequence[ConsistencyConfig], n_clocks: int,
         a single device runs the plain vmap).
       timeit: re-execute each family once more to measure steady-state
         execution time (`t_exec_s`) separately from compile (`t_first_s`).
+      post: optional traced consumer ``post(trace, cfg, seed, cfg_idx) ->
+        pytree`` applied to every (config, seed) trace *inside* the compiled
+        program (``cfg_idx`` is the config's index in ``configs``, e.g. for
+        `TimeModel` RNG folding).  Outputs land in ``SweepResult.posts``,
+        batched per config like ``traces``.
+      keep_traces: when False (requires ``post``), drop the full traces on
+        device and return only the post outputs.
     """
+    if not keep_traces and post is None:
+        raise ValueError("keep_traces=False requires a post callback")
     configs = list(configs)
     if isinstance(seeds, (int, np.integer)):
         seeds = np.arange(seeds)
@@ -182,6 +220,7 @@ def sweep(app: PSApp, configs: Sequence[ConsistencyConfig], n_clocks: int,
         groups.setdefault(c.family, []).append(i)
 
     traces: list[Any] = [None] * len(configs)
+    posts: list[Any] = [None] * len(configs)
     harmonized: list[Any] = [None] * len(configs)
     fam_info = {}
     t_first = 0.0
@@ -196,20 +235,25 @@ def sweep(app: PSApp, configs: Sequence[ConsistencyConfig], n_clocks: int,
         rep = lambda x: jnp.repeat(x, S, axis=0)
         stacked_flat = jax.tree_util.tree_map(rep, stacked)
         seeds_flat = jnp.tile(jnp.asarray(seeds), len(group))
+        idx_flat = jnp.repeat(jnp.asarray(idxs, jnp.uint32), S)
 
-        fn = _family_runner(app, n_clocks, record_views, devices)
+        fn = _family_runner(app, n_clocks, record_views, devices,
+                            post=post, keep_traces=keep_traces)
         t0 = time.perf_counter()
-        out = jax.block_until_ready(fn(stacked_flat, seeds_flat))
+        out = jax.block_until_ready(fn(stacked_flat, seeds_flat, idx_flat))
         t_first += time.perf_counter() - t0
         if timeit:
             t0 = time.perf_counter()
-            out = jax.block_until_ready(fn(stacked_flat, seeds_flat))
+            out = jax.block_until_ready(fn(stacked_flat, seeds_flat, idx_flat))
             t_exec += time.perf_counter() - t0
         for j, i in enumerate(idxs):
             sl = slice(j * S, (j + 1) * S)
-            traces[i] = jax.tree_util.tree_map(lambda x: x[sl], out)
+            per_cfg = jax.tree_util.tree_map(lambda x: x[sl], out)
+            traces[i] = per_cfg["trace"]
+            posts[i] = per_cfg["post"]
         fam_info[fam] = {"configs": len(group), "window": W}
 
     return SweepResult(configs=configs, harmonized=harmonized, seeds=seeds,
                        traces=traces, n_compiles=len(groups),
-                       t_first_s=t_first, t_exec_s=t_exec, families=fam_info)
+                       t_first_s=t_first, t_exec_s=t_exec, families=fam_info,
+                       posts=posts)

@@ -4,7 +4,7 @@ time axis of Fig 2).
 The simulator advances in lockstep clocks; real wall time per clock differs
 by consistency model because of *synchronous* communication:
 
-- computation: per worker, lognormal around ``t_comp`` (stragglers);
+- computation: per worker, lognormal with mean ``t_comp`` (stragglers);
 - BSP: a barrier every clock — the clock costs the *max* worker time plus a
   full model sync;
 - SSP: forced cache refreshes are synchronous round-trips (the reader
@@ -15,11 +15,31 @@ by consistency model because of *synchronous* communication:
 This is a *model* (the container has no cluster); constants default to the
 paper's hardware class (1 GbE: ~100 MB/s, 0.5 ms RTT).  All derived claims
 (C6 and Fig 2 time axes) are reported with the constants alongside.
+
+Traced implementation
+---------------------
+The model is written in ``jnp`` end to end, so it can be ``vmap``-ed over
+the batched traces a ``core.sweep`` run produces and consumed *inside* the
+one-compile program (see ``core.tune``): ``per_clock``/``wall_time``/
+``breakdown`` accept traced `Trace` leaves and return device arrays.  Host
+callers can keep treating the results as numpy — the ``*_np`` wrappers (and
+``breakdown``'s plain-float dict) convert at the boundary.
+
+Straggler draws are mean-corrected: a lognormal with location 0 has mean
+``exp(sigma^2/2)``, so we draw ``exp(N(-sigma^2/2, sigma^2))`` — the
+per-clock compute times then average to exactly ``t_comp`` as documented
+(the old numpy path overshot by ~4.6% at sigma=0.3, biasing every
+straggler ablation's time axis).  Draws are seeded via
+``jax.random.fold_in`` over a caller-supplied ``fold`` (config index, seed,
+...), so different sweep points get independent straggler realizations
+while staying deterministic.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from .ps import Trace
@@ -35,41 +55,71 @@ class TimeModel:
     barrier_overhead: float = 0.002
     seed: int = 0
 
-    def per_clock(self, trace: Trace, model: str):
-        """Returns (wall[T], comp[T], comm[T]) per-clock seconds."""
-        forced = np.asarray(trace.forced)            # [T, P, P] sync fetches
+    # ------------------------------------------------------------------ rng
+    def key(self, fold=()) -> jax.Array:
+        """PRNG key for this model, folded over the sweep coordinates.
+
+        ``fold`` is a sequence of (possibly traced) ints — conventionally
+        ``(config_index, seed)`` inside a sweep — so every grid point draws
+        independent stragglers while the whole grid stays deterministic.
+        """
+        key = jax.random.PRNGKey(self.seed)
+        for f in fold:
+            key = jax.random.fold_in(key, jnp.asarray(f, jnp.uint32))
+        return key
+
+    def comp_draws(self, shape, fold=()) -> jax.Array:
+        """Mean-corrected lognormal compute times: ``E[draw] == t_comp``."""
+        sig = self.straggler_sigma
+        z = jax.random.normal(self.key(fold), shape, jnp.float32)
+        return self.t_comp * jnp.exp(sig * z - 0.5 * sig * sig)
+
+    # ------------------------------------------------------------- traced
+    def per_clock(self, trace: Trace, model: str, fold=()):
+        """Returns (wall[T], comp[T], comm[T]) per-clock seconds (traced)."""
+        forced = jnp.asarray(trace.forced)           # [T, P, P] sync fetches
         T, P, _ = forced.shape
-        rng = np.random.default_rng(self.seed)
-        comp = self.t_comp * rng.lognormal(
-            0.0, self.straggler_sigma, size=(T, P))   # [T, P]
+        comp = self.comp_draws((T, P), fold)         # [T, P]
 
         xfer = self.bytes_per_channel / self.bandwidth
-        sync = forced.sum(axis=2) * (self.rtt + xfer)  # [T, P] reader-side
+        sync = forced.astype(jnp.float32).sum(axis=2) * (self.rtt + xfer)
 
         if model == "bsp":
             # barrier: everyone waits for the slowest, then full sync
             comp_clock = comp.max(axis=1)
-            comm_clock = self.barrier_overhead + (P - 1) * xfer + self.rtt
-            comm_clock = np.full(T, comm_clock)
+            comm_clock = jnp.full(
+                (T,), self.barrier_overhead + (P - 1) * xfer + self.rtt,
+                jnp.float32)
         else:
             # lockstep clocks: the clock takes the slowest worker's
             # (compute + its own blocking fetches)
             total = comp + sync
-            worst = total.argmax(axis=1)
-            comp_clock = comp[np.arange(T), worst]
-            comm_clock = sync[np.arange(T), worst]
+            worst = jnp.argmax(total, axis=1)[:, None]
+            comp_clock = jnp.take_along_axis(comp, worst, axis=1)[:, 0]
+            comm_clock = jnp.take_along_axis(sync, worst, axis=1)[:, 0]
         return comp_clock + comm_clock, comp_clock, comm_clock
 
-    def wall_time(self, trace: Trace, model: str) -> np.ndarray:
-        wall, _, _ = self.per_clock(trace, model)
-        return np.cumsum(wall)
+    def wall_time(self, trace: Trace, model: str, fold=()) -> jax.Array:
+        """Cumulative modeled wall seconds per clock (traced)."""
+        wall, _, _ = self.per_clock(trace, model, fold)
+        return jnp.cumsum(wall)
 
-    def breakdown(self, trace: Trace, model: str) -> dict:
-        """Fig 1-right style comm/comp split over the whole run."""
-        wall, comp, comm = self.per_clock(trace, model)
-        return {
-            "total_s": float(wall.sum()),
-            "comp_s": float(comp.sum()),
-            "comm_s": float(comm.sum()),
-            "comm_frac": float(comm.sum() / max(wall.sum(), 1e-12)),
-        }
+    def breakdown_traced(self, trace: Trace, model: str, fold=()) -> dict:
+        """Fig 1-right comm/comp split as traced scalars (for on-device
+        consumers, e.g. a sweep ``post``)."""
+        wall, comp, comm = self.per_clock(trace, model, fold)
+        tot = wall.sum()
+        return {"total_s": tot, "comp_s": comp.sum(), "comm_s": comm.sum(),
+                "comm_frac": comm.sum() / jnp.maximum(tot, 1e-12)}
+
+    # -------------------------------------------------- numpy-facing shims
+    def per_clock_np(self, trace: Trace, model: str, fold=()):
+        return tuple(np.asarray(x) for x in self.per_clock(trace, model, fold))
+
+    def wall_time_np(self, trace: Trace, model: str, fold=()) -> np.ndarray:
+        return np.asarray(self.wall_time(trace, model, fold))
+
+    def breakdown(self, trace: Trace, model: str, fold=()) -> dict:
+        """Fig 1-right style comm/comp split over the whole run (floats)."""
+        return {k: float(v)
+                for k, v in self.breakdown_traced(trace, model, fold).items()}

@@ -1,0 +1,366 @@
+"""Sweep-driven consistency auto-tuner: loss vs *modeled wall-clock*.
+
+The paper's payoff (Fig 2 time axes, claim C6) is that the right consistency
+knob is the one that reaches the solution fastest in **wall-clock** terms,
+not per-clock terms: ESSP beats lazy SSP not because it computes different
+math but because its background pushes keep the synchronous-communication
+share small, so each clock is cheaper *and* fresher.  Hand-picking
+``staleness``/``push_prob`` per app (as the paper does) is exactly the kind
+of grid search the batched sweep engine makes cheap — every numeric knob of
+``ConsistencyConfig`` is a traced data leaf, so a dense (knob-grid × seed)
+batch is **one compiled program per consistency family**.
+
+Objective
+---------
+Each grid point is scored on two axes, computed on device inside the sweep
+via the traced `TimeModel` (`core.timemodel`):
+
+- ``final_loss``: mean training loss over the last ``tail`` clocks — "where
+  does this config converge to";
+- ``wall_to_threshold``: modeled wall seconds (cumulative `TimeModel`
+  per-clock time, which charges blocking fetches, stragglers, and barriers)
+  until the loss first drops below a threshold — "how fast does it get
+  there".  Configs that never reach the threshold score ``inf``.
+
+The threshold defaults to ``best_final + threshold_frac * (initial -
+best_final)`` with ``threshold_frac = 0.05``, i.e. "95% of the way from the
+starting loss to the best final loss anywhere on the grid" — the analogue
+of the paper picking a common objective value and comparing time-to-reach
+(Fig 2).  The interpolating form works for objectives that do not approach
+zero (LDA's predictive NLL) as well as ones that do (MF squared error).
+`TimeModel` constants default to the paper's 1 GbE hardware class
+(t_comp=50 ms/clock, 100 MB/s, 0.5 ms RTT) and are reported alongside every
+frontier.
+
+``frontier`` returns the Pareto-optimal subset of the grid under
+(final_loss, wall_to_threshold) minimization, plus every scored point for
+plotting.  ``refine`` runs a coarse→fine loop: it re-grids around the
+current frontier with halved knob steps and merges the new points (each
+refinement round is a fresh sweep — one more compile per family, since the
+batch shape changes).
+
+Gradient-through-the-sweep (experimental)
+-----------------------------------------
+``loss_at_budget`` is a differentiable scalar: the trace loss soft-indexed
+at a fixed wall budget (softmin weights over clocks by |cum_wall − budget|).
+``grad_knobs`` takes ``jax.grad`` of it w.r.t. the traced config knobs
+(``push_prob``, ``v0``, ...) *and* the `TimeModel` constants.  Caveat,
+stated honestly: the simulator consumes ``push_prob``/``v0`` only through
+Bernoulli/threshold *indicators* (delivered/forced masks), which are
+piecewise-constant in the knobs, so their pathwise gradients vanish almost
+everywhere; the non-degenerate gradients flow through the continuous
+time-model paths (``t_comp``, ``bandwidth``, ... shift which clocks the
+budget buys).  The dense grid is therefore the primary tuner; the gradient
+path is kept as a diagnostic and as the hook for a future smoothed-delivery
+relaxation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .consistency import INT_KNOBS, KNOB_BOUNDS, ConsistencyConfig
+from .ps import PSApp, simulate
+from .sweep import SweepResult, sweep
+from .timemodel import TimeModel
+
+
+def grid_configs(bases: ConsistencyConfig | Sequence[ConsistencyConfig],
+                 knob_grids: dict[str, Sequence] | None
+                 ) -> list[ConsistencyConfig]:
+    """Cartesian product of ``knob_grids`` applied over each base config.
+
+    ``bases`` may span several consistency families (e.g. ``[ssp(1),
+    essp(1)]``) — the sweep engine still compiles once per family.
+    """
+    if isinstance(bases, ConsistencyConfig):
+        bases = [bases]
+    if not knob_grids:
+        return list(bases)
+    names = sorted(knob_grids)
+    out = []
+    for base in bases:
+        for combo in itertools.product(*(knob_grids[n] for n in names)):
+            out.append(base.replace(**dict(zip(names, combo))))
+    return out
+
+
+@dataclass
+class FrontierResult:
+    """Scored grid + Pareto frontier of a `frontier` run.
+
+    ``points[i]`` is a dict with the config, per-seed and seed-mean metrics;
+    ``frontier_idx`` indexes the Pareto-optimal subset (sorted by
+    final_loss).  ``threshold`` is the loss level ``wall_to_threshold``
+    measures against; ``time_model`` records the constants every wall figure
+    is conditioned on.
+    """
+
+    points: list[dict]
+    frontier_idx: list[int]
+    threshold: float
+    time_model: TimeModel
+    sweep_result: SweepResult | None = None
+    history: list[dict] = field(default_factory=list)
+
+    @property
+    def frontier(self) -> list[dict]:
+        return [self.points[i] for i in self.frontier_idx]
+
+    def best(self, key: str = "wall_to_threshold") -> dict:
+        """Frontier point minimizing ``key`` (ties → lower final loss)."""
+        pts = [p for p in self.frontier if np.isfinite(p[key])] or self.frontier
+        return min(pts, key=lambda p: (p[key], p["final_loss"]))
+
+    def summary(self) -> dict:
+        def describe(p):
+            c = p["config"]
+            return {"model": c.model, "staleness": int(c.staleness),
+                    "push_prob": float(c.push_prob),
+                    "final_loss": p["final_loss"],
+                    "wall_to_threshold": p["wall_to_threshold"]}
+        return {"threshold": self.threshold,
+                "n_points": len(self.points),
+                "frontier": [describe(p) for p in self.frontier],
+                "best": describe(self.best())}
+
+
+def pareto_indices(xs: np.ndarray, ys: np.ndarray) -> list[int]:
+    """Indices of the Pareto-minimal points of (xs, ys), sorted by xs.
+
+    A point is dominated if another is <= on both axes and < on at least
+    one.  NaNs never join the frontier; +inf can (a config may converge
+    lowest yet never cross the threshold)."""
+    n = len(xs)
+    keep = []
+    for i in range(n):
+        if not (np.isfinite(xs[i]) or np.isfinite(ys[i])):
+            continue
+        if np.isnan(xs[i]) or np.isnan(ys[i]):
+            continue
+        dominated = False
+        for j in range(n):
+            if j == i:
+                continue
+            if (xs[j] <= xs[i] and ys[j] <= ys[i]
+                    and (xs[j] < xs[i] or ys[j] < ys[i])):
+                dominated = True
+                break
+        if not dominated:
+            keep.append(i)
+    keep.sort(key=lambda i: (xs[i], ys[i]))
+    return keep
+
+
+def metrics_post(time_model: TimeModel, tail: int = 10,
+                 loss_field: str = "loss_ref"):
+    """Sweep ``post`` computing the tuner's per-point metrics on device.
+
+    Returns per (config, seed): the per-clock loss curve, the cumulative
+    modeled wall clock (`TimeModel` folded over ``(cfg_idx, seed)`` so every
+    grid point draws independent stragglers), and the tail-mean final loss.
+    Everything downstream (threshold, time-to-threshold, Pareto) is cheap
+    [N, S, T] numpy on these reduced arrays.
+    """
+    def post(trace, cfg, seed, cfg_idx):
+        wall = time_model.wall_time(trace, cfg.model, fold=(cfg_idx, seed))
+        loss = getattr(trace, loss_field)
+        return {"loss": loss, "cum_wall": wall,
+                "final_loss": loss[-tail:].mean()}
+    return post
+
+
+def _wall_to_threshold(loss: np.ndarray, wall: np.ndarray,
+                       threshold: float) -> np.ndarray:
+    """First-crossing wall seconds, vectorized over leading axes.
+
+    ``loss``/``wall`` are [..., T]; returns [...] with inf where the loss
+    never reaches the threshold."""
+    hit = loss <= threshold                       # [..., T]
+    first = np.argmax(hit, axis=-1)               # 0 if never hit
+    t_hit = np.take_along_axis(wall, first[..., None], axis=-1)[..., 0]
+    return np.where(hit.any(axis=-1), t_hit, np.inf)
+
+
+def score(app: PSApp, configs: Sequence[ConsistencyConfig], n_clocks: int,
+          time_model: TimeModel, seeds: int | Sequence[int] = 2,
+          threshold: float | None = None, threshold_frac: float = 0.05,
+          tail: int = 10, devices=None) -> tuple[list[dict], float,
+                                                 SweepResult]:
+    """Run the grid through one sweep and score every (config, seed) point."""
+    res = sweep(app, configs, n_clocks, seeds=seeds, devices=devices,
+                post=metrics_post(time_model, tail=tail), keep_traces=False)
+    loss = np.stack([np.asarray(res.posts[i]["loss"])
+                     for i in range(len(configs))])       # [N, S, T]
+    wall = np.stack([np.asarray(res.posts[i]["cum_wall"])
+                     for i in range(len(configs))])       # [N, S, T]
+    final = np.stack([np.asarray(res.posts[i]["final_loss"])
+                      for i in range(len(configs))])      # [N, S]
+    if threshold is None:
+        best = float(final.mean(axis=1).min())
+        init = float(loss[..., 0].mean())
+        threshold = best + threshold_frac * max(init - best, 0.0)
+    tts = _wall_to_threshold(loss, wall, threshold)       # [N, S]
+    points = []
+    for i, cfg in enumerate(configs):
+        points.append({
+            "config": cfg,
+            "final_loss": float(final[i].mean()),
+            "wall_to_threshold": float(tts[i].mean()),
+            "final_loss_per_seed": final[i].tolist(),
+            "wall_to_threshold_per_seed": tts[i].tolist(),
+            "wall_total": float(wall[i, :, -1].mean()),
+        })
+    return points, threshold, res
+
+
+def frontier(app: PSApp, bases, knob_grids: dict[str, Sequence] | None = None,
+             *, time_model: TimeModel | None = None, n_clocks: int = 150,
+             seeds: int | Sequence[int] = 2, threshold: float | None = None,
+             threshold_frac: float = 0.05, tail: int = 10,
+             refine_rounds: int = 0, refine_knobs: Sequence[str] = ("push_prob",),
+             devices=None) -> FrontierResult:
+    """Dense-grid auto-tune: Pareto frontier of (final loss, modeled wall
+    seconds to threshold) over ``knob_grids`` × ``bases``.
+
+    One compiled program per consistency family for the whole coarse grid
+    (`sweep`); optional ``refine_rounds`` of coarse→fine re-gridding around
+    the running frontier (each round re-sweeps the *new* points only).
+    """
+    time_model = time_model or TimeModel()
+    configs = grid_configs(bases, knob_grids)
+    points, threshold, res = score(
+        app, configs, n_clocks, time_model, seeds=seeds, threshold=threshold,
+        threshold_frac=threshold_frac, tail=tail, devices=devices)
+    fr = pareto_indices(np.asarray([p["final_loss"] for p in points]),
+                        np.asarray([p["wall_to_threshold"] for p in points]))
+    out = FrontierResult(points=points, frontier_idx=fr, threshold=threshold,
+                         time_model=time_model, sweep_result=res)
+    out.history.append({"round": 0, "n_points": len(points),
+                        "n_compiles": res.n_compiles})
+
+    steps = _grid_steps(knob_grids, refine_knobs)
+    for r in range(refine_rounds):
+        steps = {k: v / 2.0 for k, v in steps.items()}
+        proposals = _propose_refinements(out, refine_knobs, steps)
+        if not proposals:
+            break
+        new_points, _, res_r = score(
+            app, proposals, n_clocks, time_model, seeds=seeds,
+            threshold=threshold, tail=tail, devices=devices)
+        out.points.extend(new_points)
+        out.frontier_idx = pareto_indices(
+            np.asarray([p["final_loss"] for p in out.points]),
+            np.asarray([p["wall_to_threshold"] for p in out.points]))
+        out.history.append({"round": r + 1, "n_points": len(proposals),
+                            "n_compiles": res_r.n_compiles})
+    return out
+
+
+def _grid_steps(knob_grids, refine_knobs) -> dict[str, float]:
+    """Initial refinement step per knob: the coarse grid spacing (or a
+    quarter of the value range for single-point grids)."""
+    steps = {}
+    for k in refine_knobs:
+        vals = sorted(set(float(v) for v in (knob_grids or {}).get(k, [])))
+        if len(vals) >= 2:
+            steps[k] = min(b - a for a, b in zip(vals, vals[1:]))
+        else:
+            steps[k] = max(abs(vals[0]) * 0.5, 0.1) if vals else 0.1
+    return steps
+
+
+def _propose_refinements(result: FrontierResult, refine_knobs,
+                         steps: dict[str, float]) -> list[ConsistencyConfig]:
+    """± half-step neighbours of each frontier config, deduplicated against
+    everything already scored."""
+    seen = {_cfg_key(p["config"]) for p in result.points}
+    proposals = []
+    for p in result.frontier:
+        cfg = p["config"]
+        for k in refine_knobs:
+            step = steps.get(k, 0.1)
+            for sign in (-1.0, 1.0):
+                v = getattr(cfg, k) + sign * step
+                lo, hi = KNOB_BOUNDS.get(k, (None, None))
+                if k in INT_KNOBS:
+                    v = int(round(v))
+                if lo is not None:
+                    v = max(lo, v)
+                if hi is not None:
+                    v = min(hi, v)
+                cand = cfg.replace(**{k: v})
+                key = _cfg_key(cand)
+                if key not in seen:
+                    seen.add(key)
+                    proposals.append(cand)
+    return proposals
+
+
+def _cfg_key(cfg: ConsistencyConfig) -> tuple:
+    vals = []
+    for f in dataclasses.fields(cfg):
+        v = getattr(cfg, f.name)
+        vals.append(round(float(v), 9) if isinstance(v, float) else v)
+    return tuple(vals)
+
+
+# --------------------------------------------------------------------------
+# Experimental: gradient through the sweep
+# --------------------------------------------------------------------------
+
+def loss_at_budget(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
+                   time_model: TimeModel, budget: float, seed=0,
+                   temp: float = 2.0, fold=(0,)) -> jax.Array:
+    """Differentiable loss at a fixed modeled wall budget.
+
+    Soft-indexes the per-clock loss curve at the clock whose cumulative
+    modeled wall time is nearest ``budget``: softmin weights
+    ``softmax(-|cum_wall - budget| / (temp * t_comp))``.  As ``temp -> 0``
+    this approaches the hard "loss when the budget runs out"; finite temp
+    keeps it differentiable w.r.t. everything that shifts ``cum_wall`` (the
+    `TimeModel` constants) or the loss values.  See the module docstring for
+    which knob gradients are non-degenerate.
+    """
+    tr = simulate(app, cfg, n_clocks, seed=seed)
+    wall = time_model.wall_time(tr, cfg.model, fold=fold)
+    scale = jnp.maximum(jnp.asarray(temp * time_model.t_comp, jnp.float32),
+                        1e-9)
+    w = jax.nn.softmax(-jnp.abs(wall - budget) / scale)
+    return jnp.sum(w * tr.loss_ref)
+
+
+def grad_knobs(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
+               time_model: TimeModel, budget: float,
+               knobs: Sequence[str] = ("push_prob",),
+               tm_knobs: Sequence[str] = ("t_comp",), seed=0,
+               temp: float = 2.0) -> dict[str, Any]:
+    """``jax.grad`` of `loss_at_budget` w.r.t. config knobs and `TimeModel`
+    constants, in one backward pass.
+
+    Returns ``{"value": float, "grads": {name: float}}``.  Config knobs ride
+    as traced pytree data leaves of `ConsistencyConfig`; `TimeModel`
+    constants are substituted via ``dataclasses.replace`` (its methods treat
+    them as values, so traced floats flow through).
+    """
+    cfg = cfg.replace(window=cfg.effective_window)   # freeze compiled shape
+
+    def objective(theta):
+        c = cfg.replace(**{k: theta[k] for k in knobs})
+        tm = dataclasses.replace(time_model,
+                                 **{k: theta[k] for k in tm_knobs})
+        return loss_at_budget(app, c, n_clocks, tm, budget, seed=seed,
+                              temp=temp)
+
+    theta0 = {k: jnp.asarray(getattr(cfg, k), jnp.float32) for k in knobs}
+    theta0 |= {k: jnp.asarray(getattr(time_model, k), jnp.float32)
+               for k in tm_knobs}
+    value, grads = jax.jit(jax.value_and_grad(objective))(theta0)
+    return {"value": float(value),
+            "grads": {k: float(v) for k, v in grads.items()}}

@@ -31,6 +31,7 @@ def test_bsp_staleness_always_minus_one(quad_app):
     assert (diffs == -1).all()
 
 
+@pytest.mark.slow
 @settings(max_examples=8, deadline=None)
 @given(s=st.integers(0, 6), push=st.floats(0.3, 0.95),
        strag=st.floats(0.0, 0.3), seed=st.integers(0, 3))

@@ -61,6 +61,7 @@ def test_blocked_ref_matches_dense():
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
 
 
+@pytest.mark.slow
 @settings(max_examples=10, deadline=None)
 @given(sq=st.sampled_from([32, 64, 96]), sk=st.sampled_from([64, 128]),
        hkv=st.sampled_from([1, 2, 4]), rep=st.sampled_from([1, 2]),
@@ -144,6 +145,7 @@ def test_mf_sgd_kernel_matches_ref(N, M, K):
     assert abs(float(lw - lg)) < 1e-3
 
 
+@pytest.mark.slow
 @settings(max_examples=6, deadline=None)
 @given(nb=st.sampled_from([1, 2]), mb=st.sampled_from([1, 3]),
        k=st.sampled_from([8, 16]), density=st.floats(0.05, 0.9),

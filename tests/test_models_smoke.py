@@ -13,7 +13,17 @@ from repro.psdist.grad_sync import GradSync
 from repro.train.state import init_state, make_train_step
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+# Heavy smoke configs go to the scheduled (full) CI lane; the per-push lane
+# keeps small dense + SSD representatives for coverage (same split as
+# test_serve.py's _HEAVY_SERVE).
+_HEAVY_SMOKE = {"jamba-1.5-large-398b", "llama-3.2-vision-11b",
+                "whisper-medium", "deepseek-v2-lite-16b",
+                "qwen3-moe-30b-a3b", "qwen3-4b"}
+
+
+@pytest.mark.parametrize(
+    "arch", [pytest.param(a, marks=pytest.mark.slow) if a in _HEAVY_SMOKE
+             else a for a in ARCHS])
 def test_smoke_forward_and_train_step(arch):
     cfg = get_smoke_config(arch)
     assert cfg.n_layers <= 10 and cfg.d_model <= 512

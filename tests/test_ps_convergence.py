@@ -39,6 +39,7 @@ def test_mf_essp_converges_close_to_bsp(mf_app):
     assert le[-1] < 2.5 * lb[-1] + 1e-3
 
 
+@pytest.mark.slow
 def test_mf_essp_beats_ssp_per_clock(mf_app):
     """C2: eager propagation converges faster (or equal) per iteration."""
     ls = losses(mf_app, ssp(7))
@@ -53,6 +54,7 @@ def test_mf_vap_converges(mf_app):
     assert lv[-1] < 0.3 * lv[0]
 
 
+@pytest.mark.slow
 def test_regret_decays(mf_app):
     """C4/C5: R[X]/T decays like O(T^-1/2) (fit exponent clearly < 0)."""
     tr = jax.jit(lambda: simulate(mf_app, essp(3), 150))()

@@ -21,7 +21,17 @@ def _f32_cfg(arch):
     return cfg
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+# Heavy archs decode in the scheduled lane only; the per-push lane keeps
+# small dense + SSD representatives (same split as test_models_smoke.py's
+# _HEAVY_SMOKE).
+_HEAVY_SERVE = {"jamba-1.5-large-398b", "llama-3.2-vision-11b",
+                "whisper-medium", "deepseek-v2-lite-16b",
+                "qwen3-moe-30b-a3b", "qwen3-4b"}
+
+
+@pytest.mark.parametrize(
+    "arch", [pytest.param(a, marks=pytest.mark.slow) if a in _HEAVY_SERVE
+             else a for a in ARCHS])
 def test_prefill_then_decode_matches_forward(arch):
     cfg = _f32_cfg(arch)
     model = build_model(cfg)
@@ -46,6 +56,7 @@ def test_prefill_then_decode_matches_forward(arch):
                                np.asarray(lg_full2[:, -1:]), atol=5e-3)
 
 
+@pytest.mark.slow
 def test_multi_step_decode_consistency():
     """Five decode steps stay consistent with the growing-context forward."""
     cfg = _f32_cfg("qwen3-0.6b")

@@ -38,6 +38,7 @@ def _run(model, opt, sync, cfg, steps=50, accum=1, seed=0):
     return np.array(losses)
 
 
+@pytest.mark.slow
 def test_training_loss_decreases(tiny):
     cfg, model, opt = tiny
     losses = _run(model, opt, GradSync("bsp"), cfg)
@@ -45,6 +46,7 @@ def test_training_loss_decreases(tiny):
     assert np.isfinite(losses).all()
 
 
+@pytest.mark.slow
 def test_accum_coalescing_close_to_flat(tiny):
     """Update coalescing (grad accumulation) ~ same trajectory as the flat
     batch (identical data, mean-of-microbatch gradients)."""
@@ -54,6 +56,7 @@ def test_accum_coalescing_close_to_flat(tiny):
     assert abs(l_flat[-1] - l_acc[-1]) < 0.2 * l_flat[-1] + 0.5
 
 
+@pytest.mark.slow
 def test_ssp_delayed_gradients_converge_slower_but_converge(tiny):
     cfg, model, opt = tiny
     l_bsp = _run(model, opt, GradSync("bsp"), cfg)
@@ -62,6 +65,7 @@ def test_ssp_delayed_gradients_converge_slower_but_converge(tiny):
     assert l_bsp[-1] <= l_ssp[-1] + 1e-3        # but not faster than BSP
 
 
+@pytest.mark.slow
 def test_essp_bucketing_matches_bsp_exactly(tiny):
     """With s=0, ESSP differs only in collective schedule, not math."""
     cfg, model, opt = tiny
@@ -82,6 +86,7 @@ def test_train_loop_history(tiny):
     assert int(state.step) == 12
 
 
+@pytest.mark.slow
 def test_checkpoint_resume(tiny, tmp_path):
     from repro.checkpoint.io import restore, save
     cfg, model, opt = tiny

@@ -1,0 +1,268 @@
+"""Traced TimeModel + sweep-driven auto-tuner (`core.timemodel`,
+`core.tune`, the sweep `post` path) and the straggler-bias regression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import essp, simulate, ssp, sweep, tune, vap
+from repro.core.ps import Trace
+from repro.core import staleness
+from repro.core.sweep import trace_count
+from repro.core.timemodel import TimeModel
+from repro.apps.matfact import MFConfig, make_mf_app
+
+
+# ---------------- lognormal straggler bias (regression) --------------------
+def test_straggler_draws_mean_is_t_comp():
+    """mu = -sigma^2/2 makes t_comp the *true mean* compute time.  The old
+    numpy path drew lognormal(0, sigma) whose mean is exp(sigma^2/2) x
+    t_comp (~4.6% high at sigma=0.3, ~13% at sigma=0.5)."""
+    for sigma in (0.3, 0.5):
+        tm = TimeModel(t_comp=0.05, straggler_sigma=sigma)
+        draws = np.asarray(tm.comp_draws((400_000,)))
+        assert abs(draws.mean() / tm.t_comp - 1.0) < 0.01, sigma
+        # and the draws are genuinely heavy-tailed, not degenerate
+        assert draws.std() > 0.2 * tm.t_comp
+
+
+def test_per_clock_mean_comp_tracks_t_comp(quad_app):
+    tm = TimeModel()
+    tr = jax.jit(lambda: simulate(quad_app, essp(3), 200))()
+    _, comp, _ = tm.per_clock_np(tr, "essp")
+    # per-clock comp is the *max* over P workers, so it sits above t_comp;
+    # the underlying draws average to t_comp
+    draws = np.asarray(tm.comp_draws((200, quad_app.n_workers)))
+    assert abs(draws.mean() / tm.t_comp - 1.0) < 0.02
+
+
+# ---------------- traced vs numpy equivalence ------------------------------
+def _np_reference_per_clock(tm, comp, forced, model):
+    """Independent numpy reimplementation of the wall-clock accounting
+    (given the compute draws) — deliberately duplicated here so the traced
+    path is checked against something other than itself."""
+    comp = np.asarray(comp, np.float64)
+    forced = np.asarray(forced).astype(np.float64)
+    T, P, _ = forced.shape
+    xfer = tm.bytes_per_channel / tm.bandwidth
+    sync = forced.sum(axis=2) * (tm.rtt + xfer)
+    if model == "bsp":
+        comp_clock = comp.max(axis=1)
+        comm_clock = np.full(T, tm.barrier_overhead + (P - 1) * xfer + tm.rtt)
+    else:
+        worst = (comp + sync).argmax(axis=1)
+        comp_clock = comp[np.arange(T), worst]
+        comm_clock = sync[np.arange(T), worst]
+    return comp_clock + comm_clock, comp_clock, comm_clock
+
+
+def test_traced_matches_numpy_reference(quad_app):
+    tm = TimeModel()
+    tr = jax.jit(lambda: simulate(quad_app, ssp(4), 40))()
+    comp = tm.comp_draws((40, quad_app.n_workers), fold=(3, 7))
+    for model in ("ssp", "bsp"):
+        want = _np_reference_per_clock(tm, comp, tr.forced, model)
+        got = jax.jit(lambda t: tm.per_clock(t, model, fold=(3, 7)))(tr)
+        for a, b in zip(got, want):
+            np.testing.assert_allclose(np.asarray(a), b, rtol=1e-5)
+        # the numpy-facing shims agree with the traced path
+        np.testing.assert_allclose(
+            np.asarray(jax.jit(lambda t: tm.wall_time(t, model))(tr)),
+            tm.wall_time_np(tr, model), rtol=1e-6)
+        np.testing.assert_allclose(tm.wall_time_np(tr, model, fold=(3, 7)),
+                                   np.cumsum(want[0]), rtol=1e-5)
+    br = tm.breakdown(tr, "ssp")
+    assert br["total_s"] == pytest.approx(br["comp_s"] + br["comm_s"],
+                                          rel=1e-6)
+    assert 0.0 < br["comm_frac"] < 1.0
+
+
+def test_timemodel_vmaps_over_batched_traces(quad_app):
+    """The traced model consumes a sweep's batched Trace leaves on device."""
+    tm = TimeModel()
+    res = sweep(quad_app, [essp(2), essp(5)], 30, seeds=2)
+    batched = res.traces[0]                      # leaves [n_seeds, ...]
+    walls = jax.vmap(lambda t: tm.wall_time(t, "essp"))(batched)
+    assert walls.shape == (2, 30)
+    want = tm.wall_time_np(res.trace(0, 1), "essp")
+    np.testing.assert_allclose(np.asarray(walls[1]), want, rtol=1e-6)
+
+
+# ---------------- RNG folding ----------------------------------------------
+def test_fold_decorrelates_configs_and_seeds(quad_app):
+    tm = TimeModel()
+    tr = jax.jit(lambda: simulate(quad_app, essp(3), 25))()
+    w00 = tm.wall_time_np(tr, "essp", fold=(0, 0))
+    w10 = tm.wall_time_np(tr, "essp", fold=(1, 0))
+    w01 = tm.wall_time_np(tr, "essp", fold=(0, 1))
+    # deterministic: same fold -> identical draws
+    np.testing.assert_array_equal(w00, tm.wall_time_np(tr, "essp",
+                                                       fold=(0, 0)))
+    # different config index / seed -> independent straggler realizations
+    assert np.abs(w00 - w10).max() > 0
+    assert np.abs(w00 - w01).max() > 0
+    assert np.abs(w10 - w01).max() > 0
+
+
+# ---------------- sweep post path ------------------------------------------
+def test_sweep_post_runs_in_single_compile(quad_app):
+    tm = TimeModel()
+    configs = [essp(s, push_prob=p) for s in (1, 4) for p in (0.5, 0.9)]
+    n0 = trace_count()
+    res = sweep(quad_app, configs, 20, seeds=3,
+                post=tune.metrics_post(tm, tail=5))
+    assert res.n_compiles == 1 and trace_count() - n0 == 1
+    # post outputs are batched per config like traces, and equal the traced
+    # TimeModel applied to the standalone trace with the same fold
+    for i in (0, 3):
+        for j, sd in enumerate(res.seeds):
+            want = tm.wall_time_np(res.trace(i, j), "essp",
+                                   fold=(i, int(sd)))
+            got = np.asarray(res.posts[i]["cum_wall"][j])
+            np.testing.assert_allclose(got, want, rtol=1e-6)
+            np.testing.assert_allclose(
+                float(res.posts[i]["final_loss"][j]),
+                float(np.asarray(res.trace(i, j).loss_ref)[-5:].mean()),
+                rtol=1e-6)
+
+
+def test_sweep_keep_traces_false_drops_traces(quad_app):
+    tm = TimeModel()
+    res = sweep(quad_app, [essp(2), essp(4)], 15, seeds=2,
+                post=tune.metrics_post(tm), keep_traces=False)
+    assert res.posts[0]["loss"].shape == (2, 15)
+    with pytest.raises(ValueError):
+        res.trace(0)
+    with pytest.raises(ValueError):
+        sweep(quad_app, [essp(2)], 5, keep_traces=False)
+
+
+# ---------------- tuner frontier -------------------------------------------
+@pytest.fixture(scope="module")
+def mf_app_small():
+    return make_mf_app(MFConfig(n_rows=64, n_cols=64, rank=8, true_rank=8,
+                                n_workers=4, batch=64, lr=0.5))
+
+
+def test_frontier_essp_dominates_ssp(mf_app_small):
+    """C2/C6 sanity under the paper's constants: at equal staleness, ESSP
+    reaches the common loss threshold in fewer modeled wall seconds than
+    lazy SSP (background pushes instead of blocking refreshes)."""
+    n0 = trace_count()
+    fr = tune.frontier(mf_app_small, [ssp(5), essp(5)],
+                       {"push_prob": [0.5, 0.9]},
+                       time_model=TimeModel(), n_clocks=120, seeds=2)
+    assert trace_count() - n0 == 2          # one compile per family
+    tts = {m: min(p["wall_to_threshold"] for p in fr.points
+                  if p["config"].model == m) for m in ("ssp", "essp")}
+    assert np.isfinite(tts["essp"])
+    assert tts["essp"] < tts["ssp"]
+    # the frontier contains an essp point and no point dominates another
+    assert any(p["config"].model == "essp" for p in fr.frontier)
+    xs = [p["final_loss"] for p in fr.frontier]
+    ys = [p["wall_to_threshold"] for p in fr.frontier]
+    assert xs == sorted(xs) and ys == sorted(ys, reverse=True)
+
+
+@pytest.mark.slow
+def test_frontier_refinement_only_improves(quad_app):
+    tm = TimeModel()
+    coarse = tune.frontier(quad_app, essp(3), {"push_prob": [0.3, 0.7]},
+                           time_model=tm, n_clocks=50, seeds=2,
+                           threshold=0.05)
+    fine = tune.frontier(quad_app, essp(3), {"push_prob": [0.3, 0.7]},
+                         time_model=tm, n_clocks=50, seeds=2,
+                         threshold=0.05, refine_rounds=2)
+    assert len(fine.points) > len(coarse.points)
+    assert (fine.best()["wall_to_threshold"]
+            <= coarse.best()["wall_to_threshold"] + 1e-9)
+    # refined knobs stay in bounds
+    assert all(0.05 <= float(p["config"].push_prob) <= 1.0
+               for p in fine.points)
+
+
+def test_pareto_indices():
+    xs = np.array([1.0, 2.0, 3.0, 0.5, 2.5])
+    ys = np.array([3.0, 1.0, 2.0, 4.0, np.inf])
+    idx = tune.pareto_indices(xs, ys)
+    assert idx == [3, 0, 1]                  # sorted by x, all non-dominated
+
+
+def test_grid_configs_cartesian_product():
+    cfgs = tune.grid_configs([ssp(1), essp(1)],
+                             {"staleness": [1, 3], "push_prob": [0.5, 0.9]})
+    assert len(cfgs) == 8
+    assert len({c.family for c in cfgs}) == 2
+
+
+# ---------------- gradient through the sweep --------------------------------
+def test_grad_through_sweep_smoke(quad_app):
+    """`jax.grad` of loss-at-fixed-wall-budget w.r.t. traced knobs runs and
+    is finite; the continuous time-model path (t_comp shifts how many
+    clocks the budget buys) carries non-degenerate gradient."""
+    tm = TimeModel()
+    out = tune.grad_knobs(quad_app, essp(3), 40, tm, budget=1.0,
+                          knobs=("push_prob",), tm_knobs=("t_comp",))
+    assert np.isfinite(out["value"])
+    assert all(np.isfinite(g) for g in out["grads"].values())
+    assert out["grads"]["t_comp"] != 0.0
+
+
+def test_grad_vap_v0_smoke(quad_app):
+    tm = TimeModel()
+    out = tune.grad_knobs(quad_app, vap(0.5, staleness=4), 25, tm,
+                          budget=0.8, knobs=("v0",), tm_knobs=())
+    assert np.isfinite(out["grads"]["v0"])
+
+
+def test_loss_at_budget_monotone_in_budget(quad_app):
+    """More wall budget -> at or past the same clocks -> lower soft loss on
+    a converging run."""
+    tm = TimeModel()
+    f = jax.jit(lambda b: tune.loss_at_budget(quad_app, essp(3), 60, tm, b,
+                                              temp=0.5))
+    assert float(f(4.0)) < float(f(0.5))
+
+
+# ---------------- staleness warm-up fix -------------------------------------
+def _fake_trace(st):
+    z = jnp.zeros(())
+    return Trace(loss_ref=z, loss_view=z, staleness=jnp.asarray(st),
+                 forced=z, delivered=z, u_l2=z, intransit_inf=z,
+                 views0=None, x_final=z, locals_final=None)
+
+
+def test_summary_skips_warmup_clocks():
+    """Clocks where every off-diagonal cview is still the initial -1 are
+    cold-start artifacts, not staleness measurements."""
+    P = 2
+    # clock 0: cview=-1 (diff -1), clock 1: cview=-1 (diff -2)  -> warm
+    # clock 2: cview=1  (diff -1)                               -> real
+    st = np.stack([np.full((P, P), -1), np.full((P, P), -2),
+                   np.full((P, P), -1)]).astype(np.int32)
+    tr = _fake_trace(st)
+    s = staleness.summary(tr)
+    assert s["mean"] == -1.0 and s["min"] == -1 and s["max"] == -1
+    # unskipped distribution still includes the -2 warm-up reads
+    assert staleness.clock_differentials(tr).min() == -2
+
+
+def test_summary_all_warmup_falls_back():
+    st = np.stack([np.full((3, 3), -(c + 1)) for c in range(4)]).astype(
+        np.int32)
+    s = staleness.summary(_fake_trace(st))
+    assert np.isfinite(s["mean"]) and s["min"] == -4
+
+
+def test_histogram_empty_trace_does_not_crash():
+    st = np.zeros((0, 3, 3), np.int32)
+    bins, probs = staleness.histogram(_fake_trace(st))
+    assert probs.sum() == 0.0 and len(bins) == len(probs)
+
+
+def test_warmup_skip_makes_lazy_ssp_less_negative(quad_app):
+    tr = jax.jit(lambda: simulate(quad_app, ssp(6), 40))()
+    with_skip = staleness.clock_differentials(tr, skip_warmup=True)
+    without = staleness.clock_differentials(tr, skip_warmup=False)
+    assert with_skip.size < without.size
+    assert with_skip.mean() >= without.mean()
