@@ -1,0 +1,159 @@
+"""Executable PS runtime (`repro.psrun`) — throughput scaling and the
+paper's eager-beats-lazy wall-clock claim, measured for real on a mesh.
+
+Where every other benchmark *models* wall-clock through `TimeModel`, this
+one executes the sharded runtime and times it: clocks/sec vs worker count
+for MF and LDA under bsp/ssp/essp, and wall-clock time-to-loss at equal
+staleness — the paper's Fig 2 claim (ESSP reaches the loss threshold
+before SSP) reproduced with measured seconds instead of modeled ones.
+Before timing anything it re-checks the oracle contract (seeded BSP run
+bit-identical to ``core.ps.simulate``).
+
+Standalone (``python -m benchmarks.psrun_bench``) this forces an 8-device
+host platform before jax initializes — that invocation (or the CI sharded
+lane) is where the sharded clocks/sec numbers come from.  Under
+``benchmarks/run.py`` jax is already initialized, so it runs on whatever
+topology the process has (typically one device); the *traces* are
+mesh-independent either way (oracle contract), but the measured
+seconds/clock are not.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+# Only the standalone `python -m benchmarks.psrun_bench` invocation owns
+# the process and may pick its device topology; a plain import must never
+# mutate the environment (callers set XLA_FLAGS themselves, as the CI
+# sharded lane does).
+if __name__ == "__main__" and "jax" not in sys.modules \
+        and "xla_force_host_platform_device_count" \
+        not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=8"
+                               ).strip()
+
+import time                 # noqa: E402
+
+import jax                  # noqa: E402
+import numpy as np          # noqa: E402
+
+from repro.apps.lda import LDAConfig, make_lda_app          # noqa: E402
+from repro.apps.matfact import MFConfig, make_mf_app        # noqa: E402
+from repro.core import bsp, essp, ssp                       # noqa: E402
+from repro.psrun import PSRuntime, cross_validate, default_mesh  # noqa: E402
+
+from .common import emit, save_json                         # noqa: E402
+
+MODELS = lambda s: [("bsp", bsp()), (f"ssp{s}", ssp(s)), (f"essp{s}", essp(s))]
+
+
+def _mf(P):
+    return make_mf_app(MFConfig(n_workers=P))
+
+
+def _lda(P):
+    return make_lda_app(LDAConfig(n_workers=P))
+
+
+def _timed_run(rt, app, cfg, T, seed=0):
+    """(first-call seconds incl. compile, steady-state seconds, trace)."""
+    fn = rt.run_fn(app, cfg, T)
+    t0 = time.perf_counter()
+    tr = jax.block_until_ready(fn(seed, cfg))
+    t_first = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    tr = jax.block_until_ready(fn(seed, cfg))
+    t_exec = time.perf_counter() - t0
+    return t_first, t_exec, tr
+
+
+def _clocks_to(loss, thresh):
+    hit = np.flatnonzero(np.asarray(loss) <= thresh)
+    return int(hit[0]) + 1 if hit.size else None
+
+
+def run(T_mf: int = 240, T_lda: int = 50, s: int = 5,
+        workers=(2, 4, 8), seed: int = 0):
+    n_dev = len(jax.devices())
+    out: dict = {"n_devices": n_dev, "staleness": s}
+
+    # --- oracle contract first: measured numbers only count if the runtime
+    # is running the same algorithm the simulator proves things about.
+    app_small = make_mf_app(MFConfig(n_rows=64, n_cols=64, rank=8,
+                                     true_rank=8, n_workers=4, batch=64,
+                                     lr=0.5))
+    chk = cross_validate(app_small, bsp(), 10,
+                         runtime=PSRuntime(default_mesh(4)), seed=seed)
+    out["oracle_bsp_exact"] = chk["ok"]
+    emit("psrun_bench/oracle_bsp", 0.0, f"bit_identical={chk['ok']}")
+    assert chk["ok"], f"psrun diverged from the simulator oracle: {chk}"
+
+    # --- clocks/sec + measured time-to-loss vs workers, per app x model ---
+    for app_name, make_app, T in (("mf", _mf, T_mf), ("lda", _lda, T_lda)):
+        scaling: dict = {}
+        for P in workers:
+            mesh = default_mesh(P)
+            rt = PSRuntime(mesh)
+            app = make_app(P)
+            row: dict = {"mesh": dict(mesh.shape)}
+            losses = {}
+            for name, cfg in MODELS(s):
+                t_first, t_exec, tr = _timed_run(rt, app, cfg, T, seed)
+                loss = np.asarray(tr.loss_ref)
+                losses[name] = loss
+                row[name] = {
+                    "clocks_per_sec": T / t_exec,
+                    "t_compile_s": t_first - t_exec,
+                    "sec_per_clock": t_exec / T,
+                    "loss_final": float(loss[-1]),
+                }
+                emit(f"psrun_bench/{app_name}/{name}/P{P}",
+                     t_exec / T * 1e6,
+                     f"clocks_per_sec={T / t_exec:.1f}")
+            # measured wall-clock to a common loss threshold: the level BSP
+            # reaches at 60% of the run (all models get there, at different
+            # clocks -- freshness differences become measured seconds).
+            thresh = float(losses["bsp"][int(T * 0.6)])
+            row["loss_thresh"] = thresh
+            for name, _ in MODELS(s):
+                c = _clocks_to(losses[name], thresh)
+                row[name]["clocks_to_thresh"] = c
+                row[name]["wall_to_thresh_s"] = (
+                    None if c is None else c * row[name]["sec_per_clock"])
+            scaling[f"P{P}"] = row
+        out[app_name] = scaling
+
+    # --- the claim: eager beats lazy at equal staleness on the largest
+    # mesh.  Two layers: `pass_clocks` (fewer clocks to the threshold) is
+    # deterministic given the seed — trace values are mesh-independent by
+    # the oracle contract — and is what CI asserts; `pass` additionally
+    # multiplies by measured sec/clock (wall-clock sensitive, reported but
+    # only asserted where the host is quiet).
+    Pmax = f"P{max(workers)}"
+    claim = {}
+    for app_name in ("mf", "lda"):
+        row = out[app_name][Pmax]
+        ce, cl = row[f"essp{s}"]["clocks_to_thresh"], \
+            row[f"ssp{s}"]["clocks_to_thresh"]
+        e, l = row[f"essp{s}"]["wall_to_thresh_s"], \
+            row[f"ssp{s}"]["wall_to_thresh_s"]
+        claim[app_name] = {
+            "essp_clocks": ce, "ssp_clocks": cl,
+            "essp_wall_s": e, "ssp_wall_s": l,
+            "pass_clocks": (ce is not None) and (cl is None or ce <= cl),
+            "pass": (e is not None) and (l is None or e <= l),
+        }
+    claim["pass_clocks"] = all(claim[a]["pass_clocks"] for a in ("mf", "lda"))
+    claim["pass"] = all(claim[a]["pass"] for a in ("mf", "lda"))
+    out["claim"] = claim
+    emit("psrun_bench/eager_beats_lazy", 0.0,
+         f"mf={claim['mf']['pass']};lda={claim['lda']['pass']};"
+         f"clocks={claim['pass_clocks']}")
+    save_json("psrun_bench", out)
+    return out
+
+
+if __name__ == "__main__":
+    r = run()
+    print(r["claim"])

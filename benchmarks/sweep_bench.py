@@ -38,6 +38,28 @@ def _quad_app(P: int = 8, d: int = 256, eta: float = 0.3) -> PSApp:
                  loss=lambda x, l: jnp.sum(jnp.square(x)))
 
 
+def view_profile(T: int = 60, dims=(256, 1024, 4096)):
+    """Simulation cost vs parameter dimension ``d`` (ROADMAP d-scaling).
+
+    The ring-view kernel streams d-blocks, so larger apps should be
+    *view-bound*: steady-state us/clock ~linear in ``d`` (log-log slope <=
+    ~1), not dominated by compile or fixed overheads.  This is the evidence
+    behind lifting `MFConfig`'s default rank.
+    """
+    rows = []
+    for d in dims:
+        res = sweep(_quad_app(d=d), [ssp(3)], T, seeds=1, timeit=True)
+        rows.append({"d": d, "us_per_clock": res.t_exec_s * 1e6 / T,
+                     "t_compile_s": res.t_first_s - res.t_exec_s})
+        emit(f"sweep_bench/view_profile_d{d}", rows[-1]["us_per_clock"])
+    lg = np.log(np.asarray([r["us_per_clock"] for r in rows]))
+    ld = np.log(np.asarray([float(r["d"]) for r in rows]))
+    slope = float(np.polyfit(ld, lg, 1)[0])
+    emit("sweep_bench/view_profile_slope", 0.0, f"loglog_slope={slope:.2f}")
+    return {"rows": rows, "loglog_slope": slope,
+            "view_bound": bool(slope <= 1.15)}
+
+
 def run(T: int = 100, n_seeds: int = 2, staleness_grid=tuple(range(12)),
         seed0: int = 0):
     app = _quad_app()
@@ -89,6 +111,7 @@ def run(T: int = 100, n_seeds: int = 2, staleness_grid=tuple(range(12)),
                     **sweep_meta(res)},
         "speedup": speedup, "max_trace_err": max_err,
         "pass_3x": bool(speedup >= 3.0),
+        "view_profile": view_profile(),
     }
     emit("sweep_bench/sequential", t_seq * 1e6,
          f"compiles={seq_compiles['count']}")

@@ -38,7 +38,11 @@ def mf_time_model(**kw) -> TimeModel:
 class MFConfig:
     n_rows: int = 240
     n_cols: int = 240
-    rank: int = 12           # K
+    rank: int = 24           # K — lifted from 12 once the ring-view kernel
+                             # streamed d-blocks (ROADMAP d-scaling): the
+                             # benchmarks are view-bound, not compile-bound,
+                             # so doubling d costs ~linear sim time (see the
+                             # d-scaling profile in benchmarks/sweep_bench.py)
     true_rank: int = 12
     density: float = 0.18    # fraction of observed entries
     noise: float = 0.01

@@ -43,6 +43,25 @@ as *values*, never as Python control flow, so they may be traced arrays:
 ``core.sweep`` vmaps ``simulate`` over an entire config grid × seed batch in
 one compiled program.  Only ``cfg.model``/``read_my_writes`` and the ring
 window select code structure and must be concrete.
+
+The Trace-producer contract
+---------------------------
+Two engines produce `Trace`s and must stay interchangeable to every
+consumer (``core.staleness``, ``core.theory``, ``core.valuebound``,
+``core.timemodel``, the benchmarks):
+
+- ``simulate`` (this module) — the vectorized single-program *oracle*;
+- ``repro.psrun.PSRuntime`` — the executable runtime, which runs the same
+  clock step sharded over a ``("data","model")`` device mesh.
+
+Both fill every `Trace` field with the clock axis leading, derive all
+randomness from the same key stream (``split(rng, 3)`` per clock; worker
+keys ``split(k_upd, P)``; delivery from ``k_net``), and keep identical
+per-coordinate reduction orders — which is why a seeded BSP run is
+bit-identical between them (``psrun.validate`` checks this, and SSP/ESSP
+match too in practice).  Anything that changes a `Trace` field, the key
+derivation, or a reduction order here must be mirrored in
+``psrun/runtime.py`` — `tests/test_psrun.py` enforces the contract.
 """
 from __future__ import annotations
 
@@ -53,6 +72,7 @@ import jax
 import jax.numpy as jnp
 
 from ..kernels import ops
+from ..kernels.ref import RING_EMPTY, RING_INVALID
 from .consistency import ConsistencyConfig
 from .delays import delivery_matrix
 
@@ -116,7 +136,7 @@ def simulate(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
 
     base0 = app.x0.astype(f32)
     uring0 = jnp.zeros((W, P, d), f32)
-    uclock0 = jnp.full((W,), -10**9, jnp.int32)   # slot -> clock stored
+    uclock0 = jnp.full((W,), RING_EMPTY, jnp.int32)   # slot -> clock stored
     cview0 = jnp.full((P, P), -1, jnp.int32)      # everyone saw "clock -1"
     rng0 = jax.random.PRNGKey(seed)
 
@@ -196,7 +216,7 @@ def simulate(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
 
         # --- 4. commit to server: fold oldest slot, write newest ----------
         slot = jnp.mod(c, W)
-        old_valid = uclock[slot] > -(10**8)
+        old_valid = uclock[slot] > RING_INVALID
         base = base + jnp.where(old_valid, 1.0, 0.0) * jnp.sum(uring[slot], axis=0)
         uring = uring.at[slot].set(u)
         uclock = uclock.at[slot].set(c)
@@ -212,7 +232,7 @@ def simulate(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
             cview = jnp.where(delivered, c, cview)
 
         # --- 6. record ------------------------------------------------------
-        x_ref = base + jnp.sum(uring * (uclock[:, None, None] > -(10**8)),
+        x_ref = base + jnp.sum(uring * (uclock[:, None, None] > RING_INVALID),
                                axis=(0, 1))
         loss_ref = app.loss(x_ref, local)
         loss_view = app.loss(views[0], local)
@@ -228,7 +248,7 @@ def simulate(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
     (base, uring, uclock, _, local, _), ys = jax.lax.scan(
         step, carry0, jnp.arange(n_clocks, dtype=jnp.int32))
 
-    x_final = base + jnp.sum(uring * (uclock[:, None, None] > -(10**8)),
+    x_final = base + jnp.sum(uring * (uclock[:, None, None] > RING_INVALID),
                              axis=(0, 1))
     return Trace(
         loss_ref=ys["loss_ref"], loss_view=ys["loss_view"],

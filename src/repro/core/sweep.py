@@ -30,10 +30,14 @@ it over the whole (config-grid × seeds) batch:
 - traced consumers (``core.tune``, the traced ``TimeModel``) can ride
   *inside* the compiled program via ``post``: a callable ``post(trace, cfg,
   seed, cfg_idx) -> pytree`` applied to each (config, seed) trace on device,
-  before anything is fetched to host.  With ``keep_traces=False`` the full
-  per-clock traces are dropped on device and only the (typically tiny) post
-  outputs come back — a frontier over hundreds of grid points then moves
-  O(points x T) floats instead of O(points x T x P^2).
+  before anything is fetched to host.  The ``trace`` a ``post`` callback
+  receives follows the Trace-producer contract documented in ``core/ps.py``
+  (all fields, clock axis leading), so the same callback works on traces
+  from the executable runtime (``repro.psrun``) unchanged.  With
+  ``keep_traces=False`` the full per-clock traces are dropped on device and
+  only the (typically tiny) post outputs come back — a frontier over
+  hundreds of grid points then moves O(points x T) floats instead of
+  O(points x T x P^2).
 
 Example::
 
@@ -157,9 +161,11 @@ def _family_runner(app: PSApp, n_clocks: int, record_views: bool, devices,
         return jax.jit(batched)
 
     from jax.experimental.shard_map import shard_map
-    from jax.sharding import Mesh, PartitionSpec as P
+    from jax.sharding import PartitionSpec as P
 
-    mesh = Mesh(np.array(devices), ("batch",))
+    from ..launch.mesh import make_batch_mesh
+
+    mesh = make_batch_mesh(devices)
     sharded = jax.jit(shard_map(batched, mesh=mesh,
                                 in_specs=(P("batch"), P("batch"), P("batch")),
                                 out_specs=P("batch")))

@@ -149,6 +149,10 @@ def _attention_impl(q, k, v, *, scale, q_pos, kv_pos, causal, window,
 # PS simulator ring-buffer ops (core/ps.py per-clock hot path)
 # ==========================================================================
 RING_INVALID = -(10**8)   # uclock values below this mark empty ring slots
+RING_EMPTY = -(10**9)     # initial uclock fill (no clock stored yet)
+# Both sentinels are part of the Trace-producer contract (core/ps.py):
+# the simulator and the psrun runtime import them from here so the two
+# engines' validity masks can never silently diverge.
 
 
 def ring_view(base, uring, uclock, cview):

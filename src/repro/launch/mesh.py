@@ -1,12 +1,19 @@
-"""Production mesh construction.
+"""Mesh construction — the single factory module for every device mesh.
 
 Defined as functions (never module-level constants) so importing this module
-never touches jax device state — required because the dry-run must set
-``XLA_FLAGS`` before any jax initialization.
+never touches jax device state — required because the dry-run (and the CI
+forced-multi-device lane) must set ``XLA_FLAGS`` before any jax
+initialization.  All mesh construction in the repo routes through here so a
+``--xla_force_host_platform_device_count=N`` override is honored everywhere:
+``core.sweep`` takes its 1-D batch mesh from :func:`make_batch_mesh`, and
+the executable runtime (``repro.psrun``) takes its 2-D worker × shard mesh
+from :func:`make_ps_mesh`.
 """
 from __future__ import annotations
 
 import jax
+import numpy as np
+from jax.sharding import Mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -23,6 +30,57 @@ def make_host_mesh(model: int | None = None):
     model = model or 1
     assert n % model == 0
     return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def make_batch_mesh(devices=None) -> Mesh:
+    """1-D ``("batch",)`` mesh for embarrassingly parallel sweeps.
+
+    ``core.sweep`` shards its flattened (config × seed) batch over this;
+    defaults to every locally visible device.
+    """
+    if devices is None:
+        devices = jax.devices()
+    return Mesh(np.asarray(devices), ("batch",))
+
+
+def make_ps_mesh(data: int | None = None, model: int | None = None,
+                 devices=None) -> Mesh:
+    """``("data","model")`` mesh for the executable parameter server.
+
+    The "data" axis carries PS *workers* (data partitions), the "model"
+    axis carries *parameter shards* (the server side of the table).  By
+    default uses every visible device, preferring a true 2-D layout
+    (``model=2`` when the device count is even): besides being the layout
+    the runtime exists to exercise, it keeps >1 worker per data shard for
+    typical worker counts, where the runtime's vmapped worker step compiles
+    to the same fused arithmetic as the simulator oracle (a 1-worker shard
+    can drift by 1 ulp — see ``psrun.validate``).  Pass ``data`` explicitly
+    to run on a device subset (e.g. the worker-scaling curves in
+    ``benchmarks/psrun_bench.py``).
+    """
+    if devices is None:
+        devices = jax.devices()
+    if model is None:
+        if data is not None:
+            if len(devices) % data:
+                raise ValueError(
+                    f"data={data} does not divide the {len(devices)} "
+                    f"visible devices; pass model= explicitly")
+            model = len(devices) // data
+        else:
+            model = 2 if (len(devices) > 1 and len(devices) % 2 == 0) else 1
+    if data is None:
+        if len(devices) % model:
+            raise ValueError(
+                f"model={model} does not divide the {len(devices)} "
+                f"visible devices; pass data= explicitly")
+        data = len(devices) // model
+    n = data * model
+    if n > len(devices):
+        raise ValueError(
+            f"mesh ({data}x{model}) needs {n} devices, have {len(devices)}")
+    return Mesh(np.asarray(devices[:n]).reshape(data, model),
+                ("data", "model"))
 
 
 # TPU v5e hardware constants (roofline denominators)

@@ -1,6 +1,11 @@
 """Serving launcher: batched prefill + decode on synthetic prompts.
 
 ``python -m repro.launch.serve --arch mamba2-130m --batch 4 --new 32``
+
+The serving mesh comes from ``launch.mesh.make_host_mesh`` at call time
+(never at import), so an ``XLA_FLAGS=--xla_force_host_platform_device_count``
+override is honored: with several visible devices the prompt batch is
+sharded over the "data" axis and GSPMD partitions the decode loop.
 """
 from __future__ import annotations
 
@@ -9,11 +14,13 @@ import time
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec
 
 from ..configs import get_config, get_smoke_config
 from ..data.synthetic import TokenGenConfig, modality_stub, token_batch
 from ..models.registry import build_model
 from ..serve.decode import generate_scan
+from .mesh import make_host_mesh
 
 
 def main(argv=None):
@@ -36,6 +43,13 @@ def main(argv=None):
                           batch=args.batch, seed=args.seed)
     prompts = token_batch(dcfg, 0)
     extra = modality_stub(cfg, args.batch)
+
+    mesh = make_host_mesh()
+    if mesh.shape["data"] > 1 and args.batch % mesh.shape["data"] == 0:
+        shard = NamedSharding(mesh, PartitionSpec("data"))
+        prompts = jax.device_put(prompts, shard)
+        extra = {k: jax.device_put(v, shard) for k, v in extra.items()}
+        print(f"sharding batch over mesh {dict(mesh.shape)}")
 
     t0 = time.time()
     out = generate_scan(model, params, prompts, max_new=args.new,

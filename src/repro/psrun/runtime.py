@@ -1,0 +1,308 @@
+"""The executable PS runtime: one `shard_map` clock step on a 2-D mesh.
+
+Layout (mesh axes ``("data", "model")``, built by `launch.mesh.make_ps_mesh`):
+
+- the flat parameter vector (dim ``d``, zero-padded to divide the model
+  axis) is sharded over ``"model"``: each model shard *owns* a contiguous
+  coordinate block of the table — the server side;
+- the ``P`` workers are partitioned over ``"data"`` (``P`` must divide by
+  the axis size); each data shard holds its workers' local state, the
+  reader rows of the per-channel clock matrix ``cview[r, q]``, and (with
+  the model axis) its block of every producer's in-transit update ring —
+  the client cache;
+- the update ring ``uring[W, P, d_block]`` is replicated over ``"data"``
+  and sharded over ``"model"``: every reader can see every producer's
+  updates for the coordinates its column owns, which is exactly the cache
+  layout of ESSPTable clients subscribed to all table rows.
+
+Per clock, inside ``shard_map`` (collectives annotated):
+
+1. consistency enforcement advances the local reader rows of ``cview``
+   (blocking fetches; VAP needs the global suffix-aggregate inf-norms —
+   one ``pmax`` over ``"model"``);
+2. views materialize shard-locally through ``kernels.ops.ring_view``
+   (readers × owned coordinates — the Pallas path on TPU), then assemble
+   per-reader full views with an ``all_gather`` over ``"model"``;
+3. each worker runs ``app.worker_update`` on its own data shard;
+4. updates are pushed to the owning shards: ``all_gather`` over ``"data"``
+   then keep the owned coordinate block (a host-mesh stand-in for the
+   per-shard all-to-all a network PS would do), written into the ring;
+   the oldest ring slot folds into the shard's base;
+5. the end-of-clock delivery matrix (the synthetic network model shared
+   with the simulator — `core.delays`) advances ``cview`` eagerly for
+   ESSP/async/VAP; SSP ignores pushes (pull-based).
+
+RNG and arithmetic mirror ``core.ps.simulate`` *exactly* (same key splits,
+same per-coordinate reduction orders), which is what makes the simulator an
+executable oracle: a seeded BSP run matches bit for bit, and the numeric
+knobs of `ConsistencyConfig` stay jit *arguments* (pytree data), so
+re-running with different staleness/push_prob/straggler knobs reuses the
+compiled program — one compile per config family, like ``core.sweep``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P_
+
+from ..core.consistency import ConsistencyConfig
+from ..core.delays import delivery_matrix
+from ..core.ps import PSApp, Trace
+from ..kernels import ops
+from ..kernels.ref import RING_EMPTY, RING_INVALID
+from ..launch.mesh import make_ps_mesh
+
+# Ticks once per (re)trace of the runtime body, i.e. once per compiled
+# program — the same compile-count evidence `core.sweep` keeps.  Numeric
+# knob changes must NOT tick it (one compile per config family).
+_TRACE_COUNTER = {"count": 0}
+
+
+def trace_count() -> int:
+    return _TRACE_COUNTER["count"]
+
+
+def default_mesh(n_workers: int, devices=None):
+    """The widest ``("data","model")`` mesh for ``n_workers`` that stays in
+    the bit-identity regime: the data axis is the largest divisor of the
+    device count that divides the worker count while keeping >= 2 workers
+    per shard; an even leftover becomes 2 model-shard columns."""
+    if devices is None:
+        devices = jax.devices()
+    n = len(devices)
+    data = 1
+    for cand in range(min(n, n_workers // 2), 0, -1):
+        if n_workers % cand == 0 and n % cand == 0:
+            data = cand
+            break
+    rest = n // data
+    model = 2 if (rest > 1 and rest % 2 == 0) else 1
+    return make_ps_mesh(data=data, model=model, devices=devices)
+
+
+def _layout(app: PSApp, mesh):
+    """Validate the (app, mesh) pairing and derive the shard geometry."""
+    assert set(("data", "model")) <= set(mesh.axis_names), mesh.axis_names
+    DP, M = mesh.shape["data"], mesh.shape["model"]
+    P, d = app.n_workers, app.dim
+    if P % DP:
+        raise ValueError(
+            f"n_workers={P} must divide by the data axis ({DP}); "
+            f"build a smaller mesh with launch.mesh.make_ps_mesh")
+    dpad = -(-d // M) * M
+    return DP, M, P // DP, dpad, dpad // M
+
+
+def make_run_fn(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
+                mesh=None, record_views: bool = False):
+    """Build the jitted runtime for one config *family* on ``mesh``.
+
+    Returns ``fn(seed, cfg) -> Trace``.  ``cfg``'s numeric knobs are traced
+    jit arguments — calling with different staleness/push_prob/straggler
+    values (same model, same ring window) reuses the compiled program.  The
+    ``cfg`` given here only fixes the static structure (model, window,
+    read_my_writes).
+    """
+    mesh = make_ps_mesh() if mesh is None else mesh
+    _DP, _M, Pl, dpad, dl = _layout(app, mesh)
+    P, d = app.n_workers, app.dim
+    W = cfg.effective_window
+    f32 = jnp.float32
+
+    def body(cfg, base, uring, uclock, cview, local, rng):
+        # local shards: base [dl], uring [W, P, dl], uclock [W] (replicated),
+        # cview [Pl, P], local leaves [Pl, ...], rng replicated.
+        _TRACE_COUNTER["count"] += 1          # fires once per trace/compile
+        di = jax.lax.axis_index("data")
+        mi = jax.lax.axis_index("model")
+        rows0 = (di * Pl).astype(jnp.int32)
+        worker_ids = rows0 + jnp.arange(Pl, dtype=jnp.int32)
+        producer_ids = jnp.arange(P, dtype=jnp.int32)
+        eye_l = worker_ids[:, None] == producer_ids[None, :]   # local eye rows
+        s = cfg.staleness
+
+        vmapped_update = jax.vmap(app.worker_update,
+                                  in_axes=(0, 0, 0, None, 0))
+
+        def enforce_vap(c, cview, norms):
+            # identical math to ps.simulate.enforce_vap, on local reader rows
+            v_t = cfg.v0 / jnp.sqrt(c.astype(f32) + 1.0)
+            ok = norms <= v_t                                  # [W+1, P]
+            ok = ok.at[0].set(True)
+            kcur = jnp.clip(c - 1 - cview, 0, W)               # [Pl, P]
+            ks = jnp.arange(W + 1, dtype=jnp.int32)[:, None, None]
+            cond = ok[:, None, :] & (ks <= kcur[None, :, :])
+            kbest = jnp.max(jnp.where(cond, ks, -1), axis=0)   # [Pl, P]
+            required = c - 1 - kbest
+            forced = cview < required
+            return jnp.maximum(cview, required), forced
+
+        def step(carry, c):
+            base, uring, uclock, cview, local, rng = carry
+            rng, k_upd, k_net = jax.random.split(rng, 3)
+
+            # global per-producer suffix-aggregate inf-norms: local block
+            # norms, max-reduced over the owning shards.
+            norms = jax.lax.pmax(
+                ops.vap_suffix_norms(uring, uclock, c), "model")  # [W+1, P]
+
+            # --- 1. pre-read consistency enforcement (blocking fetches) ---
+            if cfg.model == "bsp":
+                forced = cview < (c - 1)
+                cview = jnp.full_like(cview, c - 1)
+            elif cfg.model in ("ssp", "essp"):
+                forced = cview < (c - s - 1)
+                cview = jnp.where(forced, c - 1, cview)
+            elif cfg.model == "vap":
+                cview, forced = enforce_vap(c, cview, norms)
+            else:  # async
+                forced = jnp.zeros_like(cview, dtype=bool)
+
+            if cfg.read_my_writes:
+                cview = jnp.where(eye_l, c - 1, cview)
+
+            staleness = cview - c                              # [Pl, P]
+
+            kcur = jnp.clip(c - 1 - cview, 0, W)               # [Pl, P]
+            intransit_inf = jax.lax.pmax(
+                jnp.max(norms[kcur, producer_ids[None, :]]), "data")
+
+            # --- 2. materialize views: shard-local, then assemble ---------
+            views_l = ops.ring_view(base, uring, uclock, cview)  # [Pl, dl]
+            views = jax.lax.all_gather(views_l, "model", axis=1,
+                                       tiled=True)[:, :d]        # [Pl, d]
+
+            # --- 3. worker computation (this shard's workers only) --------
+            upd_keys = jax.lax.dynamic_slice_in_dim(
+                jax.random.split(k_upd, P), rows0, Pl)
+            u_l, local = vmapped_update(views, local, worker_ids, c, upd_keys)
+            u_l = u_l.astype(f32)                              # [Pl, d]
+
+            # --- 4. push to owning shards; fold oldest slot ---------------
+            u_all = jax.lax.all_gather(u_l, "data", axis=0, tiled=True)
+            # norm on the gathered [P, d] — the oracle's operand shape, so
+            # XLA emits the same reduction and the floats match bit-for-bit
+            u_l2 = jnp.linalg.norm(u_all, axis=-1)
+            u_all = jnp.pad(u_all, ((0, 0), (0, dpad - d)))
+            u_blk = jax.lax.dynamic_slice(u_all, (0, mi * dl), (P, dl))
+            slot = jnp.mod(c, W)
+            old_valid = uclock[slot] > RING_INVALID
+            base = base + jnp.where(old_valid, 1.0, 0.0) * jnp.sum(
+                uring[slot], axis=0)
+            uring = uring.at[slot].set(u_blk)
+            uclock = uclock.at[slot].set(c)
+
+            # --- 5. end-of-clock delivery (affects reads at c+1) ----------
+            if cfg.model == "bsp":
+                delivered = jnp.ones((Pl, P), bool)
+                cview = jnp.full_like(cview, c)
+            elif cfg.model == "ssp":
+                delivered = jnp.zeros((Pl, P), bool)
+            else:  # essp / async / vap: delay-driven eager delivery
+                delivered = jax.lax.dynamic_slice_in_dim(
+                    delivery_matrix(k_net, cfg, P), rows0, Pl)
+                cview = jnp.where(delivered, c, cview)
+
+            # --- 6. record (gathered so losses match the oracle exactly) --
+            x_ref = base + jnp.sum(
+                uring * (uclock[:, None, None] > RING_INVALID), axis=(0, 1))
+            x_ref = jax.lax.all_gather(x_ref, "model", tiled=True)[:d]
+            locals_all = jax.tree_util.tree_map(
+                lambda x: jax.lax.all_gather(x, "data", axis=0, tiled=True),
+                local)
+            views_all = jax.lax.all_gather(views, "data", axis=0, tiled=True)
+            out = dict(loss_ref=app.loss(x_ref, locals_all),
+                       loss_view=app.loss(views_all[0], locals_all),
+                       staleness=staleness, forced=forced,
+                       delivered=delivered,
+                       u_l2=u_l2, intransit_inf=intransit_inf)
+            if record_views:
+                out["views0"] = views_all[0]
+            return (base, uring, uclock, cview, local, rng), out
+
+        carry0 = (base, uring, uclock, cview, local, rng)
+        (base, uring, uclock, _, local, _), ys = jax.lax.scan(
+            step, carry0, jnp.arange(n_clocks, dtype=jnp.int32))
+        x_final = base + jnp.sum(
+            uring * (uclock[:, None, None] > RING_INVALID), axis=(0, 1))
+        return {"ys": ys, "x_final": x_final, "locals_final": local}
+
+    local_spec = jax.tree_util.tree_map(lambda _: P_("data"), app.local0)
+    ys_specs = {"loss_ref": P_(), "loss_view": P_(),
+                "staleness": P_(None, "data", None),
+                "forced": P_(None, "data", None),
+                "delivered": P_(None, "data", None),
+                "u_l2": P_(), "intransit_inf": P_()}
+    if record_views:
+        ys_specs["views0"] = P_()
+    sharded = shard_map(
+        body, mesh=mesh,
+        in_specs=(P_(), P_("model"), P_(None, None, "model"), P_(),
+                  P_("data", None), local_spec, P_()),
+        out_specs={"ys": ys_specs, "x_final": P_("model"),
+                   "locals_final": local_spec},
+        check_rep=False)
+
+    def run(seed, cfg):
+        base0 = jnp.pad(app.x0.astype(f32), (0, dpad - d))
+        uring0 = jnp.zeros((W, P, dpad), f32)
+        uclock0 = jnp.full((W,), RING_EMPTY, jnp.int32)
+        cview0 = jnp.full((P, P), -1, jnp.int32)
+        rng0 = jax.random.PRNGKey(seed)
+        out = sharded(cfg, base0, uring0, uclock0, cview0, app.local0, rng0)
+        ys = out["ys"]
+        return Trace(loss_ref=ys["loss_ref"], loss_view=ys["loss_view"],
+                     staleness=ys["staleness"], forced=ys["forced"],
+                     delivered=ys["delivered"], u_l2=ys["u_l2"],
+                     intransit_inf=ys["intransit_inf"],
+                     views0=ys.get("views0"),
+                     x_final=out["x_final"][:d],
+                     locals_final=out["locals_final"])
+
+    jitted = jax.jit(run)
+
+    def fn(seed, cfg_run: ConsistencyConfig | None = None):
+        c = cfg if cfg_run is None else cfg_run
+        if c.effective_window != W:
+            raise ValueError(
+                f"runtime compiled for ring window {W}, got "
+                f"{c.effective_window}; set cfg.window explicitly or build "
+                f"a new run fn")
+        # normalize the static window so every same-family call shares one
+        # pytree treedef (and therefore one jit cache entry)
+        return jitted(jnp.asarray(seed, jnp.uint32), c.replace(window=W))
+
+    return fn
+
+
+class PSRuntime:
+    """Executable sharded PS: ``PSRuntime(mesh).run(app, cfg, n_clocks)``.
+
+    Produces the same `core.ps.Trace` schema as ``core.ps.simulate`` (the
+    *Trace-producer contract*: identical fields, leading clock axis, same
+    RNG stream), executed over the mesh instead of vectorized on one
+    device.  Compiled programs are cached per (app, config family, ring
+    window, n_clocks) — numeric knob changes re-use them.
+    """
+
+    def __init__(self, mesh=None):
+        self.mesh = make_ps_mesh() if mesh is None else mesh
+        self._cache: dict = {}
+
+    def run_fn(self, app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
+               record_views: bool = False):
+        """The cached jitted ``fn(seed, cfg) -> Trace`` for this family."""
+        key = (id(app), cfg.family, cfg.effective_window, n_clocks,
+               record_views)
+        fn = self._cache.get(key)
+        if fn is None:
+            fn = make_run_fn(app, cfg, n_clocks, mesh=self.mesh,
+                             record_views=record_views)
+            self._cache[key] = fn
+        return fn
+
+    def run(self, app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
+            seed=0, record_views: bool = False) -> Trace:
+        """Run ``n_clocks`` of the app under ``cfg`` on the mesh."""
+        return self.run_fn(app, cfg, n_clocks, record_views)(seed, cfg)

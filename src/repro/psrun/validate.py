@@ -1,0 +1,85 @@
+"""Cross-validation of the executable runtime against the simulator oracle.
+
+Three levels of contract, matched to what each consistency model promises:
+
+- **bsp** — the network model is deterministic (full barrier), so a seeded
+  run must be *bit-identical* to ``core.ps.simulate``: every `Trace` field,
+  every float.  (With the shared synthetic delay model this actually holds
+  for every model — the runtime replays the simulator's RNG stream — but
+  only BSP's equality is part of the contract; the rest is gravy that the
+  tests pin down opportunistically.)
+- **ssp / essp** — the bounded-staleness invariant: at read time every
+  channel satisfies ``-(s+1) <= cview[r,q] - c <= -1``.
+- **vap** — the value-bound condition of paper eq. 1, via
+  ``core.valuebound.check_condition``.
+
+Bit-identity caveats (both are fusion artifacts, not semantic drift, and
+both are pinned by ``tests/test_psrun.py``): it holds whenever each data
+shard carries >1 worker (a batch-of-1 vmapped worker step can compile to
+different fused arithmetic than the oracle's batch-of-P — 1 ulp), and VAP's
+enforcement ops likewise perturb XLA's fusion of the ring-view contraction
+(traces agree to ~1e-6, decisions — staleness/forced/delivered — exactly).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..core import valuebound
+from ..core.consistency import ConsistencyConfig
+from ..core.ps import PSApp, Trace, simulate
+from .runtime import PSRuntime
+
+TRACE_FIELDS = ("loss_ref", "loss_view", "staleness", "forced", "delivered",
+                "u_l2", "intransit_inf", "x_final")
+
+
+def trace_max_diff(got: Trace, want: Trace) -> dict:
+    """Max absolute difference per `Trace` field (0.0 everywhere == exact)."""
+    out = {}
+    for name in TRACE_FIELDS:
+        a = np.asarray(getattr(got, name)).astype(np.float64)
+        b = np.asarray(getattr(want, name)).astype(np.float64)
+        out[name] = float(np.abs(a - b).max()) if a.size else 0.0
+    return out
+
+
+def check_staleness_bound(trace: Trace, cfg: ConsistencyConfig) -> dict:
+    """SSP/ESSP invariant: every read is at most ``s+1`` clocks stale and
+    never fresher than the barrier (``-1``)."""
+    st = np.asarray(trace.staleness)
+    s = int(cfg.staleness)
+    viol_old = int((st < -(s + 1)).sum())
+    viol_fresh = int((st > -1).sum())
+    return {"violations": viol_old + viol_fresh,
+            "min": int(st.min()), "max": int(st.max()), "bound": -(s + 1)}
+
+
+def cross_validate(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
+                   runtime: PSRuntime | None = None, seed=0) -> dict:
+    """Run both engines and check the model-appropriate oracle contract.
+
+    Returns a dict with ``ok`` plus the per-model evidence.  BSP compares
+    bit-for-bit against ``simulate``; SSP/ESSP check the staleness bound;
+    VAP checks the value bound.
+    """
+    runtime = runtime or PSRuntime()
+    tr = runtime.run(app, cfg, n_clocks, seed=seed)
+    out: dict = {"model": cfg.model}
+    if cfg.model == "bsp":
+        import jax
+        want = jax.jit(lambda sd: simulate(app, cfg, n_clocks, seed=sd))(
+            np.uint32(seed))
+        diffs = trace_max_diff(tr, want)
+        out["max_diff"] = diffs
+        out["ok"] = all(v == 0.0 for v in diffs.values())
+    elif cfg.model in ("ssp", "essp"):
+        chk = check_staleness_bound(tr, cfg)
+        out.update(chk)
+        out["ok"] = chk["violations"] == 0
+    elif cfg.model == "vap":
+        chk = valuebound.check_condition(tr, float(cfg.v0))
+        out.update(chk)
+        out["ok"] = chk["violations"] == 0
+    else:  # async has no bound to check; just require finite traces
+        out["ok"] = bool(np.isfinite(np.asarray(tr.loss_ref)).all())
+    return out

@@ -1,9 +1,15 @@
 import os
 import sys
 
-# Tests must see the default single CPU device (the dry-run sets its own
-# XLA_FLAGS in a subprocess); make sure nothing leaks in.
+# Tests must see a *deliberate* device topology: pop any ambient XLA_FLAGS
+# (the dry-run sets its own in a subprocess; nothing may leak in), then
+# honor the explicit opt-in used by the CI forced-multi-device lane so the
+# shard_map paths (core/sweep, repro/psrun) run genuinely sharded.
 os.environ.pop("XLA_FLAGS", None)
+_n_dev = os.environ.get("REPRO_FORCE_HOST_DEVICES")
+if _n_dev:
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={int(_n_dev)}")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.dirname(__file__))

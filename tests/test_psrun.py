@@ -1,0 +1,198 @@
+"""The psrun oracle contract: the executable sharded PS vs the simulator.
+
+Contract being pinned (see ``psrun/validate.py``):
+
+- seeded BSP runs are **bit-identical** to ``core.ps.simulate`` — on the
+  quadratic app, on MF (the acceptance app) and on LDA;
+- SSP/ESSP runs satisfy the bounded-staleness invariant for arbitrary
+  knob draws (hypothesis; the offline stub replays a fixed sample);
+- VAP runs satisfy the paper's value-bound condition, with integer
+  decisions (staleness/forced/delivered) exactly equal to the oracle;
+- reruns with the same seed are bit-identical (determinism), different
+  seeds differ;
+- numeric knob changes reuse the compiled program (one compile per
+  config family, like ``core.sweep``).
+
+The mesh helper keeps >1 worker per data shard wherever the device count
+allows — the bit-identity regime (a batch-of-1 worker shard may drift by
+1 ulp; ``launch.mesh.make_ps_mesh`` documents this).  Under the CI
+forced-multi-device lane (``REPRO_FORCE_HOST_DEVICES=8``) these tests run
+genuinely sharded over both mesh axes.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import bsp, essp, simulate, ssp, vap
+from repro.core.ps import PSApp
+from repro.launch.mesh import make_ps_mesh
+from repro.psrun import PSRuntime, cross_validate, make_run_fn, trace_max_diff
+from repro.psrun.runtime import default_mesh as ps_mesh_for
+from repro.psrun.runtime import trace_count
+from repro.psrun.validate import TRACE_FIELDS, check_staleness_bound
+
+
+def assert_bit_identical(got, want, context=""):
+    for name in TRACE_FIELDS:
+        a, b = np.asarray(getattr(got, name)), np.asarray(getattr(want, name))
+        np.testing.assert_array_equal(a, b, err_msg=f"{context}:{name}")
+
+
+@pytest.fixture(scope="module")
+def quad_runtime(quad_app):
+    return PSRuntime(ps_mesh_for(quad_app.n_workers))
+
+
+@pytest.fixture(scope="module")
+def mf_app():
+    from repro.apps.matfact import MFConfig, make_mf_app
+    return make_mf_app(MFConfig(n_rows=64, n_cols=64, rank=8, true_rank=8,
+                                n_workers=4, batch=64, lr=0.5))
+
+
+def oracle(app, cfg, T, seed):
+    return jax.jit(lambda sd: simulate(app, cfg, T, seed=sd))(
+        jnp.uint32(seed))
+
+
+# ---------------------------------------------------------------------------
+# BSP bit-identity (the acceptance-criterion contract)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed", [0, 3])
+def test_bsp_bit_identical_quad(quad_app, quad_runtime, seed):
+    got = quad_runtime.run(quad_app, bsp(), 25, seed=seed)
+    assert_bit_identical(got, oracle(quad_app, bsp(), 25, seed),
+                         context=f"bsp seed={seed}")
+
+
+def test_bsp_bit_identical_mf(mf_app):
+    rt = PSRuntime(ps_mesh_for(mf_app.n_workers))
+    got = rt.run(mf_app, bsp(), 12, seed=1)
+    assert_bit_identical(got, oracle(mf_app, bsp(), 12, 1), context="mf bsp")
+
+
+@pytest.mark.slow
+def test_bsp_bit_identical_lda():
+    from repro.apps.lda import LDAConfig, make_lda_app
+    app = make_lda_app(LDAConfig(n_docs=16, doc_len=24, vocab=48, n_topics=4,
+                                 true_topics=4, n_workers=4))
+    rt = PSRuntime(ps_mesh_for(app.n_workers))
+    got = rt.run(app, bsp(), 8, seed=0)
+    assert_bit_identical(got, oracle(app, bsp(), 8, 0), context="lda bsp")
+
+
+def test_ssp_essp_bit_identical_quad(quad_app, quad_runtime):
+    """Stronger than the contract requires: with the shared synthetic delay
+    model the whole RNG stream is replayed, so SSP/ESSP match bit-for-bit
+    too (in the >1-worker-per-shard regime)."""
+    for cfg in (ssp(3), essp(3), essp(5, push_prob=0.6)):
+        got = quad_runtime.run(quad_app, cfg, 25, seed=2)
+        assert_bit_identical(got, oracle(quad_app, cfg, 25, 2),
+                             context=f"{cfg.model}({cfg.staleness})")
+
+
+def test_record_views_matches(quad_app, quad_runtime):
+    got = quad_runtime.run(quad_app, essp(2), 10, seed=0, record_views=True)
+    want = jax.jit(lambda: simulate(quad_app, essp(2), 10, seed=0,
+                                    record_views=True))()
+    np.testing.assert_array_equal(np.asarray(got.views0),
+                                  np.asarray(want.views0))
+
+
+# ---------------------------------------------------------------------------
+# SSP bounded staleness (property test; stub replays a fixed sample offline)
+# ---------------------------------------------------------------------------
+_PROP_FNS = {}
+
+
+def _prop_fn(quad_app, model):
+    if model not in _PROP_FNS:
+        _PROP_FNS[model] = make_run_fn(
+            quad_app, ssp(0, window=10) if model == "ssp"
+            else essp(0, window=10), 15, mesh=ps_mesh_for(quad_app.n_workers))
+    return _PROP_FNS[model]
+
+
+@settings(max_examples=8, deadline=None)
+@given(s=st.integers(min_value=0, max_value=7),
+       push_prob=st.floats(min_value=0.2, max_value=1.0),
+       straggler_prob=st.floats(min_value=0.0, max_value=0.5),
+       model=st.sampled_from(["ssp", "essp"]),
+       seed=st.integers(min_value=0, max_value=99))
+def test_staleness_bound_property(quad_app, s, push_prob, straggler_prob,
+                                  model, seed):
+    """A read at clock c includes every update of clocks <= c-s-1 and never
+    claims freshness beyond the barrier — for any knob draw.  The fixed
+    ring window keeps all draws inside two compiled programs."""
+    mk = ssp if model == "ssp" else essp
+    cfg = mk(s, window=10).replace(push_prob=push_prob,
+                                   straggler_prob=straggler_prob)
+    tr = _prop_fn(quad_app, model)(seed, cfg)
+    chk = check_staleness_bound(tr, cfg)
+    assert chk["violations"] == 0, (model, s, chk)
+    assert chk["max"] == -1                     # reads always lag the barrier
+
+
+# ---------------------------------------------------------------------------
+# VAP value bound + async finiteness via the cross_validate API
+# ---------------------------------------------------------------------------
+def test_vap_value_bound_and_decisions(quad_app, quad_runtime):
+    cfg = vap(0.5, staleness=4)
+    out = cross_validate(quad_app, cfg, 20, runtime=quad_runtime, seed=1)
+    assert out["ok"], out
+    # decisions match the oracle exactly; floats to fusion tolerance
+    got = quad_runtime.run(quad_app, cfg, 20, seed=1)
+    want = oracle(quad_app, cfg, 20, 1)
+    for name in ("staleness", "forced", "delivered"):
+        np.testing.assert_array_equal(np.asarray(getattr(got, name)),
+                                      np.asarray(getattr(want, name)))
+    diffs = trace_max_diff(got, want)
+    assert diffs["loss_ref"] < 1e-4 and diffs["x_final"] < 1e-4, diffs
+
+
+def test_cross_validate_all_models(quad_app, quad_runtime):
+    for cfg in (bsp(), ssp(2), essp(4)):
+        out = cross_validate(quad_app, cfg, 15, runtime=quad_runtime)
+        assert out["ok"], out
+
+
+# ---------------------------------------------------------------------------
+# determinism + compile reuse + API guards
+# ---------------------------------------------------------------------------
+def test_determinism_under_reseed(quad_app, quad_runtime):
+    a = quad_runtime.run(quad_app, essp(3), 20, seed=7)
+    b = quad_runtime.run(quad_app, essp(3), 20, seed=7)
+    assert_bit_identical(a, b, context="reseed(7,7)")
+    c = quad_runtime.run(quad_app, essp(3), 20, seed=8)
+    assert np.abs(np.asarray(a.x_final) - np.asarray(c.x_final)).max() > 0
+
+
+def test_knob_changes_reuse_compile(quad_app, quad_runtime):
+    fn = quad_runtime.run_fn(quad_app, essp(3), 12)
+    fn(0, essp(3))                               # warm
+    n0 = trace_count()
+    for cfg in (essp(1), essp(5, push_prob=0.4),
+                essp(2, straggler_prob=0.3, straggler_workers=2)):
+        tr = fn(0, cfg.replace(window=essp(3).effective_window))
+        assert np.isfinite(np.asarray(tr.loss_ref)).all()
+    assert trace_count() == n0                   # no retrace for knob moves
+
+
+def test_window_mismatch_raises(quad_app, quad_runtime):
+    fn = quad_runtime.run_fn(quad_app, essp(3), 5)
+    with pytest.raises(ValueError):
+        fn(0, essp(7))                           # different ring window
+
+
+def test_worker_divisibility_guard():
+    if len(jax.devices()) < 2:
+        pytest.skip("needs >= 2 devices to build a non-dividing mesh")
+    app = PSApp(name="q3", dim=8, n_workers=3, x0=jnp.zeros((8,)),
+                local0={"_": jnp.zeros((3, 1))},
+                worker_update=lambda v, l, w, c, r: (v * 0.0, l),
+                loss=lambda x, l: jnp.sum(x))
+    with pytest.raises(ValueError):
+        make_run_fn(app, bsp(), 3, mesh=make_ps_mesh(data=2, model=1))

@@ -26,6 +26,20 @@ def assert_traces_identical(got, want, context=""):
         np.testing.assert_array_equal(a, b, err_msg=f"{context}:{name}")
 
 
+def assert_traces_close(got, want, context=""):
+    """Decisions exact, floats to fusion tolerance — the contract for VAP
+    under a sharded sweep, whose shard_map collectives perturb XLA's fusion
+    of the enforcement + ring-view chain by ~1 ulp/clock (same caveat as
+    `psrun.validate`; single-device sweeps stay bit-identical)."""
+    for name in INT_FIELDS:
+        a, b = np.asarray(getattr(got, name)), np.asarray(getattr(want, name))
+        np.testing.assert_array_equal(a, b, err_msg=f"{context}:{name}")
+    for name in FLOAT_FIELDS:
+        a, b = np.asarray(getattr(got, name)), np.asarray(getattr(want, name))
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6,
+                                   err_msg=f"{context}:{name}")
+
+
 FAMILY_CASES = [
     ("bsp", [bsp(), bsp(push_prob=0.5)]),
     ("ssp", [ssp(2), ssp(5)]),
@@ -44,14 +58,17 @@ def test_sweep_bit_identical_to_simulate(quad_app, model, configs):
     seeds = [0, 3]
     res = sweep(quad_app, configs, 25, seeds=seeds)
     assert res.n_compiles == 1
+    check = (assert_traces_close
+             if model == "vap" and len(jax.devices()) > 1
+             else assert_traces_identical)
     for i, cfg in enumerate(configs):
         assert res.harmonized[i].effective_window == family_window(configs)
         for j, sd in enumerate(seeds):
             want = jax.jit(
                 lambda c=res.harmonized[i], s=sd:
                 simulate(quad_app, c, 25, seed=s))()
-            assert_traces_identical(res.trace(i, j), want,
-                                    context=f"{model}[{i}] seed={sd}")
+            check(res.trace(i, j), want,
+                  context=f"{model}[{i}] seed={sd}")
 
 
 def test_sweep_groups_mixed_families(quad_app):
