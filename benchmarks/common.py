@@ -34,6 +34,27 @@ def save_json(name: str, payload: dict):
         json.dump(payload, f, indent=1, default=float)
 
 
+def timed_runtime_run(rt, app, cfg, n_clocks, seed=0):
+    """Shared PS-runtime timing loop (psrun_bench / pods_bench):
+    ``(first-call seconds incl. compile, steady-state seconds, trace)``."""
+    import time
+    fn = rt.run_fn(app, cfg, n_clocks)
+    t0 = time.perf_counter()
+    tr = jax.block_until_ready(fn(seed, cfg))
+    t_first = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    tr = jax.block_until_ready(fn(seed, cfg))
+    t_exec = time.perf_counter() - t0
+    return t_first, t_exec, tr
+
+
+def clocks_to_threshold(loss, thresh):
+    """First clock (1-based) at which ``loss`` reaches ``thresh``, else
+    None — the time-to-loss metric of the runtime benchmarks."""
+    hit = np.flatnonzero(np.asarray(loss) <= thresh)
+    return int(hit[0]) + 1 if hit.size else None
+
+
 def us_per_config(res) -> float:
     """Steady-state execution us attributed to one (config, seed) point of a
     `core.sweep.SweepResult` (compile time is reported separately)."""

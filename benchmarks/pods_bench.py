@@ -1,0 +1,191 @@
+"""Hierarchical multi-pod PS (`repro.pods`) — throughput vs pod count and
+the paper's eager-beats-lazy claim lifted one hierarchy level.
+
+Where `benchmarks.psrun_bench` measures the flat executable runtime, this
+one measures the hierarchical one: MF and LDA on a 3-D
+``("pod","data","model")`` mesh with a full parameter-shard replica per
+pod, comparing *eager* cross-pod reconciliation (ESSP-style: update deltas
+cross the slow tier every clock) against *clock-gated* sync (SSP-style:
+a cross-pod channel is pulled only when its bound trips) at **equal total
+staleness** ``s_intra + s_xpod`` — the paper's headline claim applied to
+the second network tier.  Reported per (app × pod count):
+
+- clocks/sec of the compiled hierarchical step (and its compile time);
+- clocks and measured wall seconds to a common loss threshold (set by a
+  hierarchical BSP reference run at 60% of the clock budget);
+- cross-pod reconciliation traffic (`pods.reconcile.reconcile_stats`):
+  eager delta deliveries vs gated pulls, and the delta-compression ratio.
+
+Before timing anything it re-checks the hierarchical oracle contract
+(seeded BSP run on 2 pods bit-identical to ``core.ps.simulate`` with
+``n_pods=2``).  The claim layer mirrors psrun_bench: ``pass_clocks``
+(fewer clocks to threshold — deterministic given the seed, what CI
+asserts) and ``pass`` (adds measured sec/clock — wall-clock sensitive on
+shared runners).
+
+Standalone (``python -m benchmarks.pods_bench``) this forces a 16-device
+host platform before jax initializes (the CI pods lane's topology: 2x4x2);
+under ``benchmarks/run.py`` it runs on whatever topology the process has.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+# Only the standalone invocation owns the process and may pick its device
+# topology; a plain import must never mutate the environment.
+if __name__ == "__main__" and "jax" not in sys.modules \
+        and "xla_force_host_platform_device_count" \
+        not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=16"
+                               ).strip()
+
+import jax                  # noqa: E402
+import numpy as np          # noqa: E402
+
+from repro.apps.lda import LDAConfig, make_lda_app          # noqa: E402
+from repro.apps.matfact import MFConfig, make_mf_app        # noqa: E402
+from repro.core import bsp, essp, ssp                       # noqa: E402
+from repro.core.consistency import podded                   # noqa: E402
+from repro.pods import (PodsRuntime, cross_validate_pods,   # noqa: E402
+                        default_pods_mesh, reconcile_stats)
+from repro.psrun import PSRuntime                           # noqa: E402
+from repro.psrun.runtime import default_mesh as flat_mesh_for  # noqa: E402
+
+from .common import (clocks_to_threshold, emit, save_json,  # noqa: E402
+                     timed_runtime_run)
+
+# Equal-total-staleness pairing: s_intra + s_xpod is the same for both
+# reconciliation styles; the cross-pod tier is ~an order slower.
+S_INTRA, S_XPOD, T_NET_XPOD = 2, 4, 8.0
+
+
+def _runtime_for(workers, n_pods):
+    """`PodsRuntime` on a physical pod mesh when the host has the devices;
+    otherwise the flat runtime carrying the hierarchical config.  The
+    traces (and therefore the clocks-to-threshold claim) are
+    placement-independent by the oracle contract; only the measured
+    sec/clock reflects the fallback placement — which is also what keeps
+    ``benchmarks.run`` viable on a single-device host."""
+    n = len(jax.devices())
+    if n_pods == 1 or (n >= 2 * n_pods and n % n_pods == 0):
+        try:
+            return PodsRuntime(default_pods_mesh(workers, n_pods=n_pods))
+        except ValueError:
+            pass
+    return PSRuntime(flat_mesh_for(workers))
+
+
+def _configs(n_pods):
+    mk = lambda cfg: podded(cfg, n_pods, s_xpod=S_XPOD,
+                            t_net_xpod=T_NET_XPOD)
+    return [("bsp", mk(bsp())),
+            ("gated", mk(ssp(S_INTRA))),      # clock-gated cross-pod pull
+            ("eager", mk(essp(S_INTRA)))]     # eager cross-pod push
+
+
+def _mf(P):
+    return make_mf_app(MFConfig(n_workers=P))
+
+
+def _lda(P):
+    return make_lda_app(LDAConfig(n_workers=P))
+
+
+def run(T_mf: int = 160, T_lda: int = 40, workers: int = 16,
+        pod_counts=(1, 2), seed: int = 0):
+    n_dev = len(jax.devices())
+    out: dict = {"n_devices": n_dev, "workers": workers,
+                 "s_intra": S_INTRA, "s_xpod": S_XPOD,
+                 "t_net_xpod": T_NET_XPOD}
+
+    # --- hierarchical oracle contract first: measured numbers only count
+    # if the runtime runs the same algorithm the simulator proves things
+    # about (BSP bit-identity is checked inside cross_validate_pods).
+    app_small = make_mf_app(MFConfig(n_rows=64, n_cols=64, rank=8,
+                                     true_rank=8, n_workers=workers,
+                                     batch=64, lr=0.5))
+    rt2 = _runtime_for(workers, 2)
+    chk = cross_validate_pods(
+        app_small, podded(bsp(), 2, s_xpod=S_XPOD), 10, runtime=rt2,
+        seed=seed)
+    out["oracle_bsp_exact"] = chk["ok"]
+    out["oracle_mesh"] = dict(rt2.mesh.shape)
+    emit("pods_bench/oracle_bsp", 0.0,
+         f"bit_identical={chk['ok']};"
+         f"mesh={'x'.join(map(str, rt2.mesh.shape.values()))}")
+    assert chk["ok"], f"pods diverged from the hierarchical oracle: {chk}"
+
+    # --- clocks/sec + clocks/wall-to-threshold per app x pod count -------
+    for app_name, make_app, T in (("mf", _mf, T_mf), ("lda", _lda, T_lda)):
+        app = make_app(workers)
+        per_pods: dict = {}
+        for n_pods in pod_counts:
+            rt = _runtime_for(workers, n_pods)
+            row: dict = {"mesh": dict(rt.mesh.shape)}
+            losses = {}
+            for name, cfg in _configs(n_pods):
+                t_first, t_exec, tr = timed_runtime_run(rt, app, cfg, T,
+                                                        seed)
+                loss = np.asarray(tr.loss_ref)
+                losses[name] = loss
+                row[name] = {
+                    "clocks_per_sec": T / t_exec,
+                    "t_compile_s": t_first - t_exec,
+                    "sec_per_clock": t_exec / T,
+                    "loss_final": float(loss[-1]),
+                }
+                if n_pods > 1 and name in ("gated", "eager"):
+                    rec = reconcile_stats(tr, cfg, dim=app.dim)
+                    row[name]["xpod_eager_per_clock"] = rec["eager_per_clock"]
+                    row[name]["xpod_gated_per_clock"] = rec["gated_per_clock"]
+                    row[name]["delta_compression"] = rec["delta_compression"]
+                emit(f"pods_bench/{app_name}/{name}/pods{n_pods}",
+                     t_exec / T * 1e6,
+                     f"clocks_per_sec={T / t_exec:.1f}")
+            # measured wall-clock to a common loss threshold: the level the
+            # hierarchical BSP reference reaches at 60% of the run.
+            thresh = float(losses["bsp"][int(T * 0.6)])
+            row["loss_thresh"] = thresh
+            for name, _ in _configs(n_pods):
+                c = clocks_to_threshold(losses[name], thresh)
+                row[name]["clocks_to_thresh"] = c
+                row[name]["wall_to_thresh_s"] = (
+                    None if c is None else c * row[name]["sec_per_clock"])
+            per_pods[f"pods{n_pods}"] = row
+        out[app_name] = per_pods
+
+    # --- the claim: at equal total staleness on the multi-pod mesh, eager
+    # cross-pod reconciliation reaches the loss threshold before
+    # clock-gated sync.  `pass_clocks` is deterministic (trace values are
+    # mesh-independent by the oracle contract); `pass` adds measured
+    # seconds (wall-clock sensitive — asserted only where the host is
+    # quiet).
+    pmax = f"pods{max(pod_counts)}"
+    claim = {}
+    for app_name in ("mf", "lda"):
+        row = out[app_name][pmax]
+        ce, cl = row["eager"]["clocks_to_thresh"], \
+            row["gated"]["clocks_to_thresh"]
+        e, l = row["eager"]["wall_to_thresh_s"], \
+            row["gated"]["wall_to_thresh_s"]
+        claim[app_name] = {
+            "eager_clocks": ce, "gated_clocks": cl,
+            "eager_wall_s": e, "gated_wall_s": l,
+            "pass_clocks": (ce is not None) and (cl is None or ce <= cl),
+            "pass": (e is not None) and (l is None or e <= l),
+        }
+    claim["pass_clocks"] = all(claim[a]["pass_clocks"] for a in ("mf", "lda"))
+    claim["pass"] = all(claim[a]["pass"] for a in ("mf", "lda"))
+    out["claim"] = claim
+    emit("pods_bench/eager_beats_gated_xpod", 0.0,
+         f"mf={claim['mf']['pass']};lda={claim['lda']['pass']};"
+         f"clocks={claim['pass_clocks']}")
+    save_json("pods_bench", out)
+    return out
+
+
+if __name__ == "__main__":
+    r = run()
+    print(r["claim"])

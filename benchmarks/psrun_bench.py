@@ -33,8 +33,6 @@ if __name__ == "__main__" and "jax" not in sys.modules \
                                + " --xla_force_host_platform_device_count=8"
                                ).strip()
 
-import time                 # noqa: E402
-
 import jax                  # noqa: E402
 import numpy as np          # noqa: E402
 
@@ -43,7 +41,8 @@ from repro.apps.matfact import MFConfig, make_mf_app        # noqa: E402
 from repro.core import bsp, essp, ssp                       # noqa: E402
 from repro.psrun import PSRuntime, cross_validate, default_mesh  # noqa: E402
 
-from .common import emit, save_json                         # noqa: E402
+from .common import (clocks_to_threshold, emit, save_json,  # noqa: E402
+                     timed_runtime_run)
 
 MODELS = lambda s: [("bsp", bsp()), (f"ssp{s}", ssp(s)), (f"essp{s}", essp(s))]
 
@@ -54,23 +53,6 @@ def _mf(P):
 
 def _lda(P):
     return make_lda_app(LDAConfig(n_workers=P))
-
-
-def _timed_run(rt, app, cfg, T, seed=0):
-    """(first-call seconds incl. compile, steady-state seconds, trace)."""
-    fn = rt.run_fn(app, cfg, T)
-    t0 = time.perf_counter()
-    tr = jax.block_until_ready(fn(seed, cfg))
-    t_first = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    tr = jax.block_until_ready(fn(seed, cfg))
-    t_exec = time.perf_counter() - t0
-    return t_first, t_exec, tr
-
-
-def _clocks_to(loss, thresh):
-    hit = np.flatnonzero(np.asarray(loss) <= thresh)
-    return int(hit[0]) + 1 if hit.size else None
 
 
 def run(T_mf: int = 240, T_lda: int = 50, s: int = 5,
@@ -99,7 +81,8 @@ def run(T_mf: int = 240, T_lda: int = 50, s: int = 5,
             row: dict = {"mesh": dict(mesh.shape)}
             losses = {}
             for name, cfg in MODELS(s):
-                t_first, t_exec, tr = _timed_run(rt, app, cfg, T, seed)
+                t_first, t_exec, tr = timed_runtime_run(rt, app, cfg, T,
+                                                        seed)
                 loss = np.asarray(tr.loss_ref)
                 losses[name] = loss
                 row[name] = {
@@ -117,7 +100,7 @@ def run(T_mf: int = 240, T_lda: int = 50, s: int = 5,
             thresh = float(losses["bsp"][int(T * 0.6)])
             row["loss_thresh"] = thresh
             for name, _ in MODELS(s):
-                c = _clocks_to(losses[name], thresh)
+                c = clocks_to_threshold(losses[name], thresh)
                 row[name]["clocks_to_thresh"] = c
                 row[name]["wall_to_thresh_s"] = (
                     None if c is None else c * row[name]["sec_per_clock"])

@@ -6,11 +6,12 @@ end).  Roofline tables are separate (they read dry-run artifacts):
 
 The harness deliberately does NOT force a multi-device host platform: on
 small hosts, 8 fake devices oversubscribe the cores and distort every
-timing row.  `benchmarks.psrun_bench` forces its own 8-device platform
-when run standalone (``python -m benchmarks.psrun_bench``), which is where
-the sharded clocks/sec numbers come from; inside this harness it runs on
-whatever topology the process has (its traces — and therefore its
-convergence claim — are mesh-independent by the oracle contract).
+timing row.  `benchmarks.psrun_bench` (8 devices) and
+`benchmarks.pods_bench` (16, the CI pods-lane topology) force their own
+host platforms when run standalone, which is where the sharded clocks/sec
+numbers come from; inside this harness they run on whatever topology the
+process has (their traces — and therefore their convergence claims — are
+mesh-independent by the oracle contract).
 """
 from __future__ import annotations
 
@@ -22,8 +23,8 @@ def main() -> None:
     t0 = time.time()
     from . import (autotune_bench, comm_comp, kernels_bench,
                    lda_convergence, lm_consistency, mf_convergence,
-                   psrun_bench, robustness, staleness_profile, stragglers,
-                   sweep_bench, theory_validation)
+                   pods_bench, psrun_bench, robustness, staleness_profile,
+                   stragglers, sweep_bench, theory_validation)
 
     claims = {}
     print("name,us_per_call,derived")
@@ -42,6 +43,7 @@ def main() -> None:
                               "pass_3x": sb["pass_3x"]}
     claims["autotune"] = autotune_bench.run()["claim"]
     claims["psrun_eager_beats_lazy"] = psrun_bench.run()["claim"]
+    claims["pods_eager_beats_gated"] = pods_bench.run()["claim"]
     kernels_bench.run()
 
     print("\n=== paper-fidelity claim summary ===")

@@ -1,4 +1,14 @@
-"""Checkpointing: pytree <-> .npz with path-encoded keys (no orbax here)."""
+"""Checkpointing: pytree <-> .npz with path-encoded keys (no orbax here).
+
+Besides generic pytrees, this round-trips mid-run PS runtime state
+(`psrun.runtime.PSState` — params/base, update ring, per-channel cview
+clocks, worker locals, RNG key, clock counter) for both the flat
+(`repro.psrun`) and hierarchical (`repro.pods`) runtimes:
+``save_runtime`` / ``restore_runtime``.  Restoring and continuing with
+``run_from`` reproduces the uninterrupted run bit for bit
+(`tests/test_pods.py` pins it), because the state carries the *entire*
+scan carry — including the PRNG key stream position.
+"""
 from __future__ import annotations
 
 import os
@@ -23,6 +33,25 @@ def save(path: str, tree) -> None:
             flat[name] = arr
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
     np.savez(path, **flat)
+
+
+def save_runtime(path: str, state) -> None:
+    """Save a mid-run `PSState` (psrun or pods runtime) to ``path``.
+
+    A `PSState` is an ordinary registered-dataclass pytree, so this is
+    :func:`save`; the dedicated name marks the contract — everything the
+    clock step carries is in the file, nothing implicit."""
+    save(path, state)
+
+
+def restore_runtime(path: str, like):
+    """Restore a `PSState` saved by :func:`save_runtime`.
+
+    ``like`` provides the structure/dtypes — use
+    ``runtime.init_state(app, cfg, seed=0)`` (any seed: every leaf is
+    overwritten).  Continuing with ``runtime.run_from`` reproduces the
+    uninterrupted run bit for bit."""
+    return restore(path, like)
 
 
 def restore(path: str, like):

@@ -27,9 +27,10 @@ Sweep support
 -------------
 ``ConsistencyConfig`` is registered as a JAX pytree whose *numeric* knobs
 (``staleness``, ``v0``, ``push_prob``, ``straggler_prob``,
-``straggler_workers``, ``straggler_rate``) are data leaves, while the
+``straggler_workers``, ``straggler_rate``, and the two-tier knobs
+``s_xpod``, ``t_net_intra``, ``t_net_xpod``) are data leaves, while the
 *structural* knobs (``model``, ``read_my_writes``, ``window``,
-``max_extra_delay``) are static metadata.  The numeric knobs may therefore
+``max_extra_delay``, ``n_pods``) are static metadata.  The numeric knobs may therefore
 hold traced values or batched arrays: ``core.sweep`` vmaps ``simulate`` over
 a whole config grid in one compiled XLA program instead of recompiling per
 configuration.  Structural knobs select Python-level control flow inside the
@@ -54,9 +55,11 @@ MODELS = ("bsp", "ssp", "essp", "async", "vap")
 
 # Numeric knobs: pytree data leaves, traceable/batchable (see module doc).
 DATA_FIELDS = ("staleness", "v0", "push_prob", "straggler_prob",
-               "straggler_workers", "straggler_rate")
+               "straggler_workers", "straggler_rate",
+               "s_xpod", "t_net_intra", "t_net_xpod")
 # Structural knobs: static pytree metadata, baked into the compiled program.
-META_FIELDS = ("model", "read_my_writes", "window", "max_extra_delay")
+META_FIELDS = ("model", "read_my_writes", "window", "max_extra_delay",
+               "n_pods")
 
 # Physically meaningful ranges of the numeric knobs ((lo, hi), None = open).
 # The auto-tuner (`core.tune`) clips its coarse→fine refinement proposals to
@@ -68,9 +71,12 @@ KNOB_BOUNDS = {
     "straggler_prob": (0.0, 0.95),
     "straggler_workers": (0, None),
     "straggler_rate": (0.01, 1.0),
+    "s_xpod": (0, None),
+    "t_net_intra": (1.0, None),
+    "t_net_xpod": (1.0, None),
 }
 # Knobs that live on an integer lattice (refinement rounds to these).
-INT_KNOBS = ("staleness", "straggler_workers")
+INT_KNOBS = ("staleness", "straggler_workers", "s_xpod")
 
 
 def _concrete(x) -> bool:
@@ -106,6 +112,23 @@ class ConsistencyConfig:
         a traced value (the window shapes the compiled program).
       max_extra_delay: cap on delay beyond the eager path used to size the
         update window for unbounded models (async/vap).
+      n_pods: number of pods in the hierarchical (multi-pod) mode.  The
+        ``P`` workers are partitioned into ``n_pods`` contiguous blocks;
+        channels between workers of different pods cross the slow network
+        tier.  ``n_pods=1`` (default) is the flat single-pod PS and is
+        bit-identical to the pre-hierarchy behavior.  Static: it selects the
+        pod partition (and, in ``repro.pods``, the mesh axis sizes).
+      s_xpod: extra staleness allowance on *cross-pod* channels (clocks).
+        SSP/ESSP enforce ``s`` intra-pod and ``s + s_xpod`` cross-pod — the
+        two-tier bounded-staleness contract (per-channel lag is bounded by
+        ``s_intra + s_xpod``, Wei et al. arXiv:1312.7869).
+      t_net_intra: mean delivery delay of the intra-pod network tier, in
+        clocks (geometric: a push crosses the tier within one clock with
+        probability ``push_prob / max(t_net_intra, 1)``).  1.0 = the
+        pre-hierarchy single-tier behavior.
+      t_net_xpod: mean delivery delay of the cross-pod tier in clocks —
+        typically an order of magnitude above ``t_net_intra`` (the
+        datacenter-scale second tier).
     """
 
     model: str = "essp"
@@ -118,6 +141,10 @@ class ConsistencyConfig:
     read_my_writes: bool = True
     window: int | None = None
     max_extra_delay: int = 6
+    n_pods: int = 1
+    s_xpod: int = 0
+    t_net_intra: float = 1.0
+    t_net_xpod: float = 1.0
 
     def __post_init__(self):
         if self.model not in MODELS:
@@ -127,21 +154,25 @@ class ConsistencyConfig:
             raise ValueError("staleness must be >= 0")
         if self.model == "vap" and _concrete(self.v0) and self.v0 <= 0:
             raise ValueError("vap requires v0 > 0")
+        if self.n_pods < 1:
+            raise ValueError("n_pods must be >= 1")
+        if _concrete(self.s_xpod) and self.s_xpod < 0:
+            raise ValueError("s_xpod must be >= 0")
 
     @property
     def effective_window(self) -> int:
         """Size of the update ring buffer (clocks kept before folding)."""
         if self.window is not None:
             return self.window
-        if not _concrete(self.staleness):
+        if not (_concrete(self.staleness) and _concrete(self.s_xpod)):
             raise ValueError(
-                "effective_window needs a concrete staleness; set `window` "
-                "explicitly when sweeping staleness as a traced value")
+                "effective_window needs concrete staleness/s_xpod; set "
+                "`window` explicitly when sweeping them as traced values")
         if self.model == "bsp":
             return 2
         if self.model in ("async", "vap"):
-            return self.staleness + self.max_extra_delay + 2
-        return self.staleness + 2
+            return self.staleness + self.s_xpod + self.max_extra_delay + 2
+        return self.staleness + self.s_xpod + 2
 
     @property
     def family(self) -> tuple:
@@ -153,9 +184,11 @@ class ConsistencyConfig:
         For unbounded models (async/vap) recycling a ring slot force-folds
         undelivered updates into the globally visible base — the window is
         part of the simulated physics — so it joins the key and configs
-        with different windows compile separately."""
+        with different windows compile separately.  ``n_pods`` selects the
+        pod partition (a different channel-tier mask), so it is part of the
+        family too."""
         key = (self.model, bool(self.read_my_writes),
-               int(self.max_extra_delay))
+               int(self.max_extra_delay), int(self.n_pods))
         if self.model in ("async", "vap"):
             key += (self.effective_window,)
         return key
@@ -183,3 +216,20 @@ def essp(staleness: int, **kw) -> ConsistencyConfig:
 
 def vap(v0: float, **kw) -> ConsistencyConfig:
     return ConsistencyConfig(model="vap", v0=v0, **kw)
+
+
+def podded(cfg: ConsistencyConfig, n_pods: int, s_xpod: int = 0,
+           t_net_xpod: float | None = None,
+           t_net_intra: float | None = None) -> ConsistencyConfig:
+    """Lift a flat config onto ``n_pods`` pods with a second network tier.
+
+    ``s_xpod`` is the extra cross-pod staleness allowance; the ``t_net_*``
+    mean delivery delays (clocks) default to the single-tier behavior
+    (1.0) when not given.  ``podded(cfg, 1)`` is bit-identical to ``cfg``.
+    """
+    kw = dict(n_pods=n_pods, s_xpod=s_xpod)
+    if t_net_xpod is not None:
+        kw["t_net_xpod"] = t_net_xpod
+    if t_net_intra is not None:
+        kw["t_net_intra"] = t_net_intra
+    return cfg.replace(**kw)

@@ -11,8 +11,23 @@ module adds structured heterogeneity on top:
 - ``delivery_matrix``: the full [reader, producer] delivery sample used by
   `ps.simulate` each clock (channel congestion x producer slowness).
 
+Two-tier (hierarchical) delivery
+--------------------------------
+With ``cfg.n_pods > 1`` the ``P`` workers are partitioned into contiguous
+pod blocks (:func:`pod_of`) and every (reader, producer) channel belongs to
+one of two network tiers: *intra-pod* (mean delivery delay ``t_net_intra``
+clocks) or *cross-pod* (``t_net_xpod`` clocks, typically ~10x slower — the
+datacenter second tier).  A tier with mean delay ``t`` delivers a push
+within one clock with probability ``push_prob / max(t, 1)`` (geometric
+delays, so the mean delay really is ``~t/push_prob`` clocks).  Both ``t``
+knobs are traced data leaves of `ConsistencyConfig`, so sweeps batch over
+network-tier ratios exactly like any other knob.  At the defaults
+(``n_pods=1`` or ``t_net_* = 1``) the sample is bit-identical to the flat
+single-tier model — the same uniforms compared against the same
+probabilities.
+
 Everything is driven by the ConsistencyConfig so experiment sweeps stay
-declarative (see benchmarks/stragglers.py).
+declarative (see benchmarks/stragglers.py, benchmarks/pods_bench.py).
 """
 from __future__ import annotations
 
@@ -20,6 +35,38 @@ import jax
 import jax.numpy as jnp
 
 from .consistency import ConsistencyConfig
+
+
+def pod_of(P: int, n_pods: int) -> jax.Array:
+    """Pod id of each worker: ``n_pods`` contiguous equal blocks ([P] i32).
+
+    Matches the worker partition of the ``("pod","data")`` mesh axes in
+    ``repro.pods`` (pod-major, then data-shard within the pod).
+    """
+    if P % n_pods:
+        raise ValueError(f"n_workers={P} must divide by n_pods={n_pods}")
+    return (jnp.arange(P, dtype=jnp.int32) // (P // n_pods)).astype(jnp.int32)
+
+
+def same_pod_mask(P: int, n_pods: int) -> jax.Array:
+    """[reader, producer] bool: True where the channel stays intra-pod."""
+    pod = pod_of(P, n_pods)
+    return pod[:, None] == pod[None, :]
+
+
+def staleness_bound_matrix(cfg: ConsistencyConfig, reader_ids,
+                           P: int) -> jax.Array:
+    """Per-channel SSP/ESSP staleness bound [readers, P(producer)].
+
+    ``cfg.staleness`` on intra-pod channels, ``+ s_xpod`` across pods — the
+    two-tier bounded-staleness contract.  ``reader_ids`` selects the reader
+    rows (all of them in the simulator, the shard-local rows in the
+    runtimes), so the same helper drives both engines.  Integer ops only:
+    bit-identical to the flat bound when ``n_pods == 1``.
+    """
+    pods = pod_of(P, cfg.n_pods)
+    same = pods[reader_ids][:, None] == pods[None, :]
+    return jnp.where(same, cfg.staleness, cfg.staleness + cfg.s_xpod)
 
 
 def worker_rates(cfg: ConsistencyConfig, P: int) -> jax.Array:
@@ -35,23 +82,40 @@ def worker_rates(cfg: ConsistencyConfig, P: int) -> jax.Array:
     return jnp.where(ids < n, jnp.asarray(rate, jnp.float32), 1.0)
 
 
+def channel_push_prob(cfg: ConsistencyConfig, P: int) -> jax.Array:
+    """Per-channel one-clock delivery probability [reader, producer].
+
+    ``push_prob x producer_rate``, divided by the channel's tier delay
+    (``t_net_intra`` intra-pod, ``t_net_xpod`` cross-pod).  Division by the
+    default delay 1.0 is exact, keeping the flat model bit-identical.
+    """
+    rates = worker_rates(cfg, P)
+    p = cfg.push_prob * rates[None, :]                    # [1, producer]
+    tier_i = 1.0 / jnp.maximum(jnp.asarray(cfg.t_net_intra, jnp.float32), 1.0)
+    tier_x = 1.0 / jnp.maximum(jnp.asarray(cfg.t_net_xpod, jnp.float32), 1.0)
+    same = same_pod_mask(P, cfg.n_pods)
+    return p * jnp.where(same, tier_i, tier_x)            # [reader, producer]
+
+
 def delivery_matrix(rng, cfg: ConsistencyConfig, P: int) -> jax.Array:
     """Sample the end-of-clock delivery matrix [P(reader), P(producer)].
 
-    A channel delivers this clock iff (a) the producer's push lands
-    (Bernoulli(push_prob x producer_rate)) and (b) the channel is not
-    transiently congested (Bernoulli(straggler_prob) blocks it).
+    A channel delivers this clock iff (a) the producer's push crosses the
+    channel's network tier (Bernoulli(push_prob x producer_rate / t_tier))
+    and (b) the channel is not transiently congested
+    (Bernoulli(straggler_prob) blocks it).
     """
     k1, k2 = jax.random.split(rng)
-    rates = worker_rates(cfg, P)
-    p = cfg.push_prob * rates[None, :]             # [1, producer]
+    p = channel_push_prob(cfg, P)
     pushed = jax.random.uniform(k1, (P, P)) < p
     congested = jax.random.bernoulli(k2, cfg.straggler_prob, (P, P))
     return pushed & ~congested
 
 
 def expected_delay(cfg: ConsistencyConfig, P: int) -> jax.Array:
-    """Analytic mean delivery delay per producer (geometric): 1/p clocks."""
-    rates = worker_rates(cfg, P)
-    p = cfg.push_prob * rates * (1.0 - cfg.straggler_prob)
+    """Analytic mean delivery delay per channel (geometric): 1/p clocks.
+
+    Shape [reader, producer]; rows are identical in the flat (single-pod)
+    model, where this reduces to the historical per-producer vector."""
+    p = channel_push_prob(cfg, P) * (1.0 - cfg.straggler_prob)
     return 1.0 / jnp.maximum(p, 1e-6)

@@ -30,6 +30,34 @@ independently delivers the fresh update with probability ``push_prob``
 these pushes (SSPTable is pull-based): its caches refresh only when a read
 would violate the staleness bound.  ESSP applies them eagerly.
 
+Hierarchical (multi-pod) mode
+-----------------------------
+With ``cfg.n_pods > 1`` the ``P`` workers are partitioned into contiguous
+pod blocks and every channel is classified intra-pod or cross-pod
+(``core.delays.same_pod_mask``).  Each pod conceptually holds a full
+*replica* of the parameter shards: a reader's view of an intra-pod producer
+is governed exactly as before, while cross-pod visibility rides the
+*reconciliation channel* of the second network tier —
+
+- **delivery** is two-tier: cross-pod pushes land with probability scaled
+  by ``t_net_intra / t_net_xpod`` (``core.delays.channel_push_prob``).
+  ESSP/async/VAP reconcile *eagerly* (pushes cross the pod boundary every
+  clock as they do intra-pod, only slower); BSP/SSP reconcile *clock-gated*
+  (BSP's barrier syncs everything; SSP pulls a cross-pod channel only when
+  its bound trips);
+- **enforcement** is two-tier: SSP/ESSP force a blocking refresh at
+  staleness ``s`` intra-pod and ``s + s_xpod`` cross-pod, so per-channel
+  lag is bounded by ``s_intra + s_xpod`` (the bounded-async invariant of
+  Wei et al., arXiv:1312.7869), and replica divergence — how far two pods'
+  visible prefixes of one producer can drift apart — by the same bound
+  (see ``repro.pods.reconcile``).
+
+``n_pods=1`` (the default) is bit-identical to the flat simulator, and BSP
+traces are bit-identical across *any* pod count (the barrier drains both
+tiers every clock).  The executable counterpart is ``repro.pods``
+(``PodsRuntime`` on a 3-D ``("pod","data","model")`` mesh), cross-validated
+against this mode exactly like ``repro.psrun`` is against the flat mode.
+
 Everything (drift of staleness, forced synchronous fetches, update
 magnitudes, losses, per-worker views) is recorded per clock into a `Trace`.
 
@@ -50,18 +78,25 @@ Two engines produce `Trace`s and must stay interchangeable to every
 consumer (``core.staleness``, ``core.theory``, ``core.valuebound``,
 ``core.timemodel``, the benchmarks):
 
-- ``simulate`` (this module) — the vectorized single-program *oracle*;
+- ``simulate`` (this module) — the vectorized single-program *oracle*,
+  covering both the flat (``n_pods=1``) and hierarchical (``n_pods>1``)
+  modes;
 - ``repro.psrun.PSRuntime`` — the executable runtime, which runs the same
-  clock step sharded over a ``("data","model")`` device mesh.
+  clock step sharded over a ``("data","model")`` device mesh;
+- ``repro.pods.PodsRuntime`` — the hierarchical runtime on a 3-D
+  ``("pod","data","model")`` mesh (replicated parameter shards per pod,
+  cross-pod reconciliation), sharing the clock-step machinery with psrun.
 
-Both fill every `Trace` field with the clock axis leading, derive all
+All fill every `Trace` field with the clock axis leading, derive all
 randomness from the same key stream (``split(rng, 3)`` per clock; worker
 keys ``split(k_upd, P)``; delivery from ``k_net``), and keep identical
 per-coordinate reduction orders — which is why a seeded BSP run is
-bit-identical between them (``psrun.validate`` checks this, and SSP/ESSP
-match too in practice).  Anything that changes a `Trace` field, the key
-derivation, or a reduction order here must be mirrored in
-``psrun/runtime.py`` — `tests/test_psrun.py` enforces the contract.
+bit-identical between them, and SSP/ESSP runs are too (asserted by
+``psrun.validate.cross_validate`` since the bit-match was promoted into
+the contract; VAP agrees to fusion tolerance with exactly-equal
+decisions).  Anything that changes a `Trace` field, the key derivation, or
+a reduction order here must be mirrored in ``psrun/runtime.py`` —
+`tests/test_psrun.py` and `tests/test_pods.py` enforce the contract.
 """
 from __future__ import annotations
 
@@ -74,7 +109,7 @@ import jax.numpy as jnp
 from ..kernels import ops
 from ..kernels.ref import RING_EMPTY, RING_INVALID
 from .consistency import ConsistencyConfig
-from .delays import delivery_matrix
+from .delays import delivery_matrix, staleness_bound_matrix
 
 
 @dataclass
@@ -126,12 +161,37 @@ def _delivery(rng, cfg: ConsistencyConfig, P: int):
     return delivery_matrix(rng, cfg, P)
 
 
+def enforce_vap(cfg: ConsistencyConfig, c, cview, norms, W: int):
+    """Force delivery of oldest in-transit updates so that the per-producer
+    aggregated in-transit update satisfies ``||.||_inf <= v_t`` (paper
+    eq. 1, v_t = v0/sqrt(t+1)).
+
+    ``norms[k, q]`` is the inf-norm of the suffix aggregate of producer q's
+    newest ``k`` clocks (kernels/ps_view.py); we keep in transit the
+    largest suffix that satisfies the bound and force-deliver the rest.
+    ``cview`` may be the full [P, P] matrix (simulator) or the shard-local
+    reader rows [Pl, P] (the runtimes) — the same math serves both engines.
+    """
+    v_t = cfg.v0 / jnp.sqrt(c.astype(jnp.float32) + 1.0)
+    ok = norms <= v_t                                  # [W+1, P]
+    ok = ok.at[0].set(True)                            # empty suffix always ok
+    # Per (reader, producer) channel: keep the *longest* suffix k that
+    # (a) satisfies the bound and (b) does not exceed the channel's
+    # current in-transit length (we can only deliver, never undeliver).
+    kcur = jnp.clip(c - 1 - cview, 0, W)               # [r, q] suffix length now
+    ks = jnp.arange(W + 1, dtype=jnp.int32)[:, None, None]
+    cond = ok[:, None, :] & (ks <= kcur[None, :, :])   # [W+1, r, q]
+    kbest = jnp.max(jnp.where(cond, ks, -1), axis=0)   # [r, q]
+    required = c - 1 - kbest
+    forced = cview < required
+    return jnp.maximum(cview, required), forced
+
+
 def simulate(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
              seed=0, record_views: bool = False) -> Trace:
     """Run ``n_clocks`` of the app under the given consistency model."""
     P, d = app.n_workers, app.dim
     W = cfg.effective_window
-    s = cfg.staleness
     f32 = jnp.float32
 
     base0 = app.x0.astype(f32)
@@ -139,33 +199,14 @@ def simulate(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
     uclock0 = jnp.full((W,), RING_EMPTY, jnp.int32)   # slot -> clock stored
     cview0 = jnp.full((P, P), -1, jnp.int32)      # everyone saw "clock -1"
     rng0 = jax.random.PRNGKey(seed)
+    # Two-tier staleness bound (hierarchical mode): `s` on intra-pod
+    # channels, `s + s_xpod` across pods.  With n_pods=1 every channel is
+    # intra-pod and this is exactly `s` (integer ops — bit-identical).
+    s_eff = staleness_bound_matrix(cfg, jnp.arange(P), P)
 
     vmapped_update = jax.vmap(app.worker_update,
                               in_axes=(0, 0, 0, None, 0))
     worker_ids = jnp.arange(P, dtype=jnp.int32)
-
-    def enforce_vap(c, cview, norms):
-        """Force delivery of oldest in-transit updates so that the
-        per-producer aggregated in-transit update satisfies
-        ``||.||_inf <= v_t`` (paper eq. 1, v_t = v0/sqrt(t+1)).
-
-        ``norms[k, q]`` is the inf-norm of the suffix aggregate of producer
-        q's newest ``k`` clocks (kernels/ps_view.py); we keep in transit the
-        largest suffix that satisfies the bound and force-deliver the rest.
-        """
-        v_t = cfg.v0 / jnp.sqrt(c.astype(f32) + 1.0)
-        ok = norms <= v_t                                  # [W+1, P]
-        ok = ok.at[0].set(True)                            # empty suffix always ok
-        # Per (reader, producer) channel: keep the *longest* suffix k that
-        # (a) satisfies the bound and (b) does not exceed the channel's
-        # current in-transit length (we can only deliver, never undeliver).
-        kcur = jnp.clip(c - 1 - cview, 0, W)               # [P, P] suffix length now
-        ks = jnp.arange(W + 1, dtype=jnp.int32)[:, None, None]
-        cond = ok[:, None, :] & (ks <= kcur[None, :, :])   # [W+1, r, q]
-        kbest = jnp.max(jnp.where(cond, ks, -1), axis=0)   # [r, q]
-        required = c - 1 - kbest
-        forced = cview < required
-        return jnp.maximum(cview, required), forced
 
     def step(carry, c):
         base, uring, uclock, cview, local, rng = carry
@@ -182,13 +223,15 @@ def simulate(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
             cview = jnp.full_like(cview, c - 1)
         elif cfg.model in ("ssp", "essp"):
             # SSP condition: a read at clock c must include all updates of
-            # clocks <= c - s - 1.  Lazy SSP refreshes the whole channel
-            # from the server (which holds everything through c-1) exactly
-            # when the bound trips; ESSP rarely trips thanks to pushes.
-            forced = cview < (c - s - 1)
+            # clocks <= c - s_eff - 1 (s intra-pod, s + s_xpod cross-pod).
+            # Lazy SSP refreshes the whole channel from the server (which
+            # holds everything through c-1) exactly when the bound trips —
+            # on a cross-pod channel that is the clock-gated reconciliation
+            # pull; ESSP rarely trips thanks to (two-tier) pushes.
+            forced = cview < (c - s_eff - 1)
             cview = jnp.where(forced, c - 1, cview)
         elif cfg.model == "vap":
-            cview, forced = enforce_vap(c, cview, norms)
+            cview, forced = enforce_vap(cfg, c, cview, norms, W)
         else:  # async
             forced = jnp.zeros_like(cview, dtype=bool)
 
@@ -206,7 +249,19 @@ def simulate(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
         intransit_inf = jnp.max(norms[kcur, jnp.arange(P)[None, :]])
 
         # --- 2. materialize views ----------------------------------------
-        # visibility mask x update ring -> per-reader views (Pallas on TPU)
+        # visibility mask x update ring -> per-reader views (Pallas on TPU).
+        # NOTE on the VAP few-ulp drift PR 3 pinned: under a *multi-device*
+        # compilation (sharded sweep, the runtimes) XLA's CPU backend
+        # instruction-selects the scan body differently when the VAP
+        # enforcement graph is present — a replay of the worker update on
+        # bit-identical recorded inputs reproduces the plain-jit value, not
+        # the sharded one, and optimization barriers around every stage
+        # leave the drift byte-identical, so it is backend codegen
+        # (FMA/vectorization of the loop body), not fusion across stages or
+        # semantic divergence.  Decisions stay exact; float drift is
+        # bounded to a few ulp/value and is app-dependent (MF/LDA are
+        # exactly stable).  `tests/test_sweep.py` pins it to a strict ulp
+        # budget and asserts MF bit-identity.
         views = ops.ring_view(base, uring, uclock, cview)
 
         # --- 3. worker computation ----------------------------------------

@@ -63,7 +63,8 @@ from .ps import PSApp, Trace, simulate
 # batched-vs-sequential compile counts.
 _TRACE_COUNTER = {"count": 0}
 
-_KNOB_DTYPES = {"staleness": jnp.int32, "straggler_workers": jnp.int32}
+_KNOB_DTYPES = {"staleness": jnp.int32, "straggler_workers": jnp.int32,
+                "s_xpod": jnp.int32}
 
 
 def trace_count() -> int:
@@ -90,7 +91,7 @@ def stack_configs(configs: Sequence[ConsistencyConfig],
     c0 = configs[0]
     return ConsistencyConfig(
         model=c0.model, read_my_writes=c0.read_my_writes, window=window,
-        max_extra_delay=c0.max_extra_delay, **knobs)
+        max_extra_delay=c0.max_extra_delay, n_pods=c0.n_pods, **knobs)
 
 
 @dataclass
@@ -139,12 +140,20 @@ def _device_mesh(devices):
 
 
 def _family_runner(app: PSApp, n_clocks: int, record_views: bool, devices,
-                   post=None, keep_traces: bool = True):
+                   post=None, keep_traces: bool = True, mesh=None,
+                   mesh_axis: str = "batch"):
     """Build the once-compiled runner for one family: `simulate` vmapped
     over a flat (config × seed) batch, sharded over devices when more than
     one is available.  Returns ``fn(stacked_flat, seeds_flat, idx_flat) ->
     {"trace": Trace|None, "post": pytree|None}``; repeated calls with the
-    same batch shape reuse the compiled program."""
+    same batch shape reuse the compiled program.
+
+    By default the batch shards over a 1-D ``("batch",)`` mesh spanning
+    ``devices``; pass ``mesh``/``mesh_axis`` to shard it over one named
+    axis of an existing mesh instead — e.g. the "pod" axis of a
+    `launch.mesh.make_pods_mesh` 3-D mesh, spreading a sweep across pods
+    while each pod's ``("data","model")`` devices stay free for the
+    runtime (the batch is replicated over the non-sharded axes)."""
 
     def one(cfg, seed, cfg_idx):
         _TRACE_COUNTER["count"] += 1          # fires once per trace/compile
@@ -156,23 +165,26 @@ def _family_runner(app: PSApp, n_clocks: int, record_views: bool, devices,
         }
 
     batched = jax.vmap(one, in_axes=(0, 0, 0))
-    n_dev = len(devices)
-    if n_dev == 1:
+    if mesh is None:
+        if len(devices) == 1:
+            return jax.jit(batched)
+        from ..launch.mesh import make_batch_mesh
+        mesh, mesh_axis = make_batch_mesh(devices), "batch"
+    n_shards = mesh.shape[mesh_axis]
+    if n_shards == 1:
         return jax.jit(batched)
 
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
-    from ..launch.mesh import make_batch_mesh
-
-    mesh = make_batch_mesh(devices)
+    spec = P(mesh_axis)
     sharded = jax.jit(shard_map(batched, mesh=mesh,
-                                in_specs=(P("batch"), P("batch"), P("batch")),
-                                out_specs=P("batch")))
+                                in_specs=(spec, spec, spec),
+                                out_specs=spec))
 
     def fn(stacked_flat, seeds_flat, idx_flat):
         n = seeds_flat.shape[0]
-        pad = (-n) % n_dev
+        pad = (-n) % n_shards
         if pad:
             padder = lambda x: jnp.concatenate(
                 [x, jnp.broadcast_to(x[:1], (pad,) + x.shape[1:])])
@@ -190,7 +202,8 @@ def _family_runner(app: PSApp, n_clocks: int, record_views: bool, devices,
 def sweep(app: PSApp, configs: Sequence[ConsistencyConfig], n_clocks: int,
           seeds: int | Sequence[int] = 1, record_views: bool = False,
           devices=None, timeit: bool = False, post=None,
-          keep_traces: bool = True) -> SweepResult:
+          keep_traces: bool = True, mesh=None,
+          mesh_axis: str = "batch") -> SweepResult:
     """Run every (config, seed) pair with one compiled program per family.
 
     Args:
@@ -211,6 +224,11 @@ def sweep(app: PSApp, configs: Sequence[ConsistencyConfig], n_clocks: int,
         batched per config like ``traces``.
       keep_traces: when False (requires ``post``), drop the full traces on
         device and return only the post outputs.
+      mesh, mesh_axis: shard the flat batch over one named axis of an
+        existing mesh instead of the default 1-D batch mesh — e.g.
+        ``mesh=make_pods_mesh(), mesh_axis="pod"`` spreads the sweep over
+        the pod axis of the multi-pod mesh (replicated over the within-pod
+        axes).  ``devices`` is ignored when ``mesh`` is given.
     """
     if not keep_traces and post is None:
         raise ValueError("keep_traces=False requires a post callback")
@@ -244,7 +262,8 @@ def sweep(app: PSApp, configs: Sequence[ConsistencyConfig], n_clocks: int,
         idx_flat = jnp.repeat(jnp.asarray(idxs, jnp.uint32), S)
 
         fn = _family_runner(app, n_clocks, record_views, devices,
-                            post=post, keep_traces=keep_traces)
+                            post=post, keep_traces=keep_traces,
+                            mesh=mesh, mesh_axis=mesh_axis)
         t0 = time.perf_counter()
         out = jax.block_until_ready(fn(stacked_flat, seeds_flat, idx_flat))
         t_first += time.perf_counter() - t0

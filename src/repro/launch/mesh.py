@@ -43,6 +43,50 @@ def make_batch_mesh(devices=None) -> Mesh:
     return Mesh(np.asarray(devices), ("batch",))
 
 
+def make_pods_mesh(pods: int | None = None, data: int | None = None,
+                   model: int | None = None, devices=None) -> Mesh:
+    """3-D ``("pod","data","model")`` mesh for the hierarchical runtime.
+
+    The leading "pod" axis carries parameter-shard *replicas* (one full
+    copy of the table per pod); within a pod, "data" carries that pod's PS
+    workers and "model" its parameter shards — `repro.pods` partitions the
+    ``P`` workers pod-major over ``("pod","data")``, matching
+    ``core.delays.pod_of``.  Defaults: 2 pods when the device count allows
+    (else 1), then the `make_ps_mesh` policy for the within-pod axes
+    (model=2 when even, >=1 worker-pair per data shard being the caller's
+    job).  The CI pods lane forces 16 host devices and runs 2x4x2.
+    """
+    if devices is None:
+        devices = jax.devices()
+    n = len(devices)
+    if pods is None:
+        pods = 2 if n % 2 == 0 and n >= 4 else 1
+    if n % pods:
+        raise ValueError(f"pods={pods} does not divide the {n} visible "
+                         f"devices")
+    per_pod = n // pods
+    if model is None:
+        if data is not None:
+            if per_pod % data:
+                raise ValueError(
+                    f"data={data} does not divide the per-pod device count "
+                    f"({per_pod}); pass model= explicitly")
+            model = per_pod // data
+        else:
+            model = 2 if (per_pod > 1 and per_pod % 2 == 0) else 1
+    if data is None:
+        if per_pod % model:
+            raise ValueError(
+                f"model={model} does not divide the per-pod device count "
+                f"({per_pod}); pass data= explicitly")
+        data = per_pod // model
+    if pods * data * model > n:
+        raise ValueError(f"mesh ({pods}x{data}x{model}) needs "
+                         f"{pods * data * model} devices, have {n}")
+    return Mesh(np.asarray(devices[:pods * data * model])
+                .reshape(pods, data, model), ("pod", "data", "model"))
+
+
 def make_ps_mesh(data: int | None = None, model: int | None = None,
                  devices=None) -> Mesh:
     """``("data","model")`` mesh for the executable parameter server.

@@ -1,0 +1,37 @@
+"""pods — the hierarchical multi-pod parameter server, run for real.
+
+`repro.psrun` runs the PS on a flat ``("data","model")`` mesh: one network
+tier, one copy of the parameter shards.  This package lifts it one level:
+on a 3-D ``("pod","data","model")`` mesh (`launch.mesh.make_pods_mesh`, or
+`make_production_mesh(multi_pod=True)` at v5e scale) each pod holds a
+**full replica** of the parameter shards serving its own workers at
+intra-pod latency, and a *cross-pod reconciliation channel* keeps the
+replicas within a second, configurable staleness bound:
+
+- **eager** for ESSP/async/VAP — fresh update deltas cross the pod
+  boundary every clock (the per-clock all-gather over the worker axes is
+  the data plane; the two-tier delivery model of `core.delays` gates when
+  a reader may *see* them at ``t_net_xpod`` latency);
+- **clock-gated** for BSP/SSP — BSP's barrier drains both tiers; SSP pulls
+  a cross-pod channel only when its ``s + s_xpod`` bound trips.
+
+The bounded-async invariant (Wei et al., arXiv:1312.7869): per-channel
+staleness never exceeds ``s_intra + s_xpod``, and replica divergence — how
+far two pods' visible prefixes of one producer drift apart — obeys the
+same bound (`pods.reconcile`).
+
+``core.ps.simulate`` with ``cfg.n_pods > 1`` is the executable *oracle*
+for all of it (the hierarchical mode of the Trace-producer contract):
+seeded BSP/SSP/ESSP runs are bit-identical between `PodsRuntime` and the
+simulator, VAP agrees to a strict ulp budget with exactly-equal decisions
+— `pods.validate.cross_validate_pods`, enforced by ``tests/test_pods.py``
+under the CI 16-device lane.
+"""
+from .reconcile import (reconcile_stats, replica_clock, replica_divergence,
+                        xpod_channel_mask)
+from .runtime import PodsRuntime, default_pods_mesh
+from .validate import cross_validate_pods
+
+__all__ = ["PodsRuntime", "default_pods_mesh", "cross_validate_pods",
+           "replica_clock", "replica_divergence", "reconcile_stats",
+           "xpod_channel_mask"]

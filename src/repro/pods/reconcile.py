@@ -1,0 +1,107 @@
+"""Replica-level analysis of the cross-pod reconciliation channel.
+
+In the hierarchical PS each pod's *replica state* with respect to producer
+``q`` is the prefix of ``q``'s updates its readers may see.  We summarize
+it by the replica clock
+
+    rep[g, q] = min_{r in pod g} cview[r, q]
+
+(the weakest reader defines what the replica guarantees), and measure the
+reconciliation channel by two quantities derived from any `Trace`:
+
+- **replica divergence** ``max_g rep[g, q] - min_g rep[g, q]`` — how far
+  two pods' visible prefixes of one producer drift apart.  Under the
+  two-tier SSP/ESSP bound every reader satisfies ``c - s_eff - 1 <=
+  cview[r, q] <= c - 1`` with ``s_eff <= s + s_xpod``, so divergence is
+  bounded by ``s_intra + s_xpod`` — the reconciliation invariant
+  (`tests/test_pods.py` holds it as a hypothesis property);
+- **reconciliation traffic** — cross-pod deliveries are *delta* shipments
+  (one producer-clock of updates per delivery, ``d`` floats), cross-pod
+  forced fetches are clock-gated pulls of up to the whole in-transit
+  suffix.  `reconcile_stats` counts both and reports the delta-compression
+  ratio against the naive alternative of shipping a full replica
+  (``W x P x d``) per reconciliation.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..core.consistency import ConsistencyConfig
+from ..core.delays import pod_of, same_pod_mask
+from ..core.ps import Trace
+
+
+def xpod_channel_mask(cfg: ConsistencyConfig, P: int) -> np.ndarray:
+    """[reader, producer] bool: True where the channel crosses pods."""
+    return ~np.asarray(same_pod_mask(P, cfg.n_pods))
+
+
+def replica_clock(trace: Trace, cfg: ConsistencyConfig) -> np.ndarray:
+    """Per-clock replica clocks ``rep[t, g, q]`` relative to the barrier.
+
+    Derived from ``Trace.staleness = cview - c``: ``rep[t, g, q]`` is the
+    staleness of pod ``g``'s weakest reader of producer ``q`` (so ``-1``
+    means "replica g has everything through the barrier from q").
+    """
+    st = np.asarray(trace.staleness)                    # [T, P, P]
+    P = st.shape[-1]
+    pods = np.asarray(pod_of(P, cfg.n_pods))
+    G = cfg.n_pods
+    return np.stack([st[:, pods == g, :].min(axis=1) for g in range(G)],
+                    axis=1)                             # [T, G, P]
+
+
+def replica_divergence(trace: Trace, cfg: ConsistencyConfig) -> dict:
+    """Max drift between pods' visible prefixes, against the two-tier bound.
+
+    Returns ``{max, bound, ok, per_clock}``; ``bound`` is ``s_intra +
+    s_xpod`` and applies to the bounded models (SSP/ESSP; BSP is 0-bounded
+    by the barrier).  For async/VAP there is no clock bound — callers get
+    the measured divergence with ``ok=None``.
+    """
+    rep = replica_clock(trace, cfg)                     # [T, G, P]
+    div = rep.max(axis=1) - rep.min(axis=1)             # [T, P]
+    out = {"max": int(div.max()) if div.size else 0,
+           "per_clock": div.max(axis=-1)}
+    if cfg.model == "bsp":
+        out["bound"] = 0
+    elif cfg.model in ("ssp", "essp"):
+        out["bound"] = int(cfg.staleness) + int(cfg.s_xpod)
+    else:
+        out["bound"] = None
+    out["ok"] = None if out["bound"] is None else out["max"] <= out["bound"]
+    return out
+
+
+def reconcile_stats(trace: Trace, cfg: ConsistencyConfig,
+                    dim: int | None = None) -> dict:
+    """Cross-pod reconciliation traffic of one run.
+
+    Counts eager delta deliveries and clock-gated forced pulls on cross-pod
+    channels, and — when ``dim`` (the app's parameter dimension) is given —
+    the delta-compression ratio: floats actually shipped per reconciled
+    channel-clock (one ``d`` delta) vs a full-replica transfer
+    (``W x P x d``) per reconciliation event.
+    """
+    delivered = np.asarray(trace.delivered)             # [T, P, P]
+    forced = np.asarray(trace.forced)
+    P = delivered.shape[-1]
+    x = xpod_channel_mask(cfg, P)
+    n_clocks = delivered.shape[0]
+    eager = int(delivered[:, x].sum())
+    gated = int(forced[:, x].sum())
+    out = {"xpod_channels": int(x.sum()),
+           "n_clocks": n_clocks,
+           "eager_deliveries": eager,
+           "gated_pulls": gated,
+           "eager_per_clock": eager / max(n_clocks, 1),
+           "gated_per_clock": gated / max(n_clocks, 1)}
+    if dim is not None:
+        W = cfg.effective_window
+        events = eager + gated
+        delta_floats = events * dim
+        replica_floats = events * W * P * dim
+        out["delta_floats"] = delta_floats
+        out["delta_compression"] = (replica_floats / delta_floats
+                                    if delta_floats else None)
+    return out

@@ -1,0 +1,95 @@
+"""PodsRuntime: the psrun clock step on a 3-D ``("pod","data","model")``
+mesh.
+
+The whole shard-local view/push machinery is shared with `repro.psrun`
+(``psrun.runtime.make_run_fn`` generalizes over *worker axes*); this module
+only fixes the axes to ``("pod", "data")`` — the ``P`` workers partition
+pod-major, so the mesh's pod blocks coincide with ``core.delays.pod_of`` —
+and validates that the config's ``n_pods`` matches the physical pod axis:
+on this runtime the pod partition is *placement*, not just channel
+classification.
+
+What the mesh layout means hierarchically (see ``psrun.runtime`` for the
+per-clock step):
+
+- ``base``/``uring`` are sharded over "model" and replicated over
+  ``("pod","data")`` — the per-pod replica of the parameter shards;
+- the per-clock ``all_gather`` of fresh updates over ``("pod","data")`` is
+  the eager reconciliation channel: one ``[P, d]`` delta per clock crosses
+  the pod boundary (never the ``[W, P, d]`` replica), and the oldest ring
+  slot folds ``P`` producer updates into one ``[d_block]`` vector of the
+  replica's base — the delta-compressed fold;
+- ``cview`` rows live with their pod's workers and gate what each reader
+  *sees* of the reconciled ring under the two-tier staleness bound.
+"""
+from __future__ import annotations
+
+import jax
+
+from ..core.consistency import ConsistencyConfig
+from ..core.ps import PSApp
+from ..launch.mesh import make_pods_mesh
+from ..psrun.runtime import PSRuntime
+
+# re-exported for parity with psrun.runtime.trace_count (same counter: the
+# pods runtime runs the same compiled body)
+from ..psrun.runtime import trace_count  # noqa: F401
+
+
+def default_pods_mesh(n_workers: int, n_pods: int = 2, devices=None):
+    """The widest ``("pod","data","model")`` mesh for ``n_workers`` over
+    ``n_pods`` that stays in the bit-identity regime: per pod, the data
+    axis is the largest divisor of the pod's device count that divides the
+    pod's worker count while keeping >= 2 workers per shard; an even
+    leftover becomes 2 model-shard columns.  (16 devices, 16 workers,
+    2 pods -> the CI lane's 2x4x2.)
+    """
+    if devices is None:
+        devices = jax.devices()
+    n = len(devices)
+    if n % n_pods:
+        raise ValueError(f"n_pods={n_pods} does not divide the {n} visible "
+                         f"devices")
+    if n_workers % n_pods:
+        raise ValueError(f"n_workers={n_workers} must divide by "
+                         f"n_pods={n_pods}")
+    per_pod_w = n_workers // n_pods
+    per_pod_dev = n // n_pods
+    data = 1
+    for cand in range(min(per_pod_dev, per_pod_w // 2), 0, -1):
+        if per_pod_w % cand == 0 and per_pod_dev % cand == 0:
+            data = cand
+            break
+    rest = per_pod_dev // data
+    model = 2 if (rest > 1 and rest % 2 == 0) else 1
+    return make_pods_mesh(pods=n_pods, data=data, model=model,
+                          devices=devices)
+
+
+class PodsRuntime(PSRuntime):
+    """Hierarchical PS: ``PodsRuntime(mesh).run(app, cfg, n_clocks)``.
+
+    ``cfg.n_pods`` must equal the mesh's pod-axis size (the config's pod
+    partition *is* the placement here), and the app's workers must divide
+    by ``pod x data``.  Everything else — Trace schema, compile caching,
+    ``init_state``/``run_from`` checkpointing — is inherited from
+    `psrun.runtime.PSRuntime`; the simulator's hierarchical mode
+    (``core.ps.simulate`` with the same config) is the oracle
+    (`pods.validate.cross_validate_pods`).
+    """
+
+    worker_axes = ("pod", "data")
+
+    def _default_mesh(self):
+        return make_pods_mesh()
+
+    def run_fn(self, app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
+               record_views: bool = False):
+        n_pods = self.mesh.shape["pod"]
+        if cfg.n_pods != n_pods:
+            raise ValueError(
+                f"cfg.n_pods={cfg.n_pods} must match the mesh pod axis "
+                f"({n_pods}): on PodsRuntime the pod partition is physical "
+                f"placement — use consistency.podded(cfg, {n_pods}) or a "
+                f"matching make_pods_mesh")
+        return super().run_fn(app, cfg, n_clocks, record_views)

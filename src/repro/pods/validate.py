@@ -1,0 +1,39 @@
+"""Oracle contract for the hierarchical runtime.
+
+``core.ps.simulate`` with the *same* hierarchical config is the oracle —
+the pods runtime must match it exactly like psrun matches the flat mode
+(``psrun.validate.cross_validate`` does the per-model comparison; its
+staleness check is already two-tier via
+``core.delays.staleness_bound_matrix``).  On top of that the hierarchical
+contract adds the replica layer: pods' visible prefixes must stay within
+the reconciliation bound (`pods.reconcile.replica_divergence`).
+"""
+from __future__ import annotations
+
+from ..core.consistency import ConsistencyConfig
+from ..core.ps import PSApp
+from ..psrun.validate import cross_validate
+from .reconcile import reconcile_stats, replica_divergence
+from .runtime import PodsRuntime
+
+
+def cross_validate_pods(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
+                        runtime: PodsRuntime | None = None, seed=0) -> dict:
+    """Run both engines and check the hierarchical oracle contract.
+
+    BSP/SSP/ESSP: bit-identical traces (+ two-tier staleness bound for
+    SSP/ESSP).  VAP: value bound, exact decisions, strict ulp budget.
+    All bounded models: replica divergence within ``s_intra + s_xpod``.
+    Returns the evidence dict with an overall ``ok``.
+    """
+    runtime = runtime or PodsRuntime()
+    out = cross_validate(app, cfg, n_clocks, runtime=runtime, seed=seed,
+                         return_trace=True)
+    tr = out.pop("trace")          # reuse — don't re-execute the run
+    div = replica_divergence(tr, cfg)
+    out["replica_divergence"] = {k: v for k, v in div.items()
+                                 if k != "per_clock"}
+    if div["ok"] is not None:
+        out["ok"] = out["ok"] and div["ok"]
+    out["reconcile"] = reconcile_stats(tr, cfg, dim=app.dim)
+    return out

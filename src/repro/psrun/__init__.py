@@ -16,8 +16,8 @@ runs must satisfy the staleness / value-bound invariants checked by
 ``core.theory`` / ``core.valuebound``.  See ``psrun.validate`` for the
 cross-validation entry points and ``tests/test_psrun.py`` for the contract.
 """
-from .runtime import PSRuntime, default_mesh, make_run_fn
-from .validate import cross_validate, trace_max_diff
+from .runtime import PSRuntime, PSState, default_mesh, make_run_fn
+from .validate import cross_validate, trace_max_diff, trace_max_ulp
 
-__all__ = ["PSRuntime", "default_mesh", "make_run_fn", "cross_validate",
-           "trace_max_diff"]
+__all__ = ["PSRuntime", "PSState", "default_mesh", "make_run_fn",
+           "cross_validate", "trace_max_diff", "trace_max_ulp"]

@@ -1,19 +1,29 @@
-"""The executable PS runtime: one `shard_map` clock step on a 2-D mesh.
+"""The executable PS runtime: one `shard_map` clock step on a device mesh.
 
-Layout (mesh axes ``("data", "model")``, built by `launch.mesh.make_ps_mesh`):
+Layout (mesh axes ``("data", "model")``, built by `launch.mesh.make_ps_mesh`;
+the hierarchical runtime in ``repro.pods`` reuses this module with worker
+axes ``("pod", "data")`` on a 3-D mesh from `launch.mesh.make_pods_mesh`):
 
 - the flat parameter vector (dim ``d``, zero-padded to divide the model
   axis) is sharded over ``"model"``: each model shard *owns* a contiguous
   coordinate block of the table — the server side;
-- the ``P`` workers are partitioned over ``"data"`` (``P`` must divide by
-  the axis size); each data shard holds its workers' local state, the
-  reader rows of the per-channel clock matrix ``cview[r, q]``, and (with
-  the model axis) its block of every producer's in-transit update ring —
-  the client cache;
-- the update ring ``uring[W, P, d_block]`` is replicated over ``"data"``
-  and sharded over ``"model"``: every reader can see every producer's
+- the ``P`` workers are partitioned over the *worker axes* (``"data"``, or
+  ``("pod","data")`` pod-major — ``P`` must divide by the product of their
+  sizes); each worker shard holds its workers' local state, the reader rows
+  of the per-channel clock matrix ``cview[r, q]``, and (with the model
+  axis) its block of every producer's in-transit update ring — the client
+  cache;
+- the update ring ``uring[W, P, d_block]`` is replicated over the worker
+  axes and sharded over ``"model"``: every reader can see every producer's
   updates for the coordinates its column owns, which is exactly the cache
-  layout of ESSPTable clients subscribed to all table rows.
+  layout of ESSPTable clients subscribed to all table rows.  Under the pod
+  axis this replication *is* the per-pod parameter-shard replica: each pod
+  holds a full copy of the table, and the per-clock all-gather of fresh
+  updates over the worker axes is the eager delta channel that keeps the
+  replicas' contents reconciled (only the newest clock's updates — one
+  ``[P, d]`` delta, not the ``[W, P, d]`` replica — cross the pod
+  boundary), while ``cview`` decides what each reader may *see* of them
+  (two-tier staleness: `core.delays.staleness_bound_matrix`).
 
 Per clock, inside ``shard_map`` (collectives annotated):
 
@@ -23,14 +33,16 @@ Per clock, inside ``shard_map`` (collectives annotated):
 2. views materialize shard-locally through ``kernels.ops.ring_view``
    (readers × owned coordinates — the Pallas path on TPU), then assemble
    per-reader full views with an ``all_gather`` over ``"model"``;
-3. each worker runs ``app.worker_update`` on its own data shard;
-4. updates are pushed to the owning shards: ``all_gather`` over ``"data"``
-   then keep the owned coordinate block (a host-mesh stand-in for the
+3. each worker runs ``app.worker_update`` on its own worker shard;
+4. updates are pushed to the owning shards: ``all_gather`` over the worker
+   axes then keep the owned coordinate block (a host-mesh stand-in for the
    per-shard all-to-all a network PS would do), written into the ring;
-   the oldest ring slot folds into the shard's base;
+   the oldest ring slot folds into the shard's base (the delta-compressed
+   fold: ``P`` producer updates collapse into one ``[d_block]`` vector);
 5. the end-of-clock delivery matrix (the synthetic network model shared
-   with the simulator — `core.delays`) advances ``cview`` eagerly for
-   ESSP/async/VAP; SSP ignores pushes (pull-based).
+   with the simulator — `core.delays`, two-tier under ``cfg.n_pods > 1``)
+   advances ``cview`` eagerly for ESSP/async/VAP; SSP ignores pushes
+   (pull-based).
 
 RNG and arithmetic mirror ``core.ps.simulate`` *exactly* (same key splits,
 same per-coordinate reduction orders), which is what makes the simulator an
@@ -38,8 +50,20 @@ executable oracle: a seeded BSP run matches bit for bit, and the numeric
 knobs of `ConsistencyConfig` stay jit *arguments* (pytree data), so
 re-running with different staleness/push_prob/straggler knobs reuses the
 compiled program — one compile per config family, like ``core.sweep``.
+
+Mid-run state
+-------------
+The compiled step carries an explicit `PSState` (clock, base, ring, cview,
+worker locals, RNG key), exposed through ``init_state`` / ``run_from``:
+``run_from(state, n)`` returns the per-clock `Trace` plus the advanced
+state, and resuming from a saved state reproduces the uninterrupted run
+bit for bit (``checkpoint.io.save_runtime`` round-trips it through disk —
+`tests/test_pods.py` pins the determinism).
 """
 from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -47,8 +71,8 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P_
 
 from ..core.consistency import ConsistencyConfig
-from ..core.delays import delivery_matrix
-from ..core.ps import PSApp, Trace
+from ..core.delays import delivery_matrix, staleness_bound_matrix
+from ..core.ps import PSApp, Trace, enforce_vap
 from ..kernels import ops
 from ..kernels.ref import RING_EMPTY, RING_INVALID
 from ..launch.mesh import make_ps_mesh
@@ -61,6 +85,26 @@ _TRACE_COUNTER = {"count": 0}
 
 def trace_count() -> int:
     return _TRACE_COUNTER["count"]
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class PSState:
+    """Mid-run runtime state (everything the clock step carries).
+
+    ``base``/``uring`` are in the runtime's padded coordinate layout
+    (``dpad`` divides the model axis); ``clock`` is the next clock to
+    execute.  A `PSState` is an ordinary pytree of arrays, so
+    ``checkpoint.io.save`` / ``restore`` round-trip it unchanged.
+    """
+
+    clock: jax.Array           # [] i32 — next clock to execute
+    base: jax.Array            # [dpad] folded (globally visible) updates
+    uring: jax.Array           # [W, P, dpad] in-transit update ring
+    uclock: jax.Array          # [W] clock stored in each ring slot
+    cview: jax.Array           # [P, P] per-channel visibility clocks
+    local: Any                 # worker-local state (leaves lead with P)
+    rng: jax.Array             # PRNG key (the simulator's key stream)
 
 
 def default_mesh(n_workers: int, devices=None):
@@ -81,62 +125,69 @@ def default_mesh(n_workers: int, devices=None):
     return make_ps_mesh(data=data, model=model, devices=devices)
 
 
-def _layout(app: PSApp, mesh):
+def _layout(app: PSApp, mesh, worker_axes):
     """Validate the (app, mesh) pairing and derive the shard geometry."""
-    assert set(("data", "model")) <= set(mesh.axis_names), mesh.axis_names
-    DP, M = mesh.shape["data"], mesh.shape["model"]
+    assert set(worker_axes) | {"model"} <= set(mesh.axis_names), \
+        (mesh.axis_names, worker_axes)
+    DP = 1
+    for ax in worker_axes:
+        DP *= mesh.shape[ax]
+    M = mesh.shape["model"]
     P, d = app.n_workers, app.dim
     if P % DP:
         raise ValueError(
-            f"n_workers={P} must divide by the data axis ({DP}); "
-            f"build a smaller mesh with launch.mesh.make_ps_mesh")
+            f"n_workers={P} must divide by the worker axes "
+            f"{tuple(worker_axes)} of total size {DP}; build a smaller "
+            f"mesh with launch.mesh.make_ps_mesh/make_pods_mesh")
     dpad = -(-d // M) * M
     return DP, M, P // DP, dpad, dpad // M
 
 
 def make_run_fn(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
-                mesh=None, record_views: bool = False):
+                mesh=None, record_views: bool = False,
+                worker_axes: tuple = ("data",)):
     """Build the jitted runtime for one config *family* on ``mesh``.
 
-    Returns ``fn(seed, cfg) -> Trace``.  ``cfg``'s numeric knobs are traced
-    jit arguments — calling with different staleness/push_prob/straggler
-    values (same model, same ring window) reuses the compiled program.  The
-    ``cfg`` given here only fixes the static structure (model, window,
-    read_my_writes).
+    Returns a callable ``fn(seed, cfg) -> Trace``.  ``cfg``'s numeric knobs
+    are traced jit arguments — calling with different
+    staleness/push_prob/straggler values (same model, same ring window)
+    reuses the compiled program.  The ``cfg`` given here only fixes the
+    static structure (model, window, read_my_writes, n_pods).
+
+    The callable also exposes the state-carrying entry points
+    ``fn.init_state(seed) -> PSState`` and ``fn.run_from(state, cfg) ->
+    (Trace, PSState)``; ``fn(seed, cfg)`` is exactly
+    ``fn.run_from(fn.init_state(seed), cfg)[0]``.
+
+    ``worker_axes`` names the mesh axes that partition the workers
+    (``("data",)`` for the flat runtime, ``("pod", "data")`` for
+    `repro.pods` — pod-major, matching `core.delays.pod_of`).
     """
     mesh = make_ps_mesh() if mesh is None else mesh
-    _DP, _M, Pl, dpad, dl = _layout(app, mesh)
+    worker_axes = tuple(worker_axes)
+    _DP, _M, Pl, dpad, dl = _layout(app, mesh, worker_axes)
     P, d = app.n_workers, app.dim
     W = cfg.effective_window
+    if cfg.n_pods > 1 and P % cfg.n_pods:
+        raise ValueError(f"n_workers={P} must divide by n_pods={cfg.n_pods}")
     f32 = jnp.float32
 
-    def body(cfg, base, uring, uclock, cview, local, rng):
+    def body(cfg, clock0, base, uring, uclock, cview, local, rng):
         # local shards: base [dl], uring [W, P, dl], uclock [W] (replicated),
-        # cview [Pl, P], local leaves [Pl, ...], rng replicated.
+        # cview [Pl, P], local leaves [Pl, ...], rng/clock0 replicated.
         _TRACE_COUNTER["count"] += 1          # fires once per trace/compile
-        di = jax.lax.axis_index("data")
+        di = jax.lax.axis_index(worker_axes)
         mi = jax.lax.axis_index("model")
         rows0 = (di * Pl).astype(jnp.int32)
         worker_ids = rows0 + jnp.arange(Pl, dtype=jnp.int32)
         producer_ids = jnp.arange(P, dtype=jnp.int32)
         eye_l = worker_ids[:, None] == producer_ids[None, :]   # local eye rows
-        s = cfg.staleness
+        # Two-tier staleness bound on the local reader rows (`s` intra-pod,
+        # `s + s_xpod` cross-pod; one-tier and exactly `s` when n_pods=1).
+        s_eff = staleness_bound_matrix(cfg, worker_ids, P)     # [Pl, P]
 
         vmapped_update = jax.vmap(app.worker_update,
                                   in_axes=(0, 0, 0, None, 0))
-
-        def enforce_vap(c, cview, norms):
-            # identical math to ps.simulate.enforce_vap, on local reader rows
-            v_t = cfg.v0 / jnp.sqrt(c.astype(f32) + 1.0)
-            ok = norms <= v_t                                  # [W+1, P]
-            ok = ok.at[0].set(True)
-            kcur = jnp.clip(c - 1 - cview, 0, W)               # [Pl, P]
-            ks = jnp.arange(W + 1, dtype=jnp.int32)[:, None, None]
-            cond = ok[:, None, :] & (ks <= kcur[None, :, :])
-            kbest = jnp.max(jnp.where(cond, ks, -1), axis=0)   # [Pl, P]
-            required = c - 1 - kbest
-            forced = cview < required
-            return jnp.maximum(cview, required), forced
 
         def step(carry, c):
             base, uring, uclock, cview, local, rng = carry
@@ -152,10 +203,10 @@ def make_run_fn(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
                 forced = cview < (c - 1)
                 cview = jnp.full_like(cview, c - 1)
             elif cfg.model in ("ssp", "essp"):
-                forced = cview < (c - s - 1)
+                forced = cview < (c - s_eff - 1)
                 cview = jnp.where(forced, c - 1, cview)
             elif cfg.model == "vap":
-                cview, forced = enforce_vap(c, cview, norms)
+                cview, forced = enforce_vap(cfg, c, cview, norms, W)
             else:  # async
                 forced = jnp.zeros_like(cview, dtype=bool)
 
@@ -166,7 +217,7 @@ def make_run_fn(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
 
             kcur = jnp.clip(c - 1 - cview, 0, W)               # [Pl, P]
             intransit_inf = jax.lax.pmax(
-                jnp.max(norms[kcur, producer_ids[None, :]]), "data")
+                jnp.max(norms[kcur, producer_ids[None, :]]), worker_axes)
 
             # --- 2. materialize views: shard-local, then assemble ---------
             views_l = ops.ring_view(base, uring, uclock, cview)  # [Pl, dl]
@@ -180,7 +231,11 @@ def make_run_fn(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
             u_l = u_l.astype(f32)                              # [Pl, d]
 
             # --- 4. push to owning shards; fold oldest slot ---------------
-            u_all = jax.lax.all_gather(u_l, "data", axis=0, tiled=True)
+            # The all-gather over the worker axes is the data plane: under a
+            # pod axis it is the eager cross-pod delta channel (one fresh
+            # [P, d] update set per clock keeps every pod replica's ring
+            # reconciled; visibility stays gated by cview above).
+            u_all = jax.lax.all_gather(u_l, worker_axes, axis=0, tiled=True)
             # norm on the gathered [P, d] — the oracle's operand shape, so
             # XLA emits the same reduction and the floats match bit-for-bit
             u_l2 = jnp.linalg.norm(u_all, axis=-1)
@@ -209,9 +264,11 @@ def make_run_fn(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
                 uring * (uclock[:, None, None] > RING_INVALID), axis=(0, 1))
             x_ref = jax.lax.all_gather(x_ref, "model", tiled=True)[:d]
             locals_all = jax.tree_util.tree_map(
-                lambda x: jax.lax.all_gather(x, "data", axis=0, tiled=True),
+                lambda x: jax.lax.all_gather(x, worker_axes, axis=0,
+                                             tiled=True),
                 local)
-            views_all = jax.lax.all_gather(views, "data", axis=0, tiled=True)
+            views_all = jax.lax.all_gather(views, worker_axes, axis=0,
+                                           tiled=True)
             out = dict(loss_ref=app.loss(x_ref, locals_all),
                        loss_view=app.loss(views_all[0], locals_all),
                        staleness=staleness, forced=forced,
@@ -222,47 +279,64 @@ def make_run_fn(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
             return (base, uring, uclock, cview, local, rng), out
 
         carry0 = (base, uring, uclock, cview, local, rng)
-        (base, uring, uclock, _, local, _), ys = jax.lax.scan(
-            step, carry0, jnp.arange(n_clocks, dtype=jnp.int32))
+        clocks = clock0 + jnp.arange(n_clocks, dtype=jnp.int32)
+        (base, uring, uclock, cview, local, rng), ys = jax.lax.scan(
+            step, carry0, clocks)
         x_final = base + jnp.sum(
             uring * (uclock[:, None, None] > RING_INVALID), axis=(0, 1))
-        return {"ys": ys, "x_final": x_final, "locals_final": local}
+        return {"ys": ys, "x_final": x_final,
+                "state": dict(clock=clock0 + n_clocks, base=base,
+                              uring=uring, uclock=uclock, cview=cview,
+                              local=local, rng=rng)}
 
-    local_spec = jax.tree_util.tree_map(lambda _: P_("data"), app.local0)
+    local_spec = jax.tree_util.tree_map(lambda _: P_(worker_axes), app.local0)
     ys_specs = {"loss_ref": P_(), "loss_view": P_(),
-                "staleness": P_(None, "data", None),
-                "forced": P_(None, "data", None),
-                "delivered": P_(None, "data", None),
+                "staleness": P_(None, worker_axes, None),
+                "forced": P_(None, worker_axes, None),
+                "delivered": P_(None, worker_axes, None),
                 "u_l2": P_(), "intransit_inf": P_()}
     if record_views:
         ys_specs["views0"] = P_()
+    state_specs = dict(clock=P_(), base=P_("model"),
+                       uring=P_(None, None, "model"), uclock=P_(),
+                       cview=P_(worker_axes, None), local=local_spec,
+                       rng=P_())
     sharded = shard_map(
         body, mesh=mesh,
-        in_specs=(P_(), P_("model"), P_(None, None, "model"), P_(),
-                  P_("data", None), local_spec, P_()),
+        in_specs=(P_(), P_(), P_("model"), P_(None, None, "model"), P_(),
+                  P_(worker_axes, None), local_spec, P_()),
         out_specs={"ys": ys_specs, "x_final": P_("model"),
-                   "locals_final": local_spec},
+                   "state": state_specs},
         check_rep=False)
 
-    def run(seed, cfg):
-        base0 = jnp.pad(app.x0.astype(f32), (0, dpad - d))
-        uring0 = jnp.zeros((W, P, dpad), f32)
-        uclock0 = jnp.full((W,), RING_EMPTY, jnp.int32)
-        cview0 = jnp.full((P, P), -1, jnp.int32)
-        rng0 = jax.random.PRNGKey(seed)
-        out = sharded(cfg, base0, uring0, uclock0, cview0, app.local0, rng0)
+    def run(state: PSState, cfg):
+        out = sharded(cfg, state.clock, state.base, state.uring,
+                      state.uclock, state.cview, state.local, state.rng)
         ys = out["ys"]
-        return Trace(loss_ref=ys["loss_ref"], loss_view=ys["loss_view"],
-                     staleness=ys["staleness"], forced=ys["forced"],
-                     delivered=ys["delivered"], u_l2=ys["u_l2"],
-                     intransit_inf=ys["intransit_inf"],
-                     views0=ys.get("views0"),
-                     x_final=out["x_final"][:d],
-                     locals_final=out["locals_final"])
+        trace = Trace(loss_ref=ys["loss_ref"], loss_view=ys["loss_view"],
+                      staleness=ys["staleness"], forced=ys["forced"],
+                      delivered=ys["delivered"], u_l2=ys["u_l2"],
+                      intransit_inf=ys["intransit_inf"],
+                      views0=ys.get("views0"),
+                      x_final=out["x_final"][:d],
+                      locals_final=out["state"]["local"])
+        return trace, PSState(**out["state"])
 
     jitted = jax.jit(run)
 
-    def fn(seed, cfg_run: ConsistencyConfig | None = None):
+    def init_state(seed) -> PSState:
+        """Clock-0 state for ``seed`` (the simulator's initial conditions,
+        in the runtime's padded layout)."""
+        return PSState(
+            clock=jnp.zeros((), jnp.int32),
+            base=jnp.pad(app.x0.astype(f32), (0, dpad - d)),
+            uring=jnp.zeros((W, P, dpad), f32),
+            uclock=jnp.full((W,), RING_EMPTY, jnp.int32),
+            cview=jnp.full((P, P), -1, jnp.int32),
+            local=app.local0,
+            rng=jax.random.PRNGKey(seed))
+
+    def _norm_cfg(cfg_run: ConsistencyConfig | None) -> ConsistencyConfig:
         c = cfg if cfg_run is None else cfg_run
         if c.effective_window != W:
             raise ValueError(
@@ -271,8 +345,18 @@ def make_run_fn(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
                 f"a new run fn")
         # normalize the static window so every same-family call shares one
         # pytree treedef (and therefore one jit cache entry)
-        return jitted(jnp.asarray(seed, jnp.uint32), c.replace(window=W))
+        return c.replace(window=W)
 
+    def run_from(state: PSState, cfg_run: ConsistencyConfig | None = None):
+        """Advance ``state`` by ``n_clocks``; returns ``(Trace, PSState)``.
+        Bit-identical to running the clocks uninterrupted."""
+        return jitted(state, _norm_cfg(cfg_run))
+
+    def fn(seed, cfg_run: ConsistencyConfig | None = None) -> Trace:
+        return jitted(init_state(seed), _norm_cfg(cfg_run))[0]
+
+    fn.init_state = init_state
+    fn.run_from = run_from
     return fn
 
 
@@ -284,11 +368,20 @@ class PSRuntime:
     RNG stream), executed over the mesh instead of vectorized on one
     device.  Compiled programs are cached per (app, config family, ring
     window, n_clocks) — numeric knob changes re-use them.
+
+    ``init_state`` / ``run_from`` expose the mid-run `PSState` for
+    checkpointing: ``run_from`` resumed from a saved state reproduces the
+    uninterrupted trace bit for bit.
     """
 
+    worker_axes: tuple = ("data",)
+
     def __init__(self, mesh=None):
-        self.mesh = make_ps_mesh() if mesh is None else mesh
+        self.mesh = self._default_mesh() if mesh is None else mesh
         self._cache: dict = {}
+
+    def _default_mesh(self):
+        return make_ps_mesh()
 
     def run_fn(self, app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
                record_views: bool = False):
@@ -298,7 +391,8 @@ class PSRuntime:
         fn = self._cache.get(key)
         if fn is None:
             fn = make_run_fn(app, cfg, n_clocks, mesh=self.mesh,
-                             record_views=record_views)
+                             record_views=record_views,
+                             worker_axes=self.worker_axes)
             self._cache[key] = fn
         return fn
 
@@ -306,3 +400,14 @@ class PSRuntime:
             seed=0, record_views: bool = False) -> Trace:
         """Run ``n_clocks`` of the app under ``cfg`` on the mesh."""
         return self.run_fn(app, cfg, n_clocks, record_views)(seed, cfg)
+
+    def init_state(self, app: PSApp, cfg: ConsistencyConfig, seed=0,
+                   n_clocks: int = 1) -> PSState:
+        """Clock-0 `PSState` (``n_clocks`` only selects the compiled fn)."""
+        return self.run_fn(app, cfg, n_clocks).init_state(seed)
+
+    def run_from(self, app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
+                 state: PSState, record_views: bool = False):
+        """Advance ``state`` by ``n_clocks`` -> ``(Trace, PSState)``."""
+        return self.run_fn(app, cfg, n_clocks,
+                           record_views).run_from(state, cfg)

@@ -1,24 +1,32 @@
 """Cross-validation of the executable runtime against the simulator oracle.
 
-Three levels of contract, matched to what each consistency model promises:
+Levels of contract, matched to what each consistency model promises:
 
 - **bsp** — the network model is deterministic (full barrier), so a seeded
   run must be *bit-identical* to ``core.ps.simulate``: every `Trace` field,
-  every float.  (With the shared synthetic delay model this actually holds
-  for every model — the runtime replays the simulator's RNG stream — but
-  only BSP's equality is part of the contract; the rest is gravy that the
-  tests pin down opportunistically.)
-- **ssp / essp** — the bounded-staleness invariant: at read time every
-  channel satisfies ``-(s+1) <= cview[r,q] - c <= -1``.
+  every float.
+- **ssp / essp** — *also bit-asserted* (promoted from "holds in practice"
+  in PR 4): the runtime replays the simulator's RNG stream through the
+  shared synthetic delay model, so every float must match, and the
+  bounded-staleness invariant must hold — at read time every channel
+  satisfies ``-(s_eff+1) <= cview[r,q] - c <= -1`` where ``s_eff`` is the
+  per-channel (two-tier, when ``cfg.n_pods > 1``) bound.
 - **vap** — the value-bound condition of paper eq. 1, via
-  ``core.valuebound.check_condition``.
+  ``core.valuebound.check_condition``, with integer decisions
+  (staleness/forced/delivered) exactly equal to the oracle and floats
+  within a strict ulp budget (``trace_max_ulp``).
 
-Bit-identity caveats (both are fusion artifacts, not semantic drift, and
-both are pinned by ``tests/test_psrun.py``): it holds whenever each data
-shard carries >1 worker (a batch-of-1 vmapped worker step can compile to
-different fused arithmetic than the oracle's batch-of-P — 1 ulp), and VAP's
-enforcement ops likewise perturb XLA's fusion of the ring-view contraction
-(traces agree to ~1e-6, decisions — staleness/forced/delivered — exactly).
+Bit-identity caveats (pinned by ``tests/test_psrun.py`` /
+``tests/test_sweep.py``): it holds whenever each worker shard carries >1
+worker (a batch-of-1 vmapped worker step can compile to different fused
+arithmetic than the oracle's batch-of-P — 1 ulp; the mesh factories keep
+the >1 regime).  VAP floats can drift a few ulp/value under *multi-device*
+compilation: XLA's backend instruction-selects the scan body differently
+when the enforcement graph is present (measured: a replay of the worker
+update on bit-identical recorded inputs reproduces the plain-jit value,
+and optimization barriers around every stage leave the drift
+byte-identical — backend codegen, not semantic divergence; MF/LDA are
+exactly stable, and decisions are always exact).
 """
 from __future__ import annotations
 
@@ -26,11 +34,21 @@ import numpy as np
 
 from ..core import valuebound
 from ..core.consistency import ConsistencyConfig
+from ..core.delays import staleness_bound_matrix
 from ..core.ps import PSApp, Trace, simulate
 from .runtime import PSRuntime
 
 TRACE_FIELDS = ("loss_ref", "loss_view", "staleness", "forced", "delivered",
                 "u_l2", "intransit_inf", "x_final")
+
+# Float drift budget for VAP under multi-device compilation (see module
+# doc), asserted in ulp units so it stays scale-free.  Measured drift on
+# the contract tests compounds ~ulp/clock: <= 14 ulp over 40 flat clocks
+# (P=4), <= 64 over 20 hierarchical clocks (P=8).  128 gives slack without
+# ever admitting a semantic bug — the old rtol=1e-5/atol<1e-4 pins admitted
+# thousands of ulp on the same traces (MF/LDA need none of this: they are
+# bit-exact, asserted separately).
+VAP_ULP_BUDGET = 128.0
 
 
 def trace_max_diff(got: Trace, want: Trace) -> dict:
@@ -43,43 +61,90 @@ def trace_max_diff(got: Trace, want: Trace) -> dict:
     return out
 
 
+def trace_max_ulp(got: Trace, want: Trace) -> dict:
+    """Max drift per field, in float32 ulp *of the field's scale*.
+
+    The scale-free version of :func:`trace_max_diff`: ``max|a-b| /
+    spacing(max|want|)`` per field, so "a few ulp" means the same thing
+    for a loss of 1e-3 and a loss of 1e3.  Measured against the field's
+    largest magnitude (not elementwise) because the drift is absolute
+    round-off accumulated while values were large — elementwise ulp would
+    diverge spuriously as a converging field approaches zero.
+    """
+    out = {}
+    for name in TRACE_FIELDS:
+        a = np.asarray(getattr(got, name)).astype(np.float64)
+        b = np.asarray(getattr(want, name)).astype(np.float64)
+        if not a.size:
+            out[name] = 0.0
+            continue
+        scale = np.float32(max(np.abs(b).max(), np.abs(a).max(), 1e-30))
+        out[name] = float(np.abs(a - b).max() / np.spacing(scale))
+    return out
+
+
 def check_staleness_bound(trace: Trace, cfg: ConsistencyConfig) -> dict:
-    """SSP/ESSP invariant: every read is at most ``s+1`` clocks stale and
-    never fresher than the barrier (``-1``)."""
+    """SSP/ESSP invariant: every read is at most ``s_eff+1`` clocks stale
+    and never fresher than the barrier (``-1``).
+
+    ``s_eff`` is per-channel: ``staleness`` intra-pod, ``staleness +
+    s_xpod`` across pods (`core.delays.staleness_bound_matrix`) — the
+    two-tier contract collapses to the flat one at ``n_pods=1``.
+    """
     st = np.asarray(trace.staleness)
-    s = int(cfg.staleness)
-    viol_old = int((st < -(s + 1)).sum())
+    P = st.shape[-1]
+    readers = np.arange(st.shape[-2])  # Pl reader rows (= P in the oracle)
+    s_eff = np.asarray(staleness_bound_matrix(cfg, readers, P))
+    viol_old = int((st < -(s_eff + 1)).sum())
     viol_fresh = int((st > -1).sum())
     return {"violations": viol_old + viol_fresh,
-            "min": int(st.min()), "max": int(st.max()), "bound": -(s + 1)}
+            "min": int(st.min()), "max": int(st.max()),
+            "bound": -(int(np.max(s_eff)) + 1)}
 
 
 def cross_validate(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
-                   runtime: PSRuntime | None = None, seed=0) -> dict:
+                   runtime: PSRuntime | None = None, seed=0,
+                   return_trace: bool = False) -> dict:
     """Run both engines and check the model-appropriate oracle contract.
 
-    Returns a dict with ``ok`` plus the per-model evidence.  BSP compares
-    bit-for-bit against ``simulate``; SSP/ESSP check the staleness bound;
-    VAP checks the value bound.
+    Returns a dict with ``ok`` plus the per-model evidence.  BSP/SSP/ESSP
+    compare bit-for-bit against ``simulate`` (SSP/ESSP additionally check
+    the (two-tier) staleness bound); VAP checks the value bound, exact
+    decisions, and the ulp drift budget.  ``return_trace=True`` adds the
+    runtime's `Trace` under ``"trace"`` so callers layering further checks
+    (``pods.validate``) don't re-execute the run.
     """
     runtime = runtime or PSRuntime()
     tr = runtime.run(app, cfg, n_clocks, seed=seed)
     out: dict = {"model": cfg.model}
-    if cfg.model == "bsp":
+    if cfg.model in ("bsp", "ssp", "essp"):
         import jax
         want = jax.jit(lambda sd: simulate(app, cfg, n_clocks, seed=sd))(
             np.uint32(seed))
         diffs = trace_max_diff(tr, want)
         out["max_diff"] = diffs
         out["ok"] = all(v == 0.0 for v in diffs.values())
-    elif cfg.model in ("ssp", "essp"):
-        chk = check_staleness_bound(tr, cfg)
-        out.update(chk)
-        out["ok"] = chk["violations"] == 0
+        if cfg.model in ("ssp", "essp"):
+            chk = check_staleness_bound(tr, cfg)
+            out.update(chk)
+            out["ok"] = out["ok"] and chk["violations"] == 0
     elif cfg.model == "vap":
+        import jax
         chk = valuebound.check_condition(tr, float(cfg.v0))
         out.update(chk)
-        out["ok"] = chk["violations"] == 0
+        want = jax.jit(lambda sd: simulate(app, cfg, n_clocks, seed=sd))(
+            np.uint32(seed))
+        decisions_ok = all(
+            np.array_equal(np.asarray(getattr(tr, name)),
+                           np.asarray(getattr(want, name)))
+            for name in ("staleness", "forced", "delivered"))
+        ulps = trace_max_ulp(tr, want)
+        out["decisions_exact"] = decisions_ok
+        out["max_ulp"] = ulps
+        out["ok"] = (chk["violations"] == 0 and decisions_ok
+                     and max(ulps.values()) <= VAP_ULP_BUDGET)
     else:  # async has no bound to check; just require finite traces
         out["ok"] = bool(np.isfinite(np.asarray(tr.loss_ref)).all())
+    if return_trace:
+        out["trace"] = tr
     return out

@@ -1,0 +1,342 @@
+"""The pods oracle contract: the hierarchical multi-pod PS vs the simulator.
+
+Contract being pinned (see ``pods/validate.py`` and the hierarchical-mode
+section of ``core/ps.py``):
+
+- the simulator's hierarchical mode *collapses* correctly: ``n_pods=1`` is
+  bit-identical to the flat simulator, BSP is bit-identical across any pod
+  count, and an equal-tier multi-pod ESSP equals the flat run;
+- ``PodsRuntime`` on a ``("pod","data","model")`` mesh matches
+  ``core.ps.simulate`` with the same hierarchical config: BSP/SSP/ESSP
+  bit-identical, VAP with exact decisions within the strict ulp budget
+  (``psrun.validate.VAP_ULP_BUDGET``);
+- the two-tier staleness invariant holds for arbitrary knob draws
+  (hypothesis): per-channel lag <= ``s_intra + s_xpod``, intra-pod
+  channels additionally <= ``s_intra``; replica divergence on the
+  reconciliation channel <= ``s_intra + s_xpod``;
+- mid-run state checkpoints (``checkpoint.io.save_runtime``) resume
+  bit-for-bit, through disk;
+- ``core.sweep`` shards a (config x seed) batch over the pod axis of the
+  multi-pod mesh bit-identically;
+- numeric knob changes (including the new ``s_xpod``/``t_net_*`` tier
+  knobs) reuse the compiled program.
+
+Under the CI pods lane (``REPRO_FORCE_HOST_DEVICES=16``) the runtime tests
+run genuinely sharded over a 2x4x2 mesh; on fewer devices the helpers fall
+back to the widest mesh available (the semantics are placement-independent
+— that is the point of the contract).
+"""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.checkpoint import io as ckpt
+from repro.core import bsp, essp, simulate, ssp, vap
+from repro.core.consistency import ConsistencyConfig, podded
+from repro.core.delays import pod_of, same_pod_mask, staleness_bound_matrix
+from repro.core.ps import PSApp
+from repro.core.sweep import sweep
+from repro.launch.mesh import make_pods_mesh
+from repro.pods import (PodsRuntime, cross_validate_pods, default_pods_mesh,
+                        replica_divergence)
+from repro.pods.runtime import trace_count
+from repro.psrun import PSRuntime
+from repro.psrun.runtime import default_mesh as flat_mesh_for
+from repro.psrun.validate import (TRACE_FIELDS, VAP_ULP_BUDGET,
+                                  check_staleness_bound, trace_max_ulp)
+
+
+def assert_bit_identical(got, want, context=""):
+    for name in TRACE_FIELDS:
+        a, b = np.asarray(getattr(got, name)), np.asarray(getattr(want, name))
+        np.testing.assert_array_equal(a, b, err_msg=f"{context}:{name}")
+
+
+def make_quad(P, d=16):
+    def worker_update(view, local, wid, clock, rng):
+        g = view + 0.05 * jax.random.normal(rng, view.shape)
+        return -(0.3 / jnp.sqrt(1.0 + clock)) * g / P, local
+
+    return PSApp(name=f"quad{P}", dim=d, n_workers=P,
+                 x0=jnp.ones((d,)) * 2.0,
+                 local0={"_": jnp.zeros((P, 1))},
+                 worker_update=worker_update,
+                 loss=lambda x, l: jnp.sum(jnp.square(x)))
+
+
+def pods_runtime_for(n_workers, n_pods):
+    """A PodsRuntime on the widest mesh the host supports; on hosts without
+    enough devices for a physical pod axis, the flat runtime carries the
+    hierarchical config (placement-independent semantics)."""
+    n = len(jax.devices())
+    if n >= 2 * n_pods and n % n_pods == 0:
+        return PodsRuntime(default_pods_mesh(n_workers, n_pods=n_pods))
+    return PSRuntime(flat_mesh_for(n_workers))
+
+
+@pytest.fixture(scope="module")
+def quad8():
+    return make_quad(8)
+
+
+@pytest.fixture(scope="module")
+def quad8_rt2():
+    return pods_runtime_for(8, 2)
+
+
+@pytest.fixture(scope="module")
+def mf16():
+    from repro.apps.matfact import MFConfig, make_mf_app
+    return make_mf_app(MFConfig(n_rows=64, n_cols=64, rank=8, true_rank=8,
+                                n_workers=16, batch=64, lr=0.5))
+
+
+def oracle(app, cfg, T, seed):
+    return jax.jit(lambda sd: simulate(app, cfg, T, seed=sd))(
+        jnp.uint32(seed))
+
+
+HIER = dict(s_xpod=3, t_net_xpod=6.0)
+
+
+# ---------------------------------------------------------------------------
+# simulator hierarchical mode: collapse properties
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("cfg", [bsp(), ssp(3), essp(3),
+                                 vap(0.5, staleness=4)],
+                         ids=lambda c: c.model)
+def test_simulate_pod1_collapses_to_flat(quad8, cfg):
+    """`podded(cfg, 1)` is bit-identical to the flat simulator."""
+    assert_bit_identical(oracle(quad8, podded(cfg, 1), 20, 0),
+                         oracle(quad8, cfg, 20, 0), context=cfg.model)
+
+
+def test_simulate_bsp_bit_identical_across_pod_counts(quad8):
+    """The barrier drains both tiers: BSP traces don't depend on n_pods."""
+    want = oracle(quad8, bsp(), 20, 1)
+    for n_pods in (2, 4):
+        got = oracle(quad8, podded(bsp(), n_pods, s_xpod=5, t_net_xpod=9.0),
+                     20, 1)
+        assert_bit_identical(got, want, context=f"bsp pods={n_pods}")
+
+
+def test_simulate_equal_tier_pods_equal_flat(quad8):
+    """With t_net_xpod == t_net_intra and s_xpod=0 the pod partition is
+    unobservable — the hierarchical run equals the flat one bit for bit."""
+    assert_bit_identical(oracle(quad8, podded(essp(3), 2), 25, 2),
+                         oracle(quad8, essp(3), 25, 2), context="equal-tier")
+
+
+def test_simulate_xpod_channels_are_staler(quad8):
+    """A slow cross-pod tier shows up as strictly staler cross-pod
+    channels, while intra-pod channels keep the tight bound."""
+    cfg = podded(essp(2), 2, s_xpod=4, t_net_xpod=8.0)
+    tr = oracle(quad8, cfg, 40, 0)
+    st = np.asarray(tr.staleness)
+    same = np.asarray(same_pod_mask(8, 2))
+    assert st[:, same].min() >= -(2 + 1)
+    assert st[:, ~same].min() >= -(2 + 4 + 1)
+    assert st.max() <= -1
+    assert st[:, ~same].mean() < st[:, same].mean()
+
+
+# ---------------------------------------------------------------------------
+# PodsRuntime vs the hierarchical oracle (the acceptance contract)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("cfg", [
+    podded(bsp(), 2, **HIER),
+    podded(ssp(2), 2, **HIER),
+    podded(essp(2), 2, **HIER),
+], ids=lambda c: c.model)
+def test_pods_runtime_bit_identical_quad(quad8, quad8_rt2, cfg):
+    got = quad8_rt2.run(quad8, cfg, 20, seed=1)
+    assert_bit_identical(got, oracle(quad8, cfg, 20, 1),
+                         context=f"pods {cfg.model}")
+
+
+@pytest.mark.parametrize("cfg", [
+    podded(bsp(), 2, **HIER),
+    podded(ssp(2), 2, **HIER),
+    podded(essp(2), 2, **HIER),
+    podded(vap(0.5, staleness=4), 2, t_net_xpod=6.0),
+], ids=lambda c: c.model)
+def test_pods_runtime_bit_identical_mf16(mf16, cfg):
+    """The acceptance app on the acceptance topology (2x4x2 under the CI
+    pods lane): bit-identical for every model — including VAP, whose
+    drift allowance the MF float chain does not need."""
+    rt = pods_runtime_for(16, 2)
+    got = rt.run(mf16, cfg, 10, seed=1)
+    want = oracle(mf16, cfg, 10, 1)
+    assert_bit_identical(got, want, context=f"mf16 {cfg.model}")
+
+
+def test_pods_cross_validate_all_models(quad8, quad8_rt2):
+    for cfg in (podded(bsp(), 2, **HIER), podded(ssp(1), 2, **HIER),
+                podded(essp(1), 2, **HIER),
+                podded(vap(0.5, staleness=3), 2, t_net_xpod=6.0)):
+        if isinstance(quad8_rt2, PodsRuntime):
+            out = cross_validate_pods(quad8, cfg, 20, runtime=quad8_rt2)
+        else:  # single-device fallback: flat runtime, same contract
+            from repro.psrun.validate import cross_validate
+            out = cross_validate(quad8, cfg, 20, runtime=quad8_rt2)
+        assert out["ok"], out
+
+
+def test_pods_vap_decisions_exact_ulp_bounded(quad8, quad8_rt2):
+    cfg = podded(vap(0.5, staleness=3), 2, t_net_xpod=6.0)
+    got = quad8_rt2.run(quad8, cfg, 20, seed=1)
+    want = oracle(quad8, cfg, 20, 1)
+    for name in ("staleness", "forced", "delivered"):
+        np.testing.assert_array_equal(np.asarray(getattr(got, name)),
+                                      np.asarray(getattr(want, name)))
+    ulps = trace_max_ulp(got, want)
+    assert max(ulps.values()) <= VAP_ULP_BUDGET, ulps
+
+
+# ---------------------------------------------------------------------------
+# two-tier staleness + replica divergence (hypothesis property)
+# ---------------------------------------------------------------------------
+@settings(max_examples=10, deadline=None)
+@given(s=st.integers(min_value=0, max_value=4),
+       s_xpod=st.integers(min_value=0, max_value=5),
+       push_prob=st.floats(min_value=0.2, max_value=1.0),
+       t_net_xpod=st.floats(min_value=1.0, max_value=12.0),
+       model=st.sampled_from(["ssp", "essp"]),
+       n_pods=st.sampled_from([1, 2, 4]),
+       seed=st.integers(min_value=0, max_value=99))
+def test_two_tier_staleness_and_divergence_property(
+        quad8, s, s_xpod, push_prob, t_net_xpod, model, n_pods, seed):
+    """For any knob draw: per-channel lag <= s_eff (s intra, s + s_xpod
+    cross-pod), reads never beat the barrier, and the pods' visible
+    prefixes of one producer never diverge past s + s_xpod.  The fixed
+    ring window keeps all draws inside one compile per (model, n_pods)."""
+    mk = ssp if model == "ssp" else essp
+    cfg = podded(mk(s, window=12), n_pods, s_xpod=s_xpod,
+                 t_net_xpod=t_net_xpod).replace(push_prob=push_prob)
+    tr = jax.jit(lambda sd, c: simulate(quad8, c, 15, seed=sd))(
+        jnp.uint32(seed), cfg)
+    chk = check_staleness_bound(tr, cfg)       # two-tier, per channel
+    assert chk["violations"] == 0, (model, n_pods, s, s_xpod, chk)
+    assert chk["max"] == -1                    # reads always lag the barrier
+    # intra-pod channels keep the *tight* bound regardless of s_xpod
+    st_ = np.asarray(tr.staleness)
+    same = np.asarray(same_pod_mask(8, n_pods))
+    assert st_[:, same].min() >= -(s + 1)
+    div = replica_divergence(tr, cfg)
+    assert div["ok"], div
+
+
+def test_replica_divergence_bound_on_runtime(quad8, quad8_rt2):
+    cfg = podded(essp(1), 2, s_xpod=4, t_net_xpod=8.0)
+    tr = quad8_rt2.run(quad8, cfg, 30, seed=3)
+    div = replica_divergence(tr, cfg)
+    assert div["bound"] == 5 and div["ok"], div
+
+
+# ---------------------------------------------------------------------------
+# checkpoint: mid-run state resumes bit-for-bit (through disk)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("cfg", [
+    podded(bsp(), 2, **HIER),
+    podded(essp(2), 2, **HIER),
+    podded(vap(0.5, staleness=3), 2, t_net_xpod=6.0),
+], ids=lambda c: c.model)
+def test_checkpoint_resume_bit_identical(quad8, quad8_rt2, cfg):
+    rt = quad8_rt2
+    full, _ = rt.run_fn(quad8, cfg, 20).run_from(
+        rt.init_state(quad8, cfg, seed=3), cfg)
+    tr1, mid = rt.run_from(quad8, cfg, 8, rt.init_state(quad8, cfg, seed=3))
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "state.npz")
+        ckpt.save_runtime(path, mid)
+        restored = ckpt.restore_runtime(
+            path, rt.init_state(quad8, cfg, seed=0))
+    tr2, _ = rt.run_from(quad8, cfg, 12, restored)
+    for name in TRACE_FIELDS:
+        if name == "x_final":
+            continue
+        a = np.concatenate([np.asarray(getattr(tr1, name)),
+                            np.asarray(getattr(tr2, name))])
+        np.testing.assert_array_equal(
+            a, np.asarray(getattr(full, name)), err_msg=name)
+    np.testing.assert_array_equal(np.asarray(tr2.x_final),
+                                  np.asarray(full.x_final))
+    # and the segmented run equals the plain seed entry point
+    plain = rt.run(quad8, cfg, 20, seed=3)
+    np.testing.assert_array_equal(np.asarray(plain.x_final),
+                                  np.asarray(full.x_final))
+
+
+# ---------------------------------------------------------------------------
+# sweep over the pod axis
+# ---------------------------------------------------------------------------
+def test_sweep_shards_over_pod_axis(quad8):
+    """A hierarchical (config x seed) batch sharded over the "pod" axis of
+    the multi-pod mesh reproduces standalone `simulate` bit for bit, in
+    one compile."""
+    mesh = make_pods_mesh()        # widest mesh for this host
+    configs = [podded(essp(s), 2, **HIER) for s in (1, 2, 4)]
+    res = sweep(quad8, configs, 15, seeds=2, mesh=mesh, mesh_axis="pod")
+    assert res.n_compiles == 1
+    for i in range(len(configs)):
+        for j, sd in enumerate([0, 1]):
+            want = jax.jit(
+                lambda c=res.harmonized[i], s=sd:
+                simulate(quad8, c, 15, seed=s))()
+            assert_bit_identical(res.trace(i, j), want,
+                                 context=f"pod-sweep[{i}] seed={sd}")
+
+
+# ---------------------------------------------------------------------------
+# compile reuse + API guards
+# ---------------------------------------------------------------------------
+def test_tier_knob_changes_reuse_compile(quad8, quad8_rt2):
+    base = podded(essp(2), 2, s_xpod=3, t_net_xpod=6.0)
+    fn = quad8_rt2.run_fn(quad8, base, 10)
+    fn(0, base)                                  # warm
+    n0 = trace_count()
+    W = base.effective_window
+    for cfg in (podded(essp(1), 2, s_xpod=2, t_net_xpod=12.0),
+                podded(essp(3), 2, s_xpod=1, t_net_intra=2.0),
+                podded(essp(2), 2, s_xpod=3).replace(push_prob=0.4)):
+        tr = fn(0, cfg.replace(window=W))
+        assert np.isfinite(np.asarray(tr.loss_ref)).all()
+    assert trace_count() == n0                   # no retrace for knob moves
+
+
+def test_pods_runtime_rejects_mismatched_n_pods(quad8):
+    n = len(jax.devices())
+    if n < 4 or n % 2:
+        pytest.skip("needs a >=4, even device count for a 2-pod mesh")
+    rt = PodsRuntime(default_pods_mesh(8, n_pods=2))
+    with pytest.raises(ValueError):
+        rt.run_fn(quad8, essp(2), 5)             # n_pods=1 config on 2 pods
+
+
+def test_pod_partition_guards():
+    with pytest.raises(ValueError):
+        pod_of(8, 3)                             # 8 workers, 3 pods
+    with pytest.raises(ValueError):
+        ConsistencyConfig(model="essp", n_pods=0)
+    with pytest.raises(ValueError):
+        ConsistencyConfig(model="essp", s_xpod=-1)
+
+
+def test_staleness_bound_matrix_tiers():
+    cfg = podded(essp(2), 2, s_xpod=3)
+    m = np.asarray(staleness_bound_matrix(cfg, jnp.arange(8), 8))
+    same = np.asarray(same_pod_mask(8, 2))
+    assert (m[same] == 2).all() and (m[~same] == 5).all()
+
+
+def test_effective_window_covers_xpod():
+    assert podded(essp(2), 2, s_xpod=3).effective_window == 7
+    assert podded(ssp(1), 4, s_xpod=0).effective_window == 3
+    # family splits on n_pods (a different channel-tier mask)
+    assert podded(essp(2), 2).family != essp(2).family

@@ -27,17 +27,22 @@ def assert_traces_identical(got, want, context=""):
 
 
 def assert_traces_close(got, want, context=""):
-    """Decisions exact, floats to fusion tolerance — the contract for VAP
-    under a sharded sweep, whose shard_map collectives perturb XLA's fusion
-    of the enforcement + ring-view chain by ~1 ulp/clock (same caveat as
-    `psrun.validate`; single-device sweeps stay bit-identical)."""
+    """Decisions exact, floats within a strict ulp budget — the contract
+    for VAP under a *multi-device* sweep: XLA's backend instruction-selects
+    the scan body differently when the enforcement graph is present
+    (replaying the worker update on bit-identical recorded inputs
+    reproduces the plain-jit value, and optimization barriers leave the
+    drift byte-identical — backend codegen, not semantic drift; see
+    `psrun.validate`).  App-dependent: MF/LDA are exactly stable
+    (`test_sweep_vap_mf_bit_identical_sharded`), the quad app drifts
+    ~ulp/clock.  Single-device sweeps stay bit-identical."""
+    from repro.psrun.validate import VAP_ULP_BUDGET, trace_max_ulp
     for name in INT_FIELDS:
         a, b = np.asarray(getattr(got, name)), np.asarray(getattr(want, name))
         np.testing.assert_array_equal(a, b, err_msg=f"{context}:{name}")
-    for name in FLOAT_FIELDS:
-        a, b = np.asarray(getattr(got, name)), np.asarray(getattr(want, name))
-        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6,
-                                   err_msg=f"{context}:{name}")
+    ulps = trace_max_ulp(got, want)   # field-scale ulp (see its docstring)
+    worst = max(ulps.values())
+    assert worst <= VAP_ULP_BUDGET, (context, ulps)
 
 
 FAMILY_CASES = [
@@ -69,6 +74,24 @@ def test_sweep_bit_identical_to_simulate(quad_app, model, configs):
                 simulate(quad_app, c, 25, seed=s))()
             check(res.trace(i, j), want,
                   context=f"{model}[{i}] seed={sd}")
+
+
+def test_sweep_vap_mf_bit_identical_sharded():
+    """The acceptance app (MF) is *bit-identical* under a sharded VAP sweep
+    — the multi-device codegen drift pinned above is quad-app-specific, and
+    this holds the line on the apps the paper's claims are measured on."""
+    from repro.apps.matfact import MFConfig, make_mf_app
+    app = make_mf_app(MFConfig(n_rows=64, n_cols=64, rank=8, true_rank=8,
+                               n_workers=4, batch=64, lr=0.5))
+    configs = [vap(0.5, staleness=4), vap(1.0, staleness=4)]
+    res = sweep(app, configs, 12, seeds=[0, 3])
+    for i in range(len(configs)):
+        for j, sd in enumerate([0, 3]):
+            want = jax.jit(
+                lambda c=res.harmonized[i], s=sd:
+                simulate(app, c, 12, seed=s))()
+            assert_traces_identical(res.trace(i, j), want,
+                                    context=f"mf vap[{i}] seed={sd}")
 
 
 def test_sweep_groups_mixed_families(quad_app):
