@@ -1,4 +1,17 @@
-"""Shared benchmark plumbing: timing + CSV rows."""
+"""Shared benchmark plumbing: timing + CSV rows + JSON artifacts.
+
+All JSON lands in one directory (``--json-dir`` on ``benchmarks.run`` /
+``set_results_dir``, or the ``BENCH_DIR`` env var; default
+``experiments/bench``) — no suite hand-rolls output paths.  Two artifact
+kinds:
+
+- ``save_json(name, payload)``: the suite's full result dict (free-form);
+- ``save_bench_json(name, metrics, claim=...)``: a machine-readable
+  ``BENCH_<name>.json`` with a fixed envelope (bench name, schema version,
+  flat metrics such as clocks-to-loss / floats shipped / wall seconds, and
+  the pass/fail claim) — the per-run perf record CI uploads as an artifact
+  so the trajectory is tracked across scheduled runs.
+"""
 from __future__ import annotations
 
 import json
@@ -9,6 +22,13 @@ import jax
 import numpy as np
 
 RESULTS_DIR = os.environ.get("BENCH_DIR", "experiments/bench")
+
+
+def set_results_dir(path: str) -> None:
+    """Point every suite's JSON output at ``path`` (the ``--json-dir``
+    flag of ``benchmarks.run``)."""
+    global RESULTS_DIR
+    RESULTS_DIR = path
 
 
 def timed(fn, *args, warmup: int = 1, iters: int = 3):
@@ -34,10 +54,38 @@ def save_json(name: str, payload: dict):
         json.dump(payload, f, indent=1, default=float)
 
 
+def save_bench_json(name: str, metrics: dict, claim: dict | None = None):
+    """Write the machine-readable ``BENCH_<name>.json`` perf record."""
+    payload = {"bench": name, "schema": 1,
+               "n_devices": len(jax.devices()),
+               "metrics": metrics}
+    if claim is not None:
+        payload["claim"] = claim
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, f"BENCH_{name}.json"), "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    return payload
+
+
+def wire_bound_time_model(app, t_comp: float, n_pods: int,
+                          wire_factor: float = 3.0):
+    """Bandwidth-faithful `TimeModel` constants shared by the comm-layer
+    benches (pods_bench / comm_bench): toy-scale per-delta bytes (``4d``)
+    and a cross-pod tier provisioned so one dense-eager clock's shipments
+    take ``wire_factor`` x the mean compute — with the default 3x clearly
+    above the straggler tail (worst-of-P lognormal draws reach ~2x), so
+    dense-eager clocks are genuinely wire-bound: the regime the second
+    datacenter tier lives in and update batching targets.  Constants
+    belong in every JSON artifact they condition."""
+    from repro.core.timemodel import TimeModel
+    dense_bytes = 4.0 * max(n_pods - 1, 1) * app.n_workers * app.dim
+    return TimeModel(t_comp=t_comp, bytes_per_channel=4.0 * app.dim,
+                     bandwidth_xpod=dense_bytes / (wire_factor * t_comp))
+
+
 def timed_runtime_run(rt, app, cfg, n_clocks, seed=0):
     """Shared PS-runtime timing loop (psrun_bench / pods_bench):
     ``(first-call seconds incl. compile, steady-state seconds, trace)``."""
-    import time
     fn = rt.run_fn(app, cfg, n_clocks)
     t0 = time.perf_counter()
     tr = jax.block_until_ready(fn(seed, cfg))

@@ -15,16 +15,27 @@ mesh-independent by the oracle contract).
 """
 from __future__ import annotations
 
+import argparse
 import sys
 import time
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json-dir", default=None, metavar="DIR",
+                    help="directory for all JSON artifacts (per-suite "
+                         "results and the machine-readable BENCH_*.json "
+                         "perf records); default: $BENCH_DIR or "
+                         "experiments/bench")
+    args = ap.parse_args(argv)
     t0 = time.time()
-    from . import (autotune_bench, comm_comp, kernels_bench,
-                   lda_convergence, lm_consistency, mf_convergence,
-                   pods_bench, psrun_bench, robustness, staleness_profile,
-                   stragglers, sweep_bench, theory_validation)
+    from . import (autotune_bench, comm_bench, comm_comp, common,
+                   kernels_bench, lda_convergence, lm_consistency,
+                   mf_convergence, pods_bench, psrun_bench, robustness,
+                   staleness_profile, stragglers, sweep_bench,
+                   theory_validation)
+    if args.json_dir:
+        common.set_results_dir(args.json_dir)
 
     claims = {}
     print("name,us_per_call,derived")
@@ -44,6 +55,7 @@ def main() -> None:
     claims["autotune"] = autotune_bench.run()["claim"]
     claims["psrun_eager_beats_lazy"] = psrun_bench.run()["claim"]
     claims["pods_eager_beats_gated"] = pods_bench.run()["claim"]
+    claims["comm_substrate"] = comm_bench.run()["claim"]
     kernels_bench.run()
 
     print("\n=== paper-fidelity claim summary ===")

@@ -1,0 +1,22 @@
+"""comm — the bandwidth-faithful cross-pod communication substrate.
+
+Every cross-pod push/reconcile path routes through this layer when
+``cfg.comm_active`` (see `core.consistency.compressed`): k-clock delta
+aggregation, significance-filtered sparse shipment with an error-feedback
+residual, and int8/bf16 wire quantization — with the bits actually shipped
+recorded per clock (``Trace.ship_floats``) so the "eager wins" claims are
+measured against bytes on the wire, not free deliveries.  The substrate
+math lives in `comm.substrate` and is shared verbatim by the simulator
+(``core.ps.simulate``) and the executable runtimes (``repro.psrun``,
+``repro.pods``) — the oracle contract covers the compressed path too.
+"""
+from ..core.consistency import compressed
+from .substrate import (dense_ship_floats, fold_pods, init_state, pack,
+                        quant_scale, reader_base, row_threshold,
+                        selected_count, ship_now, shipped_end,
+                        shipped_through, wire_floats)
+
+__all__ = ["compressed", "dense_ship_floats", "fold_pods", "init_state",
+           "pack", "quant_scale", "reader_base", "row_threshold",
+           "selected_count", "ship_now", "shipped_end", "shipped_through",
+           "wire_floats"]

@@ -1,0 +1,182 @@
+"""The bandwidth-faithful cross-pod communication substrate.
+
+PR 4's hierarchical PS reconciled pod replicas by all-gathering the full
+dense ``[P, d]`` fresh delta every clock — semantically right, but its
+"eager wins" numbers ignored the bytes on the wire.  This module is the
+layer both engines (``core.ps.simulate`` and the ``psrun``/``pods``
+runtimes) route cross-pod shipment through instead:
+
+- **k-clock delta aggregation** (``cfg.agg_clocks``): each producer
+  accumulates its raw updates locally (``acc``) and ships one *summed*
+  delta every ``agg_clocks`` clocks.  Cross-pod visibility clocks advance
+  only to shipment boundaries (:func:`shipped_end` /
+  :func:`shipped_through`), and the two-tier staleness contract widens to
+  ``s + s_xpod + agg_clocks - 1`` (``core.delays.staleness_bound_matrix``).
+- **significance-filtered sparse shipment** (``cfg.topk_frac``): only the
+  ``ceil(topk_frac * d)`` largest-magnitude coordinates of the aggregated
+  delta cross the wire — the magnitude threshold (:func:`row_threshold`)
+  is VAP's significance criterion reused as a sparsifier.  Dropped mass
+  stays in an **error-feedback residual** (``res``) that joins the next
+  shipment, so nothing is lost, only delayed: ``wire + residual ==
+  acc + res`` exactly in the f32 path (`kernels.ref.delta_pack`).
+- **value quantization** (``cfg.quant``): f32 / bf16 / int8 (per-producer
+  absmax scale, :func:`quant_scale`) wire formats; the dequantization
+  error also lands in the residual.
+
+State layout (both engines; the runtime shards the ``d`` axis over
+"model" exactly like the raw ring):
+
+- ``acc [P, d]``    raw updates accumulated since the last shipment;
+- ``res [P, d]``    error-feedback residual (unshipped mass);
+- ``xring [W, P, d]`` the *wire ring*: slot ``c % W`` holds producer
+  shipments of clock ``c`` (zeros on non-boundary clocks).  Cross-pod
+  readers materialize their view from this ring; intra-pod readers keep
+  reading the raw ring;
+- ``base_pod [G, d]`` / ``xbase_pod [G, d]``: per-producer-pod folds of
+  recycled raw / wire ring slots.  A reader in pod ``g`` sees ``x0 +
+  base_pod[g] + Σ_{g' != g} xbase_pod[g']`` (:func:`reader_base`) — its
+  own pod's updates exactly, every other pod's through the compressed
+  stream.
+
+Bytes accounting: every shipment's bits-weighted float count
+(:func:`wire_floats` — quantized values plus 32-bit indices when sparse)
+is recorded per clock in ``Trace.ship_floats``, which
+``pods.reconcile.reconcile_stats`` turns into measured floats-on-wire and
+`core.timemodel.TimeModel` turns into modeled seconds over the per-tier
+bandwidth.
+
+Everything here is traced jnp over the *data* knobs (``agg_clocks``,
+``topk_frac`` batch in sweeps like any other knob); only ``quant`` and
+the substrate's presence (``cfg.comm_active``) are static.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..core.consistency import QUANT_BITS
+from ..kernels import ops
+
+# --------------------------------------------------------------- schedule
+
+
+def ship_now(c, agg_clocks):
+    """Does a shipment happen at the END of clock ``c``?  (bool, traced)"""
+    return jnp.mod(c + 1, agg_clocks) == 0
+
+
+def shipped_end(c, agg_clocks):
+    """Latest shipped producer clock after the end of clock ``c`` — the
+    cross-pod delivery target (== ``c`` when ``agg_clocks == 1``)."""
+    return ((c + 1) // agg_clocks) * agg_clocks - 1
+
+
+def shipped_through(c, agg_clocks):
+    """Latest shipped producer clock at READ time of clock ``c`` — the
+    cross-pod forced-refresh target (== ``c - 1`` when ``agg_clocks ==
+    1``).  Always ``>= c - agg_clocks``, which is what keeps the widened
+    bound ``s + s_xpod + agg_clocks - 1`` satisfiable."""
+    return (c // agg_clocks) * agg_clocks - 1
+
+
+# ------------------------------------------------------------ compression
+
+
+def row_threshold(delta, topk_frac):
+    """Per-row magnitude threshold selecting the top ``ceil(topk_frac*d)``
+    coordinates of each ``[P, d]`` row (ties may admit more — bytes
+    accounting counts the actual selection).  ``topk_frac`` may be traced.
+
+    Both engines must call this on the *full* ``d``-coordinate rows (the
+    runtime all-gathers its model shards first) so the threshold — and
+    with it every shipped bit — is bit-identical across engines."""
+    P, d = delta.shape
+    mag = jnp.abs(delta)
+    k = jnp.clip(jnp.ceil(topk_frac * d).astype(jnp.int32), 1, d)
+    srt = jnp.sort(mag, axis=-1)                       # ascending
+    idx = jnp.broadcast_to(jnp.asarray(d - k, jnp.int32), (P, 1))
+    return jnp.take_along_axis(srt, idx, axis=-1)[:, 0]
+
+
+def quant_scale(delta, quant: str):
+    """Per-row int8 dequant scale (absmax / 127); ones for f32/bf16."""
+    P = delta.shape[0]
+    if quant != "int8":
+        return jnp.ones((P,), jnp.float32)
+    absmax = jnp.max(jnp.abs(delta), axis=-1)
+    return jnp.maximum(absmax / 127.0, 1e-12).astype(jnp.float32)
+
+
+def pack(delta, topk_frac, quant: str):
+    """One-stop shipment pack on full rows: ``(wire, residual, nnz)``.
+
+    ``nnz [P]`` is the per-producer count of selected coordinates (f32).
+    The runtimes call the pieces separately — thresholds/counts on the
+    gathered full rows, `ops.delta_pack` on the local shard — which lands
+    on exactly the same floats (the pack is elementwise)."""
+    thresh = row_threshold(delta, topk_frac)
+    scale = quant_scale(delta, quant)
+    wire, residual = ops.delta_pack(delta, thresh, scale, quant)
+    nnz = selected_count(delta, thresh)
+    return wire, residual, nnz
+
+
+def selected_count(delta, thresh):
+    """Per-row selected-coordinate count [P] (f32), from full rows."""
+    return jnp.sum(jnp.abs(delta) >= thresh[:, None], axis=-1,
+                   dtype=jnp.int32).astype(jnp.float32)
+
+
+def wire_floats(nnz, d: int, quant: str):
+    """Bits-weighted float32-equivalents on the wire for one shipment.
+
+    ``nnz`` quantized values at ``QUANT_BITS[quant]`` bits each, plus one
+    32-bit coordinate index per value whenever the shipment is actually
+    sparse (a dense shipment needs no indices)."""
+    vals = nnz * (QUANT_BITS[quant] / 32.0)
+    idx = jnp.where(nnz < d, nnz, 0.0)
+    return vals + idx
+
+
+def dense_ship_floats(model: str, P: int, d: int):
+    """Per-clock ``Trace.ship_floats`` rows of the *dense* (substrate-off)
+    path: every push-model producer ships its full ``d``-float delta each
+    clock; pull-based SSP ships nothing (its reconciliation cost is the
+    forced pulls, accounted separately)."""
+    if model == "ssp":
+        return jnp.zeros((P,), jnp.float32)
+    return jnp.full((P,), float(d), jnp.float32)
+
+
+# ------------------------------------------------------------ state/views
+
+
+def init_state(W: int, P: int, d: int, n_pods: int) -> dict:
+    """Zero comm state (see module doc for the layout)."""
+    z = jnp.zeros
+    return dict(acc=z((P, d), jnp.float32), res=z((P, d), jnp.float32),
+                xring=z((W, P, d), jnp.float32),
+                base_pod=z((n_pods, d), jnp.float32),
+                xbase_pod=z((n_pods, d), jnp.float32))
+
+
+def reader_base(x0, base_pod, xbase_pod, reader_pods):
+    """Per-reader folded base ``x0 + base_pod[own] + Σ_{other} xbase_pod``.
+
+    ``x0 [d]``, ``base_pod``/``xbase_pod [G, d]``, ``reader_pods [Pl]``
+    (pod id of each reader row).  The other-pod sum is a masked einsum
+    (never a subtraction from the total), so both engines produce the
+    same float association."""
+    G = base_pod.shape[0]
+    own = base_pod[reader_pods]                          # [Pl, d]
+    other = (jnp.arange(G)[:, None] != reader_pods[None, :]
+             ).astype(jnp.float32)                       # [G, Pl]
+    xother = jnp.einsum("gp,gd->pd", other, xbase_pod)
+    return (x0[None, :] + own) + xother
+
+
+def fold_pods(ring_slot, n_pods: int):
+    """Fold one recycled ring slot ``[P, d]`` into per-producer-pod sums
+    ``[G, d]`` (contiguous pod blocks, same reduction order in both
+    engines)."""
+    P, d = ring_slot.shape
+    return ring_slot.reshape(n_pods, P // n_pods, d).sum(axis=1)

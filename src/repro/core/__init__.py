@@ -1,13 +1,13 @@
 """The paper's contribution: PS consistency models + ESSPTable simulator."""
 from .consistency import (ConsistencyConfig, bsp, ssp, essp, vap, podded,
-                          MODELS)
+                          compressed, MODELS)
 from .ps import PSApp, Trace, simulate, simulate_jit
 from .sweep import SweepResult, stack_configs, sweep
 from .timemodel import TimeModel
 from . import staleness, theory, timemodel, tune
 
 __all__ = ["ConsistencyConfig", "bsp", "ssp", "essp", "vap", "podded",
-           "MODELS",
+           "compressed", "MODELS",
            "PSApp", "Trace", "simulate", "simulate_jit",
            "SweepResult", "stack_configs", "sweep", "TimeModel",
            "staleness", "theory", "timemodel", "tune"]

@@ -56,10 +56,14 @@ MODELS = ("bsp", "ssp", "essp", "async", "vap")
 # Numeric knobs: pytree data leaves, traceable/batchable (see module doc).
 DATA_FIELDS = ("staleness", "v0", "push_prob", "straggler_prob",
                "straggler_workers", "straggler_rate",
-               "s_xpod", "t_net_intra", "t_net_xpod")
+               "s_xpod", "t_net_intra", "t_net_xpod",
+               "agg_clocks", "topk_frac")
 # Structural knobs: static pytree metadata, baked into the compiled program.
 META_FIELDS = ("model", "read_my_writes", "window", "max_extra_delay",
-               "n_pods")
+               "n_pods", "quant", "wire")
+
+# Wire-value formats of the comm substrate (`repro.comm`), in bits.
+QUANT_BITS = {"f32": 32, "bf16": 16, "int8": 8}
 
 # Physically meaningful ranges of the numeric knobs ((lo, hi), None = open).
 # The auto-tuner (`core.tune`) clips its coarse→fine refinement proposals to
@@ -74,9 +78,11 @@ KNOB_BOUNDS = {
     "s_xpod": (0, None),
     "t_net_intra": (1.0, None),
     "t_net_xpod": (1.0, None),
+    "agg_clocks": (1, None),
+    "topk_frac": (0.01, 1.0),
 }
 # Knobs that live on an integer lattice (refinement rounds to these).
-INT_KNOBS = ("staleness", "straggler_workers", "s_xpod")
+INT_KNOBS = ("staleness", "straggler_workers", "s_xpod", "agg_clocks")
 
 
 def _concrete(x) -> bool:
@@ -129,6 +135,25 @@ class ConsistencyConfig:
       t_net_xpod: mean delivery delay of the cross-pod tier in clocks —
         typically an order of magnitude above ``t_net_intra`` (the
         datacenter-scale second tier).
+      agg_clocks: k-clock delta aggregation of the comm substrate
+        (`repro.comm`): cross-pod deltas accumulate locally and ship every
+        ``agg_clocks`` clocks as one summed delta.  Content on a cross-pod
+        channel may therefore lag up to ``agg_clocks - 1`` extra clocks —
+        the two-tier staleness contract widens to ``s + s_xpod +
+        agg_clocks - 1`` (``core.delays.staleness_bound_matrix``).  1 (the
+        default) ships every clock.
+      topk_frac: sparse-shipment fraction of the comm substrate: only the
+        ``ceil(topk_frac * d)`` largest-magnitude coordinates of an
+        aggregated delta cross the pod boundary; the rest stay in an
+        error-feedback residual that re-ships later (``repro.comm``).
+        1.0 (the default) ships dense.
+      quant: wire value format of the comm substrate: ``"f32"`` (default),
+        ``"bf16"``, or ``"int8"`` (per-producer absmax scaling).  Static —
+        it selects the pack/unpack code in the compiled program.
+      wire: static override of :attr:`comm_active` (route cross-pod
+        shipment through the compressed comm substrate).  ``None`` (the
+        default) derives it from the knob values; set it explicitly when
+        sweeping ``agg_clocks``/``topk_frac`` as traced values.
     """
 
     model: str = "essp"
@@ -145,6 +170,10 @@ class ConsistencyConfig:
     s_xpod: int = 0
     t_net_intra: float = 1.0
     t_net_xpod: float = 1.0
+    agg_clocks: int = 1
+    topk_frac: float = 1.0
+    quant: str = "f32"
+    wire: bool | None = None
 
     def __post_init__(self):
         if self.model not in MODELS:
@@ -158,6 +187,44 @@ class ConsistencyConfig:
             raise ValueError("n_pods must be >= 1")
         if _concrete(self.s_xpod) and self.s_xpod < 0:
             raise ValueError("s_xpod must be >= 0")
+        if self.quant not in QUANT_BITS:
+            raise ValueError(f"unknown quant {self.quant!r}; expected one "
+                             f"of {tuple(QUANT_BITS)}")
+        if _concrete(self.agg_clocks) and self.agg_clocks < 1:
+            raise ValueError("agg_clocks must be >= 1")
+        if _concrete(self.topk_frac) and not (0.0 < self.topk_frac <= 1.0):
+            raise ValueError("topk_frac must be in (0, 1]")
+        if self.comm_active:
+            if self.model in ("bsp", "vap"):
+                raise ValueError(
+                    f"the comm substrate does not apply to {self.model!r}: "
+                    "bsp's barrier is a full-state sync and vap's value "
+                    "bound needs a synchronous full-precision channel (the "
+                    "contrast the paper draws) — use ssp/essp/async")
+            if self.n_pods < 2:
+                raise ValueError("the comm substrate compresses the "
+                                 "cross-pod wire; it requires n_pods >= 2")
+
+    @property
+    def comm_active(self) -> bool:
+        """Static: does this config route cross-pod shipment through the
+        compressed comm substrate (`repro.comm`)?
+
+        ``wire`` overrides when set; otherwise active iff any comm knob is
+        non-default.  When ``agg_clocks``/``topk_frac`` are traced (the
+        config crossed a jit boundary as an argument) and ``wire`` is
+        unset, the substrate stays OFF — the code path must be static, and
+        off is the only default that keeps pre-substrate callers
+        bit-identical.  Set ``wire=True`` (``consistency.compressed`` does)
+        to engage it; ``core.sweep.stack_configs`` pins ``wire`` from the
+        concrete per-config values so sweeps are unaffected."""
+        if self.wire is not None:
+            return bool(self.wire)
+        if self.quant != "f32":
+            return True
+        if _concrete(self.agg_clocks) and _concrete(self.topk_frac):
+            return self.agg_clocks > 1 or self.topk_frac < 1.0
+        return False
 
     @property
     def effective_window(self) -> int:
@@ -168,11 +235,21 @@ class ConsistencyConfig:
             raise ValueError(
                 "effective_window needs concrete staleness/s_xpod; set "
                 "`window` explicitly when sweeping them as traced values")
+        agg = 0
+        if self.comm_active:
+            # cross-pod content lags up to agg_clocks - 1 extra clocks
+            # behind the shipment schedule; the ring must keep it visible.
+            if not _concrete(self.agg_clocks):
+                raise ValueError(
+                    "effective_window needs a concrete agg_clocks; set "
+                    "`window` explicitly when sweeping it as a traced value")
+            agg = self.agg_clocks - 1
         if self.model == "bsp":
             return 2
         if self.model in ("async", "vap"):
-            return self.staleness + self.s_xpod + self.max_extra_delay + 2
-        return self.staleness + self.s_xpod + 2
+            return (self.staleness + self.s_xpod + agg
+                    + self.max_extra_delay + 2)
+        return self.staleness + self.s_xpod + agg + 2
 
     @property
     def family(self) -> tuple:
@@ -186,9 +263,14 @@ class ConsistencyConfig:
         part of the simulated physics — so it joins the key and configs
         with different windows compile separately.  ``n_pods`` selects the
         pod partition (a different channel-tier mask), so it is part of the
-        family too."""
+        family too.  ``comm_active`` selects the comm-substrate code path
+        (and ``quant`` the pack/unpack code within it), so both join the
+        key."""
         key = (self.model, bool(self.read_my_writes),
-               int(self.max_extra_delay), int(self.n_pods))
+               int(self.max_extra_delay), int(self.n_pods),
+               self.comm_active)
+        if self.comm_active:
+            key += (self.quant,)
         if self.model in ("async", "vap"):
             key += (self.effective_window,)
         return key
@@ -233,3 +315,22 @@ def podded(cfg: ConsistencyConfig, n_pods: int, s_xpod: int = 0,
     if t_net_intra is not None:
         kw["t_net_intra"] = t_net_intra
     return cfg.replace(**kw)
+
+
+def compressed(cfg: ConsistencyConfig, agg_clocks: int = 1,
+               topk_frac: float = 1.0,
+               quant: str = "f32") -> ConsistencyConfig:
+    """Route ``cfg``'s cross-pod shipment through the comm substrate.
+
+    ``agg_clocks`` batches cross-pod deltas (one summed shipment every k
+    clocks; the staleness contract widens by ``agg_clocks - 1``),
+    ``topk_frac`` ships only the largest-magnitude fraction of each delta
+    (error-feedback residual re-ships the rest), ``quant`` picks the wire
+    value format.  Requires a hierarchical config (``n_pods >= 2``) with a
+    push/reconcile model (ssp/essp/async).  The neutral knobs
+    (``agg_clocks=1, topk_frac=1.0, quant="f32"``) ship the exact dense
+    delta through the substrate — semantically identical to the plain
+    hierarchical path (float association differs; see `repro.comm`).
+    """
+    return cfg.replace(agg_clocks=agg_clocks, topk_frac=topk_frac,
+                       quant=quant, wire=True)

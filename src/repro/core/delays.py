@@ -59,14 +59,22 @@ def staleness_bound_matrix(cfg: ConsistencyConfig, reader_ids,
     """Per-channel SSP/ESSP staleness bound [readers, P(producer)].
 
     ``cfg.staleness`` on intra-pod channels, ``+ s_xpod`` across pods — the
-    two-tier bounded-staleness contract.  ``reader_ids`` selects the reader
-    rows (all of them in the simulator, the shard-local rows in the
+    two-tier bounded-staleness contract.  Under the comm substrate
+    (``cfg.comm_active``) k-clock delta aggregation holds cross-pod content
+    back up to ``agg_clocks - 1`` extra clocks, so the cross-pod bound
+    widens to ``s + s_xpod + agg_clocks - 1`` (asserted by
+    ``psrun.validate.check_staleness_bound``).  ``reader_ids`` selects the
+    reader rows (all of them in the simulator, the shard-local rows in the
     runtimes), so the same helper drives both engines.  Integer ops only:
-    bit-identical to the flat bound when ``n_pods == 1``.
+    bit-identical to the flat bound when ``n_pods == 1`` (and to the PR 4
+    two-tier bound when the substrate is off or ``agg_clocks == 1``).
     """
     pods = pod_of(P, cfg.n_pods)
     same = pods[reader_ids][:, None] == pods[None, :]
-    return jnp.where(same, cfg.staleness, cfg.staleness + cfg.s_xpod)
+    xpod_bound = cfg.staleness + cfg.s_xpod
+    if cfg.comm_active:
+        xpod_bound = xpod_bound + (cfg.agg_clocks - 1)
+    return jnp.where(same, cfg.staleness, xpod_bound)
 
 
 def worker_rates(cfg: ConsistencyConfig, P: int) -> jax.Array:

@@ -58,6 +58,19 @@ tiers every clock).  The executable counterpart is ``repro.pods``
 (``PodsRuntime`` on a 3-D ``("pod","data","model")`` mesh), cross-validated
 against this mode exactly like ``repro.psrun`` is against the flat mode.
 
+With ``cfg.comm_active`` (the comm substrate, `repro.comm`) the cross-pod
+wire stops being free: each producer accumulates raw updates and ships one
+aggregated, top-k-sparsified, quantized delta every ``agg_clocks`` clocks
+(error-feedback residual re-ships dropped mass); cross-pod readers
+materialize their views from the shipped *wire ring* while intra-pod
+readers keep reading raw; cross-pod visibility advances only to shipment
+boundaries (bound widened to ``s + s_xpod + agg_clocks - 1``); and
+``Trace.ship_floats`` records the bits-weighted floats each shipment put
+on the wire.  The substrate is off by default — the dense path is
+byte-identical to the pre-substrate simulator — and covered by the same
+oracle contract (ssp/essp/async; bsp's barrier and vap's synchronous value
+bound don't route through it).
+
 Everything (drift of staleness, forced synchronous fetches, update
 magnitudes, losses, per-worker views) is recorded per clock into a `Trace`.
 
@@ -106,10 +119,12 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
+from ..comm import substrate as comm
 from ..kernels import ops
 from ..kernels.ref import RING_EMPTY, RING_INVALID
 from .consistency import ConsistencyConfig
-from .delays import delivery_matrix, staleness_bound_matrix
+from .delays import delivery_matrix, pod_of, same_pod_mask, \
+    staleness_bound_matrix
 
 
 @dataclass
@@ -151,6 +166,12 @@ class Trace:
     delivered: jax.Array       # [T, P, P] background deliveries this clock
     u_l2: jax.Array            # [T, P] l2 norm of each worker's update
     intransit_inf: jax.Array   # [T] max inf-norm of in-transit aggregates
+    ship_floats: jax.Array     # [T, P] bits-weighted floats each producer
+    #                            put on the cross-pod wire this clock
+    #                            (comm substrate: quantized values + sparse
+    #                            indices at shipment clocks, 0 otherwise;
+    #                            dense path: d for push models, 0 for
+    #                            pull-based ssp) — see repro.comm
     views0: jax.Array | None   # [T, d] worker-0 views (if record_views)
     x_final: jax.Array         # [d] final reference parameters
     locals_final: Any          # final worker-local state
@@ -193,6 +214,12 @@ def simulate(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
     P, d = app.n_workers, app.dim
     W = cfg.effective_window
     f32 = jnp.float32
+    # Static: route cross-pod shipment through the comm substrate
+    # (k-clock aggregation + sparse/quantized wire with error feedback —
+    # see repro.comm).  Off (the default) is byte-identical to the
+    # pre-substrate simulator.
+    wired = cfg.comm_active
+    G = cfg.n_pods
 
     base0 = app.x0.astype(f32)
     uring0 = jnp.zeros((W, P, d), f32)
@@ -200,16 +227,25 @@ def simulate(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
     cview0 = jnp.full((P, P), -1, jnp.int32)      # everyone saw "clock -1"
     rng0 = jax.random.PRNGKey(seed)
     # Two-tier staleness bound (hierarchical mode): `s` on intra-pod
-    # channels, `s + s_xpod` across pods.  With n_pods=1 every channel is
-    # intra-pod and this is exactly `s` (integer ops — bit-identical).
+    # channels, `s + s_xpod` across pods (+ `agg_clocks - 1` under the
+    # substrate).  With n_pods=1 every channel is intra-pod and this is
+    # exactly `s` (integer ops — bit-identical).
     s_eff = staleness_bound_matrix(cfg, jnp.arange(P), P)
+    if wired:
+        in_pod = same_pod_mask(P, G)                  # [P(r), P(q)]
+        reader_pods = pod_of(P, G)                    # [P]
+        zeros_d = jnp.zeros((d,), f32)
+        comm0 = comm.init_state(W, P, d, G)
 
     vmapped_update = jax.vmap(app.worker_update,
                               in_axes=(0, 0, 0, None, 0))
     worker_ids = jnp.arange(P, dtype=jnp.int32)
 
     def step(carry, c):
-        base, uring, uclock, cview, local, rng = carry
+        if wired:
+            (base, uring, uclock, cview, local, rng, cst) = carry
+        else:
+            base, uring, uclock, cview, local, rng = carry
         rng, k_upd, k_net = jax.random.split(rng, 3)
 
         # Per-producer suffix-aggregate inf-norms of the newest k clocks
@@ -223,13 +259,21 @@ def simulate(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
             cview = jnp.full_like(cview, c - 1)
         elif cfg.model in ("ssp", "essp"):
             # SSP condition: a read at clock c must include all updates of
-            # clocks <= c - s_eff - 1 (s intra-pod, s + s_xpod cross-pod).
-            # Lazy SSP refreshes the whole channel from the server (which
-            # holds everything through c-1) exactly when the bound trips —
-            # on a cross-pod channel that is the clock-gated reconciliation
-            # pull; ESSP rarely trips thanks to (two-tier) pushes.
+            # clocks <= c - s_eff - 1 (s intra-pod, s + s_xpod cross-pod,
+            # + agg_clocks - 1 under the comm substrate).  Lazy SSP
+            # refreshes the whole channel from the server (which holds
+            # everything through c-1) exactly when the bound trips — on a
+            # cross-pod channel that is the clock-gated reconciliation
+            # pull; ESSP rarely trips thanks to (two-tier) pushes.  Under
+            # the substrate a cross-pod refresh can only fetch what has
+            # *shipped* (through the last aggregation boundary).
             forced = cview < (c - s_eff - 1)
-            cview = jnp.where(forced, c - 1, cview)
+            if wired:
+                tgt = jnp.where(in_pod, c - 1,
+                                comm.shipped_through(c, cfg.agg_clocks))
+                cview = jnp.where(forced, tgt, cview)
+            else:
+                cview = jnp.where(forced, c - 1, cview)
         elif cfg.model == "vap":
             cview, forced = enforce_vap(cfg, c, cview, norms, W)
         else:  # async
@@ -262,7 +306,21 @@ def simulate(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
         # bounded to a few ulp/value and is app-dependent (MF/LDA are
         # exactly stable).  `tests/test_sweep.py` pins it to a strict ulp
         # budget and asserts MF bit-identity.
-        views = ops.ring_view(base, uring, uclock, cview)
+        if wired:
+            # Split the view per channel tier: intra-pod producers read
+            # raw, cross-pod producers read the shipped (compressed) wire
+            # ring; the folded base is assembled per reader pod
+            # (comm.reader_base).  Masked-out channels see nothing
+            # (cview pinned below every stored clock).
+            cv_intra = jnp.where(in_pod, cview, RING_EMPTY)
+            cv_xpod = jnp.where(in_pod, RING_EMPTY, cview)
+            rb = comm.reader_base(base, cst["base_pod"], cst["xbase_pod"],
+                                  reader_pods)
+            views = (rb + ops.ring_view(zeros_d, uring, uclock, cv_intra)
+                     + ops.ring_view(zeros_d, cst["xring"], uclock,
+                                     cv_xpod))
+        else:
+            views = ops.ring_view(base, uring, uclock, cview)
 
         # --- 3. worker computation ----------------------------------------
         upd_keys = jax.random.split(k_upd, P)
@@ -272,9 +330,39 @@ def simulate(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
         # --- 4. commit to server: fold oldest slot, write newest ----------
         slot = jnp.mod(c, W)
         old_valid = uclock[slot] > RING_INVALID
-        base = base + jnp.where(old_valid, 1.0, 0.0) * jnp.sum(uring[slot], axis=0)
+        if wired:
+            # recycled slots fold per producer pod: raw into base_pod,
+            # wire into xbase_pod (base itself stays x0 — reader bases are
+            # assembled per pod in comm.reader_base).
+            w_old = jnp.where(old_valid, 1.0, 0.0)
+            cst = dict(cst,
+                       base_pod=cst["base_pod"]
+                       + w_old * comm.fold_pods(uring[slot], G),
+                       xbase_pod=cst["xbase_pod"]
+                       + w_old * comm.fold_pods(cst["xring"][slot], G))
+        else:
+            base = base + jnp.where(old_valid, 1.0, 0.0) * jnp.sum(uring[slot], axis=0)
         uring = uring.at[slot].set(u)
         uclock = uclock.at[slot].set(c)
+        if wired:
+            # --- 4b. comm substrate: accumulate, and ship on boundary ----
+            acc = cst["acc"] + u
+            delta = acc + cst["res"]                    # [P, d]
+            thresh = comm.row_threshold(delta, cfg.topk_frac)
+            scale = comm.quant_scale(delta, cfg.quant)
+            wire_u, resid = ops.delta_pack(delta, thresh, scale, cfg.quant)
+            nnz = comm.selected_count(delta, thresh)
+            ship = comm.ship_now(c, cfg.agg_clocks)     # traced bool
+            wire_u = jnp.where(ship, wire_u, jnp.zeros_like(wire_u))
+            cst = dict(cst,
+                       acc=jnp.where(ship, jnp.zeros_like(acc), acc),
+                       res=jnp.where(ship, resid, cst["res"]),
+                       xring=cst["xring"].at[slot].set(wire_u))
+            ship_floats = jnp.where(
+                ship, comm.wire_floats(nnz, d, cfg.quant),
+                jnp.zeros((P,), f32))
+        else:
+            ship_floats = comm.dense_ship_floats(cfg.model, P, d)
 
         # --- 5. end-of-clock delivery (affects reads at c+1) --------------
         if cfg.model == "bsp":
@@ -284,32 +372,53 @@ def simulate(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
             delivered = jnp.zeros((P, P), bool)   # pull-based: no pushes
         else:  # essp / async / vap: delay-driven eager delivery
             delivered = _delivery(k_net, cfg, P)
-            cview = jnp.where(delivered, c, cview)
+            if wired:
+                # a cross-pod delivery carries the latest *shipment*, so
+                # visibility advances only to the aggregation boundary
+                # (== c when agg_clocks == 1).
+                tgt = jnp.where(in_pod, c,
+                                comm.shipped_end(c, cfg.agg_clocks))
+                cview = jnp.where(delivered, jnp.maximum(cview, tgt),
+                                  cview)
+            else:
+                cview = jnp.where(delivered, c, cview)
 
         # --- 6. record ------------------------------------------------------
-        x_ref = base + jnp.sum(uring * (uclock[:, None, None] > RING_INVALID),
-                               axis=(0, 1))
+        if wired:
+            x_ref = (base + jnp.sum(cst["base_pod"], axis=0)) + jnp.sum(
+                uring * (uclock[:, None, None] > RING_INVALID), axis=(0, 1))
+        else:
+            x_ref = base + jnp.sum(
+                uring * (uclock[:, None, None] > RING_INVALID), axis=(0, 1))
         loss_ref = app.loss(x_ref, local)
         loss_view = app.loss(views[0], local)
         out = dict(loss_ref=loss_ref, loss_view=loss_view,
                    staleness=staleness, forced=forced, delivered=delivered,
                    u_l2=jnp.linalg.norm(u, axis=-1),
-                   intransit_inf=intransit_inf)
+                   intransit_inf=intransit_inf, ship_floats=ship_floats)
         if record_views:
             out["views0"] = views[0]
+        if wired:
+            return (base, uring, uclock, cview, local, rng, cst), out
         return (base, uring, uclock, cview, local, rng), out
 
-    carry0 = (base0, uring0, uclock0, cview0, app.local0, rng0)
-    (base, uring, uclock, _, local, _), ys = jax.lax.scan(
-        step, carry0, jnp.arange(n_clocks, dtype=jnp.int32))
-
-    x_final = base + jnp.sum(uring * (uclock[:, None, None] > RING_INVALID),
-                             axis=(0, 1))
+    if wired:
+        carry0 = (base0, uring0, uclock0, cview0, app.local0, rng0, comm0)
+        (base, uring, uclock, _, local, _, cst), ys = jax.lax.scan(
+            step, carry0, jnp.arange(n_clocks, dtype=jnp.int32))
+        x_final = (base + jnp.sum(cst["base_pod"], axis=0)) + jnp.sum(
+            uring * (uclock[:, None, None] > RING_INVALID), axis=(0, 1))
+    else:
+        carry0 = (base0, uring0, uclock0, cview0, app.local0, rng0)
+        (base, uring, uclock, _, local, _), ys = jax.lax.scan(
+            step, carry0, jnp.arange(n_clocks, dtype=jnp.int32))
+        x_final = base + jnp.sum(
+            uring * (uclock[:, None, None] > RING_INVALID), axis=(0, 1))
     return Trace(
         loss_ref=ys["loss_ref"], loss_view=ys["loss_view"],
         staleness=ys["staleness"], forced=ys["forced"],
         delivered=ys["delivered"], u_l2=ys["u_l2"],
-        intransit_inf=ys["intransit_inf"],
+        intransit_inf=ys["intransit_inf"], ship_floats=ys["ship_floats"],
         views0=ys.get("views0"), x_final=x_final, locals_final=local)
 
 

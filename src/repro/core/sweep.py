@@ -64,7 +64,7 @@ from .ps import PSApp, Trace, simulate
 _TRACE_COUNTER = {"count": 0}
 
 _KNOB_DTYPES = {"staleness": jnp.int32, "straggler_workers": jnp.int32,
-                "s_xpod": jnp.int32}
+                "s_xpod": jnp.int32, "agg_clocks": jnp.int32}
 
 
 def trace_count() -> int:
@@ -89,9 +89,13 @@ def stack_configs(configs: Sequence[ConsistencyConfig],
         for name in DATA_FIELDS
     }
     c0 = configs[0]
+    # Pin the comm-substrate decision statically: after stacking, the knob
+    # leaves are arrays (comm_active could no longer derive it from
+    # values), and the family guarantees all members share it.
     return ConsistencyConfig(
         model=c0.model, read_my_writes=c0.read_my_writes, window=window,
-        max_extra_delay=c0.max_extra_delay, n_pods=c0.n_pods, **knobs)
+        max_extra_delay=c0.max_extra_delay, n_pods=c0.n_pods,
+        quant=c0.quant, wire=c0.comm_active, **knobs)
 
 
 @dataclass

@@ -33,6 +33,28 @@ straggler ablation's time axis).  Draws are seeded via
 ``jax.random.fold_in`` over a caller-supplied ``fold`` (config index, seed,
 ...), so different sweep points get independent straggler realizations
 while staying deterministic.
+
+Bandwidth-faithful cross-pod tier
+---------------------------------
+Passing the run's ``cfg`` (hierarchical, ``n_pods > 1``) switches the
+model to *bytes-on-wire* accounting for the second network tier:
+``t_net_xpod`` stops being only a delivery-probability knob and the wall
+clock charges **seconds per float over the per-tier bandwidth** —
+
+- background shipments (eager reconciliation): each clock's cross-pod
+  bytes are ``4 x (n_pods - 1) x Σ_q Trace.ship_floats[t, q]`` (what the
+  comm substrate actually put on the wire after aggregation / top-k /
+  quantization; a dense push run records ``d`` per producer per clock),
+  moved at ``bandwidth_xpod``.  Shipments overlap compute (ESSPTable's
+  background push), so the clock costs ``max(compute path, wire time)`` —
+  a dense-eager run on a thin cross-pod pipe becomes *bandwidth-bound*,
+  which is exactly the effect PR 4's free-delivery model hid;
+- forced fetches split by tier: intra-pod refreshes pay
+  ``rtt + bytes_per_channel/bandwidth`` as before, cross-pod clock-gated
+  pulls pay ``rtt + bytes_per_channel/bandwidth_xpod``.
+
+Without ``cfg`` (or with ``n_pods == 1``) the accounting is unchanged —
+every pre-existing caller gets identical numbers.
 """
 from __future__ import annotations
 
@@ -42,6 +64,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .delays import same_pod_mask
 from .ps import Trace
 
 
@@ -50,9 +73,13 @@ class TimeModel:
     t_comp: float = 0.050          # mean compute seconds per clock per worker
     straggler_sigma: float = 0.3   # lognormal sigma of compute time
     rtt: float = 0.0005            # synchronous fetch round-trip (s)
-    bandwidth: float = 100e6       # bytes/s (1 GbE)
+    bandwidth: float = 100e6       # bytes/s (1 GbE, intra-pod tier)
     bytes_per_channel: float = 4e6 # bytes of one producer's row set
     barrier_overhead: float = 0.002
+    bandwidth_xpod: float = 10e6   # bytes/s of the cross-pod tier (~10x
+    #                                thinner: the datacenter second tier);
+    #                                used only when a hierarchical cfg is
+    #                                passed (see module doc)
     seed: int = 0
 
     # ------------------------------------------------------------------ rng
@@ -75,14 +102,35 @@ class TimeModel:
         return self.t_comp * jnp.exp(sig * z - 0.5 * sig * sig)
 
     # ------------------------------------------------------------- traced
-    def per_clock(self, trace: Trace, model: str, fold=()):
-        """Returns (wall[T], comp[T], comm[T]) per-clock seconds (traced)."""
+    def per_clock(self, trace: Trace, model: str, fold=(), cfg=None):
+        """Returns (wall[T], comp[T], comm[T]) per-clock seconds (traced).
+
+        ``cfg`` (a hierarchical `ConsistencyConfig`, ``n_pods > 1``)
+        switches on the bandwidth-faithful cross-pod tier: forced fetches
+        split by tier and the clock is floored by the time the clock's
+        cross-pod shipments (``Trace.ship_floats``) need on
+        ``bandwidth_xpod`` (see module doc).  Without it the accounting
+        is exactly the historical single-tier model.
+        """
         forced = jnp.asarray(trace.forced)           # [T, P, P] sync fetches
         T, P, _ = forced.shape
         comp = self.comp_draws((T, P), fold)         # [T, P]
 
         xfer = self.bytes_per_channel / self.bandwidth
-        sync = forced.astype(jnp.float32).sum(axis=2) * (self.rtt + xfer)
+        tiered = cfg is not None and cfg.n_pods > 1
+        if tiered:
+            xfer_x = self.bytes_per_channel / self.bandwidth_xpod
+            same = same_pod_mask(P, cfg.n_pods)[None, :, :]
+            f = forced.astype(jnp.float32)
+            sync = ((f * same).sum(axis=2) * (self.rtt + xfer)
+                    + (f * ~same).sum(axis=2) * (self.rtt + xfer_x))
+            # background shipments: bytes each producer put on the wire,
+            # to every other pod's replica, through the thin tier
+            wire = (4.0 * (cfg.n_pods - 1)
+                    * jnp.asarray(trace.ship_floats).sum(axis=1)
+                    / self.bandwidth_xpod)           # [T]
+        else:
+            sync = forced.astype(jnp.float32).sum(axis=2) * (self.rtt + xfer)
 
         if model == "bsp":
             # barrier: everyone waits for the slowest, then full sync
@@ -97,29 +145,40 @@ class TimeModel:
             worst = jnp.argmax(total, axis=1)[:, None]
             comp_clock = jnp.take_along_axis(comp, worst, axis=1)[:, 0]
             comm_clock = jnp.take_along_axis(sync, worst, axis=1)[:, 0]
-        return comp_clock + comm_clock, comp_clock, comm_clock
+        wall = comp_clock + comm_clock
+        if tiered and model != "bsp":
+            # eager shipments overlap compute (background pushes), but the
+            # clock cannot close before the wire drains: bandwidth-bound
+            # clocks surface here.  The excess is charged as comm.
+            wall = jnp.maximum(wall, wire)
+            comm_clock = wall - comp_clock
+        return wall, comp_clock, comm_clock
 
-    def wall_time(self, trace: Trace, model: str, fold=()) -> jax.Array:
+    def wall_time(self, trace: Trace, model: str, fold=(),
+                  cfg=None) -> jax.Array:
         """Cumulative modeled wall seconds per clock (traced)."""
-        wall, _, _ = self.per_clock(trace, model, fold)
+        wall, _, _ = self.per_clock(trace, model, fold, cfg=cfg)
         return jnp.cumsum(wall)
 
-    def breakdown_traced(self, trace: Trace, model: str, fold=()) -> dict:
+    def breakdown_traced(self, trace: Trace, model: str, fold=(),
+                         cfg=None) -> dict:
         """Fig 1-right comm/comp split as traced scalars (for on-device
         consumers, e.g. a sweep ``post``)."""
-        wall, comp, comm = self.per_clock(trace, model, fold)
+        wall, comp, comm = self.per_clock(trace, model, fold, cfg=cfg)
         tot = wall.sum()
         return {"total_s": tot, "comp_s": comp.sum(), "comm_s": comm.sum(),
                 "comm_frac": comm.sum() / jnp.maximum(tot, 1e-12)}
 
     # -------------------------------------------------- numpy-facing shims
-    def per_clock_np(self, trace: Trace, model: str, fold=()):
-        return tuple(np.asarray(x) for x in self.per_clock(trace, model, fold))
+    def per_clock_np(self, trace: Trace, model: str, fold=(), cfg=None):
+        return tuple(np.asarray(x)
+                     for x in self.per_clock(trace, model, fold, cfg=cfg))
 
-    def wall_time_np(self, trace: Trace, model: str, fold=()) -> np.ndarray:
-        return np.asarray(self.wall_time(trace, model, fold))
+    def wall_time_np(self, trace: Trace, model: str, fold=(),
+                     cfg=None) -> np.ndarray:
+        return np.asarray(self.wall_time(trace, model, fold, cfg=cfg))
 
-    def breakdown(self, trace: Trace, model: str, fold=()) -> dict:
+    def breakdown(self, trace: Trace, model: str, fold=(), cfg=None) -> dict:
         """Fig 1-right style comm/comp split over the whole run (floats)."""
-        return {k: float(v)
-                for k, v in self.breakdown_traced(trace, model, fold).items()}
+        return {k: float(v) for k, v in
+                self.breakdown_traced(trace, model, fold, cfg=cfg).items()}

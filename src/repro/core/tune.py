@@ -165,11 +165,16 @@ def metrics_post(time_model: TimeModel, tail: int = 10,
     Returns per (config, seed): the per-clock loss curve, the cumulative
     modeled wall clock (`TimeModel` folded over ``(cfg_idx, seed)`` so every
     grid point draws independent stragglers), and the tail-mean final loss.
+    The config rides into the time model, so hierarchical grid points are
+    charged bandwidth-faithfully (cross-pod bytes over ``bandwidth_xpod``
+    from ``Trace.ship_floats`` — frontiers over ``agg_clocks`` /
+    ``topk_frac`` / ``quant`` score real wire time, see `core.timemodel`).
     Everything downstream (threshold, time-to-threshold, Pareto) is cheap
     [N, S, T] numpy on these reduced arrays.
     """
     def post(trace, cfg, seed, cfg_idx):
-        wall = time_model.wall_time(trace, cfg.model, fold=(cfg_idx, seed))
+        wall = time_model.wall_time(trace, cfg.model, fold=(cfg_idx, seed),
+                                    cfg=cfg)
         loss = getattr(trace, loss_field)
         return {"loss": loss, "cum_wall": wall,
                 "final_loss": loss[-tail:].mean()}
@@ -329,7 +334,7 @@ def loss_at_budget(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
     which knob gradients are non-degenerate.
     """
     tr = simulate(app, cfg, n_clocks, seed=seed)
-    wall = time_model.wall_time(tr, cfg.model, fold=fold)
+    wall = time_model.wall_time(tr, cfg.model, fold=fold, cfg=cfg)
     scale = jnp.maximum(jnp.asarray(temp * time_model.t_comp, jnp.float32),
                         1e-9)
     w = jax.nn.softmax(-jnp.abs(wall - budget) / scale)

@@ -90,6 +90,18 @@ def vap_suffix_norms(uring, uclock, c):
     return ref.vap_suffix_norms(uring, uclock, c)
 
 
+def delta_pack(delta, thresh, scale, quant: str = "f32"):
+    """Comm-substrate compression pack; see `ref.delta_pack`."""
+    backend = get_backend()
+    if backend in ("pallas", "pallas_interpret"):
+        from . import delta_pack as dp
+        if dp.supported(delta):
+            return dp.delta_pack(
+                delta, thresh, scale, quant,
+                interpret=(backend == "pallas_interpret"))
+    return ref.delta_pack(delta, thresh, scale, quant)
+
+
 def mf_sgd_block(L, R, D, mask, gamma, lam):
     backend = get_backend()
     if backend in ("pallas", "pallas_interpret"):

@@ -170,6 +170,42 @@ def ring_view(base, uring, uclock, cview):
                                       uring)
 
 
+def delta_pack(delta, thresh, scale, quant: str = "f32"):
+    """Error-feedback compression pack of per-producer delta rows.
+
+    ``delta [P, d]`` aggregated deltas, ``thresh [P]`` per-row magnitude
+    threshold (the k-th largest ``|delta|``, see
+    ``comm.substrate.row_threshold``), ``scale [P]`` int8 dequant scale
+    (absmax/127; ignored unless ``quant == "int8"``).  Returns
+    ``(wire [P, d], residual [P, d])``::
+
+        mask     = |delta| >= thresh
+        wire     = Q(where(mask, delta, 0))          # dequantized values
+        residual = where(mask, delta - Q(delta), delta)
+
+    ``quant`` is static ("f32" | "bf16" | "int8").  Mass conservation:
+    ``wire + residual == delta`` — *exact* in the "f32" path (selected
+    coordinates never round: residual is the masked complement, not a
+    subtraction), to float rounding otherwise (residual is computed as
+    ``delta - dequant`` so the quantization error re-ships later).
+    """
+    mask = jnp.abs(delta) >= thresh[:, None]
+    if quant == "f32":
+        q = delta
+        residual = jnp.where(mask, 0.0, delta)
+    elif quant == "bf16":
+        q = delta.astype(jnp.bfloat16).astype(jnp.float32)
+        residual = jnp.where(mask, delta - q, delta)
+    elif quant == "int8":
+        s = scale[:, None]
+        q = jnp.clip(jnp.round(delta / s), -127.0, 127.0) * s
+        residual = jnp.where(mask, delta - q, delta)
+    else:
+        raise ValueError(f"unknown quant {quant!r}")
+    wire = jnp.where(mask, q, 0.0)
+    return wire, residual
+
+
 def vap_suffix_norms(uring, uclock, c):
     """Inf-norms of per-producer suffix aggregates of the newest k clocks.
 

@@ -28,10 +28,11 @@ simulator, VAP agrees to a strict ulp budget with exactly-equal decisions
 under the CI 16-device lane.
 """
 from .reconcile import (reconcile_stats, replica_clock, replica_divergence,
-                        xpod_channel_mask)
+                        replica_value_divergence, xpod_channel_mask)
 from .runtime import PodsRuntime, default_pods_mesh
 from .validate import cross_validate_pods
 
 __all__ = ["PodsRuntime", "default_pods_mesh", "cross_validate_pods",
-           "replica_clock", "replica_divergence", "reconcile_stats",
+           "replica_clock", "replica_divergence",
+           "replica_value_divergence", "reconcile_stats",
            "xpod_channel_mask"]

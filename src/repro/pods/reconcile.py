@@ -15,12 +15,21 @@ reconciliation channel by two quantities derived from any `Trace`:
   cview[r, q] <= c - 1`` with ``s_eff <= s + s_xpod``, so divergence is
   bounded by ``s_intra + s_xpod`` — the reconciliation invariant
   (`tests/test_pods.py` holds it as a hypothesis property);
-- **reconciliation traffic** — cross-pod deliveries are *delta* shipments
-  (one producer-clock of updates per delivery, ``d`` floats), cross-pod
-  forced fetches are clock-gated pulls of up to the whole in-transit
-  suffix.  `reconcile_stats` counts both and reports the delta-compression
-  ratio against the naive alternative of shipping a full replica
-  (``W x P x d``) per reconciliation.
+- **reconciliation traffic** — `reconcile_stats` counts eager deliveries
+  and clock-gated pulls, and reports floats-on-wire two ways: the
+  *dense-equivalent* accounting of PR 4 (one ``d``-float delta per
+  delivery/pull event, vs a full ``W x P x d`` replica transfer —
+  ``dense_equiv_compression``) and the *true bits-weighted* accounting
+  under the comm substrate (``Trace.ship_floats``: what each shipment
+  actually put on the wire after k-clock aggregation, top-k sparsity, and
+  value quantization — ``wire_floats`` / ``wire_compression``);
+- **replica value divergence** (`replica_value_divergence`) — for the
+  *unbounded-clock* models (async/VAP) the clock bound above is ``None``,
+  but the trace still supports a checked **value**-bound analogue: two
+  pods' visible prefixes of one producer differ by a sub-range of some
+  reader's in-transit aggregate, so the divergence envelope ``2 x
+  max-in-transit-inf-norm`` is bounded by ``2 v_t`` whenever VAP's
+  condition (paper eq. 1) holds.  ``pods.validate`` checks it per clock.
 """
 from __future__ import annotations
 
@@ -29,6 +38,7 @@ import numpy as np
 from ..core.consistency import ConsistencyConfig
 from ..core.delays import pod_of, same_pod_mask
 from ..core.ps import Trace
+from ..core.valuebound import v_schedule
 
 
 def xpod_channel_mask(cfg: ConsistencyConfig, P: int) -> np.ndarray:
@@ -67,6 +77,10 @@ def replica_divergence(trace: Trace, cfg: ConsistencyConfig) -> dict:
         out["bound"] = 0
     elif cfg.model in ("ssp", "essp"):
         out["bound"] = int(cfg.staleness) + int(cfg.s_xpod)
+        if cfg.comm_active:
+            # k-clock aggregation holds shipped content back up to
+            # agg_clocks - 1 extra clocks (the widened contract)
+            out["bound"] += int(cfg.agg_clocks) - 1
     else:
         out["bound"] = None
     out["ok"] = None if out["bound"] is None else out["max"] <= out["bound"]
@@ -79,29 +93,101 @@ def reconcile_stats(trace: Trace, cfg: ConsistencyConfig,
 
     Counts eager delta deliveries and clock-gated forced pulls on cross-pod
     channels, and — when ``dim`` (the app's parameter dimension) is given —
-    the delta-compression ratio: floats actually shipped per reconciled
-    channel-clock (one ``d`` delta) vs a full-replica transfer
-    (``W x P x d``) per reconciliation event.
+    two floats-on-wire accountings:
+
+    - **dense-equivalent** (PR 4's): one dense ``d``-float delta per
+      delivery/pull event (``delta_floats``), against a full-replica
+      transfer ``W x P x d`` per event (``dense_equiv_compression``);
+    - **true bits-weighted** (the comm substrate's): per cross-pod
+      channel, the sum of ``Trace.ship_floats`` over every shipment that
+      became visible to that channel — whether a background delivery or a
+      forced pull carried it, the content crosses once — giving
+      ``wire_floats`` (dense pull-based SSP, which ships nothing, counts
+      one ``d``-float delta per gated pull instead).  ``wire_compression``
+      is the dense accounting of the *same visibility trajectory* divided
+      by it: >1 means aggregation/sparsity/quantization genuinely cut the
+      bytes a dense-eager run would have moved to reach the same replica
+      state.
     """
     delivered = np.asarray(trace.delivered)             # [T, P, P]
     forced = np.asarray(trace.forced)
-    P = delivered.shape[-1]
+    st = np.asarray(trace.staleness)
+    T, _, P = delivered.shape
     x = xpod_channel_mask(cfg, P)
-    n_clocks = delivered.shape[0]
     eager = int(delivered[:, x].sum())
     gated = int(forced[:, x].sum())
     out = {"xpod_channels": int(x.sum()),
-           "n_clocks": n_clocks,
+           "n_clocks": T,
            "eager_deliveries": eager,
            "gated_pulls": gated,
-           "eager_per_clock": eager / max(n_clocks, 1),
-           "gated_per_clock": gated / max(n_clocks, 1)}
+           "eager_per_clock": eager / max(T, 1),
+           "gated_per_clock": gated / max(T, 1)}
     if dim is not None:
         W = cfg.effective_window
         events = eager + gated
         delta_floats = events * dim
         replica_floats = events * W * P * dim
         out["delta_floats"] = delta_floats
-        out["delta_compression"] = (replica_floats / delta_floats
-                                    if delta_floats else None)
+        out["dense_equiv_compression"] = (replica_floats / delta_floats
+                                          if delta_floats else None)
+        if x.any():
+            # True floats-on-wire: each shipment of producer q crosses a
+            # cross-pod channel (r, q) exactly once, when it becomes
+            # visible there (whether a background delivery or a forced
+            # pull carried it); the channel's final visible prefix (from
+            # the last recorded read) tells which shipments those were.
+            ship = np.asarray(trace.ship_floats)        # [T, P]
+            cum = np.concatenate([np.zeros((1, P), ship.dtype),
+                                  np.cumsum(ship, axis=0)])  # [T+1, P]
+            v_final = st[-1] + (T - 1)                  # [P, P] visible clk
+            vis = np.clip(v_final + 1, 0, T)            # shipments seen
+            per_chan = cum[vis, np.arange(P)[None, :]]  # [P(r), P(q)]
+            if cfg.model == "ssp" and not cfg.comm_active:
+                # dense pull-based: nothing ships; each clock-gated pull
+                # moves one delta-compressed d-float suffix (PR 4's story)
+                wire = dense = float(gated * dim)
+            else:
+                wire = float(per_chan[x].sum())
+                # the dense-eager counterfactual of the same visibility
+                # trajectory: every visible clock carried a d-float delta
+                dense = float(vis[x].sum() * dim)
+            out["wire_floats"] = wire
+            out["dense_floats"] = dense
+            out["wire_compression"] = dense / wire if wire else None
+    return out
+
+
+def replica_value_divergence(trace: Trace, cfg: ConsistencyConfig) -> dict:
+    """Checked *value*-bound analogue of `replica_divergence` for the
+    unbounded-clock models (async/VAP) — ROADMAP follow-up (b).
+
+    Two pods' visible prefixes of producer ``q`` differ by the updates in
+    the clock range ``(rep_min, rep_max]``; that range is the difference
+    of two in-transit suffixes of the weakest reader, so its aggregate
+    inf-norm is at most twice the largest in-transit aggregate
+    (triangle inequality on suffix differences).  The trace records that
+    maximum per clock (``intransit_inf``), giving a measured divergence
+    *envelope* ``2 x intransit_inf``; under VAP the enforcement bounds
+    every in-transit aggregate by ``v_t = v0/sqrt(t+1)`` (paper eq. 1),
+    so the envelope is checked against ``2 v_t``.  For async there is no
+    bound — callers get the measured envelope with ``ok=None`` (the same
+    contract shape as the clock-bound dict).
+    """
+    envelope = 2.0 * np.asarray(trace.intransit_inf)    # [T]
+    out = {"max_envelope": float(envelope.max()) if envelope.size else 0.0,
+           "per_clock": envelope}
+    if cfg.model == "vap":
+        sched = v_schedule(float(cfg.v0))
+        # reads at clock c check in-transit accumulated through c-1, so
+        # envelope[t] compares against the enforcement bound at t-1 (the
+        # same offset core.valuebound.check_condition uses).
+        vt = np.array([2.0 * sched(t) for t in range(len(envelope))])
+        viol = envelope[1:] > vt[:-1] + 1e-6
+        out["bound_final"] = float(vt[-1]) if len(vt) else None
+        out["violations"] = int(viol.sum())
+        out["ok"] = bool(viol.sum() == 0)
+    else:
+        out["bound_final"] = None
+        out["violations"] = None
+        out["ok"] = None
     return out

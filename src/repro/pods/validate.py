@@ -4,16 +4,22 @@
 the pods runtime must match it exactly like psrun matches the flat mode
 (``psrun.validate.cross_validate`` does the per-model comparison; its
 staleness check is already two-tier via
-``core.delays.staleness_bound_matrix``).  On top of that the hierarchical
-contract adds the replica layer: pods' visible prefixes must stay within
-the reconciliation bound (`pods.reconcile.replica_divergence`).
+``core.delays.staleness_bound_matrix``, and widens by ``agg_clocks - 1``
+under the comm substrate).  On top of that the hierarchical contract adds
+the replica layer: pods' visible prefixes must stay within the
+reconciliation bound (`pods.reconcile.replica_divergence`) — and for the
+models with *no* clock bound (async/VAP), within the **value**-bound
+analogue (`pods.reconcile.replica_value_divergence`, wired through
+``core.valuebound``): the replica-divergence envelope stays under
+``2 v_t`` for VAP, and is reported measured-only for async.
 """
 from __future__ import annotations
 
 from ..core.consistency import ConsistencyConfig
 from ..core.ps import PSApp
 from ..psrun.validate import cross_validate
-from .reconcile import reconcile_stats, replica_divergence
+from .reconcile import (reconcile_stats, replica_divergence,
+                        replica_value_divergence)
 from .runtime import PodsRuntime
 
 
@@ -22,9 +28,13 @@ def cross_validate_pods(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
     """Run both engines and check the hierarchical oracle contract.
 
     BSP/SSP/ESSP: bit-identical traces (+ two-tier staleness bound for
-    SSP/ESSP).  VAP: value bound, exact decisions, strict ulp budget.
-    All bounded models: replica divergence within ``s_intra + s_xpod``.
-    Returns the evidence dict with an overall ``ok``.
+    SSP/ESSP — widened by ``agg_clocks - 1`` when the comm substrate is
+    active).  VAP: value bound, exact decisions, strict ulp budget.
+    Bounded models: replica divergence within ``s_intra + s_xpod``
+    (+ ``agg_clocks - 1``); unbounded models (async/VAP): the replica
+    value-divergence envelope, checked against ``2 v_t`` for VAP (clock
+    bound stays ``None``).  Returns the evidence dict with an overall
+    ``ok``.
     """
     runtime = runtime or PodsRuntime()
     out = cross_validate(app, cfg, n_clocks, runtime=runtime, seed=seed,
@@ -35,5 +45,11 @@ def cross_validate_pods(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
                                  if k != "per_clock"}
     if div["ok"] is not None:
         out["ok"] = out["ok"] and div["ok"]
+    if cfg.model in ("async", "vap"):
+        vdiv = replica_value_divergence(tr, cfg)
+        out["replica_value_divergence"] = {k: v for k, v in vdiv.items()
+                                           if k != "per_clock"}
+        if vdiv["ok"] is not None:
+            out["ok"] = out["ok"] and vdiv["ok"]
     out["reconcile"] = reconcile_stats(tr, cfg, dim=app.dim)
     return out

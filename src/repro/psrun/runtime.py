@@ -70,8 +70,9 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P_
 
+from ..comm import substrate as comm
 from ..core.consistency import ConsistencyConfig
-from ..core.delays import delivery_matrix, staleness_bound_matrix
+from ..core.delays import delivery_matrix, pod_of, staleness_bound_matrix
 from ..core.ps import PSApp, Trace, enforce_vap
 from ..kernels import ops
 from ..kernels.ref import RING_EMPTY, RING_INVALID
@@ -100,11 +101,16 @@ class PSState:
 
     clock: jax.Array           # [] i32 — next clock to execute
     base: jax.Array            # [dpad] folded (globally visible) updates
+    #                            (under the comm substrate: constant x0 —
+    #                            folds go to comm["base_pod"] per pod)
     uring: jax.Array           # [W, P, dpad] in-transit update ring
     uclock: jax.Array          # [W] clock stored in each ring slot
     cview: jax.Array           # [P, P] per-channel visibility clocks
     local: Any                 # worker-local state (leaves lead with P)
     rng: jax.Array             # PRNG key (the simulator's key stream)
+    comm: Any = None           # comm-substrate state (repro.comm: acc,
+    #                            res, xring, base_pod, xbase_pod) when
+    #                            cfg.comm_active; None on the dense path
 
 
 def default_mesh(n_workers: int, devices=None):
@@ -171,10 +177,18 @@ def make_run_fn(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
     if cfg.n_pods > 1 and P % cfg.n_pods:
         raise ValueError(f"n_workers={P} must divide by n_pods={cfg.n_pods}")
     f32 = jnp.float32
+    # Static: route cross-pod shipment through the comm substrate — the
+    # same compressed state machine as core.ps.simulate's wired mode, so
+    # the oracle contract covers the compressed path too.
+    wired = cfg.comm_active
+    quant0, G = cfg.quant, cfg.n_pods
 
-    def body(cfg, clock0, base, uring, uclock, cview, local, rng):
+    def body(cfg, clock0, base, uring, uclock, cview, local, rng,
+             cst=None):
         # local shards: base [dl], uring [W, P, dl], uclock [W] (replicated),
-        # cview [Pl, P], local leaves [Pl, ...], rng/clock0 replicated.
+        # cview [Pl, P], local leaves [Pl, ...], rng/clock0 replicated;
+        # comm state (wired only): acc/res [P, dl], xring [W, P, dl],
+        # base_pod/xbase_pod [G, dl] — all sharded over "model" like uring.
         _TRACE_COUNTER["count"] += 1          # fires once per trace/compile
         di = jax.lax.axis_index(worker_axes)
         mi = jax.lax.axis_index("model")
@@ -183,14 +197,23 @@ def make_run_fn(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
         producer_ids = jnp.arange(P, dtype=jnp.int32)
         eye_l = worker_ids[:, None] == producer_ids[None, :]   # local eye rows
         # Two-tier staleness bound on the local reader rows (`s` intra-pod,
-        # `s + s_xpod` cross-pod; one-tier and exactly `s` when n_pods=1).
+        # `s + s_xpod` cross-pod, `+ agg_clocks - 1` under the substrate;
+        # one-tier and exactly `s` when n_pods=1).
         s_eff = staleness_bound_matrix(cfg, worker_ids, P)     # [Pl, P]
+        if wired:
+            pods_all = pod_of(P, G)                            # [P]
+            reader_pods = pods_all[worker_ids]                 # [Pl]
+            in_pod = reader_pods[:, None] == pods_all[None, :]  # [Pl, P]
+            zeros_dl = jnp.zeros((dl,), f32)
 
         vmapped_update = jax.vmap(app.worker_update,
                                   in_axes=(0, 0, 0, None, 0))
 
         def step(carry, c):
-            base, uring, uclock, cview, local, rng = carry
+            if wired:
+                base, uring, uclock, cview, local, rng, cst = carry
+            else:
+                base, uring, uclock, cview, local, rng = carry
             rng, k_upd, k_net = jax.random.split(rng, 3)
 
             # global per-producer suffix-aggregate inf-norms: local block
@@ -204,7 +227,14 @@ def make_run_fn(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
                 cview = jnp.full_like(cview, c - 1)
             elif cfg.model in ("ssp", "essp"):
                 forced = cview < (c - s_eff - 1)
-                cview = jnp.where(forced, c - 1, cview)
+                if wired:
+                    # cross-pod refreshes fetch what has *shipped* (through
+                    # the last aggregation boundary), mirroring the oracle
+                    tgt = jnp.where(in_pod, c - 1,
+                                    comm.shipped_through(c, cfg.agg_clocks))
+                    cview = jnp.where(forced, tgt, cview)
+                else:
+                    cview = jnp.where(forced, c - 1, cview)
             elif cfg.model == "vap":
                 cview, forced = enforce_vap(cfg, c, cview, norms, W)
             else:  # async
@@ -220,7 +250,21 @@ def make_run_fn(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
                 jnp.max(norms[kcur, producer_ids[None, :]]), worker_axes)
 
             # --- 2. materialize views: shard-local, then assemble ---------
-            views_l = ops.ring_view(base, uring, uclock, cview)  # [Pl, dl]
+            if wired:
+                # intra-pod producers read raw, cross-pod producers read
+                # the shipped wire ring; folded bases assemble per reader
+                # pod — the same three-term sum as the oracle.
+                cv_intra = jnp.where(in_pod, cview, RING_EMPTY)
+                cv_xpod = jnp.where(in_pod, RING_EMPTY, cview)
+                rb = comm.reader_base(base, cst["base_pod"],
+                                      cst["xbase_pod"], reader_pods)
+                views_l = (rb
+                           + ops.ring_view(zeros_dl, uring, uclock,
+                                           cv_intra)
+                           + ops.ring_view(zeros_dl, cst["xring"], uclock,
+                                           cv_xpod))              # [Pl, dl]
+            else:
+                views_l = ops.ring_view(base, uring, uclock, cview)
             views = jax.lax.all_gather(views_l, "model", axis=1,
                                        tiled=True)[:, :d]        # [Pl, d]
 
@@ -243,10 +287,43 @@ def make_run_fn(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
             u_blk = jax.lax.dynamic_slice(u_all, (0, mi * dl), (P, dl))
             slot = jnp.mod(c, W)
             old_valid = uclock[slot] > RING_INVALID
-            base = base + jnp.where(old_valid, 1.0, 0.0) * jnp.sum(
-                uring[slot], axis=0)
+            if wired:
+                w_old = jnp.where(old_valid, 1.0, 0.0)
+                cst = dict(cst,
+                           base_pod=cst["base_pod"]
+                           + w_old * comm.fold_pods(uring[slot], G),
+                           xbase_pod=cst["xbase_pod"]
+                           + w_old * comm.fold_pods(cst["xring"][slot], G))
+            else:
+                base = base + jnp.where(old_valid, 1.0, 0.0) * jnp.sum(
+                    uring[slot], axis=0)
             uring = uring.at[slot].set(u_blk)
             uclock = uclock.at[slot].set(c)
+            if wired:
+                # --- 4b. comm substrate: accumulate; ship on boundary ----
+                # thresholds/scales/counts come from the *gathered* full
+                # rows (bit-identical to the oracle's [P, d] sort); the
+                # pack itself is elementwise on the local shard.
+                acc = cst["acc"] + u_blk
+                delta = acc + cst["res"]                     # [P, dl]
+                delta_full = jax.lax.all_gather(
+                    delta, "model", axis=1, tiled=True)[:, :d]
+                thresh = comm.row_threshold(delta_full, cfg.topk_frac)
+                scale = comm.quant_scale(delta_full, cfg.quant)
+                wire_u, resid = ops.delta_pack(delta, thresh, scale,
+                                               cfg.quant)
+                nnz = comm.selected_count(delta_full, thresh)
+                ship = comm.ship_now(c, cfg.agg_clocks)
+                wire_u = jnp.where(ship, wire_u, jnp.zeros_like(wire_u))
+                cst = dict(cst,
+                           acc=jnp.where(ship, jnp.zeros_like(acc), acc),
+                           res=jnp.where(ship, resid, cst["res"]),
+                           xring=cst["xring"].at[slot].set(wire_u))
+                ship_floats = jnp.where(
+                    ship, comm.wire_floats(nnz, d, cfg.quant),
+                    jnp.zeros((P,), f32))
+            else:
+                ship_floats = comm.dense_ship_floats(cfg.model, P, d)
 
             # --- 5. end-of-clock delivery (affects reads at c+1) ----------
             if cfg.model == "bsp":
@@ -257,11 +334,23 @@ def make_run_fn(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
             else:  # essp / async / vap: delay-driven eager delivery
                 delivered = jax.lax.dynamic_slice_in_dim(
                     delivery_matrix(k_net, cfg, P), rows0, Pl)
-                cview = jnp.where(delivered, c, cview)
+                if wired:
+                    tgt = jnp.where(in_pod, c,
+                                    comm.shipped_end(c, cfg.agg_clocks))
+                    cview = jnp.where(delivered, jnp.maximum(cview, tgt),
+                                      cview)
+                else:
+                    cview = jnp.where(delivered, c, cview)
 
             # --- 6. record (gathered so losses match the oracle exactly) --
-            x_ref = base + jnp.sum(
-                uring * (uclock[:, None, None] > RING_INVALID), axis=(0, 1))
+            if wired:
+                x_ref = (base + jnp.sum(cst["base_pod"], axis=0)) + jnp.sum(
+                    uring * (uclock[:, None, None] > RING_INVALID),
+                    axis=(0, 1))
+            else:
+                x_ref = base + jnp.sum(
+                    uring * (uclock[:, None, None] > RING_INVALID),
+                    axis=(0, 1))
             x_ref = jax.lax.all_gather(x_ref, "model", tiled=True)[:d]
             locals_all = jax.tree_util.tree_map(
                 lambda x: jax.lax.all_gather(x, worker_axes, axis=0,
@@ -273,50 +362,74 @@ def make_run_fn(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
                        loss_view=app.loss(views_all[0], locals_all),
                        staleness=staleness, forced=forced,
                        delivered=delivered,
-                       u_l2=u_l2, intransit_inf=intransit_inf)
+                       u_l2=u_l2, intransit_inf=intransit_inf,
+                       ship_floats=ship_floats)
             if record_views:
                 out["views0"] = views_all[0]
+            if wired:
+                return (base, uring, uclock, cview, local, rng, cst), out
             return (base, uring, uclock, cview, local, rng), out
 
-        carry0 = (base, uring, uclock, cview, local, rng)
         clocks = clock0 + jnp.arange(n_clocks, dtype=jnp.int32)
-        (base, uring, uclock, cview, local, rng), ys = jax.lax.scan(
-            step, carry0, clocks)
-        x_final = base + jnp.sum(
-            uring * (uclock[:, None, None] > RING_INVALID), axis=(0, 1))
-        return {"ys": ys, "x_final": x_final,
-                "state": dict(clock=clock0 + n_clocks, base=base,
-                              uring=uring, uclock=uclock, cview=cview,
-                              local=local, rng=rng)}
+        if wired:
+            carry0 = (base, uring, uclock, cview, local, rng, cst)
+            (base, uring, uclock, cview, local, rng, cst), ys = jax.lax.scan(
+                step, carry0, clocks)
+            x_final = (base + jnp.sum(cst["base_pod"], axis=0)) + jnp.sum(
+                uring * (uclock[:, None, None] > RING_INVALID), axis=(0, 1))
+        else:
+            carry0 = (base, uring, uclock, cview, local, rng)
+            (base, uring, uclock, cview, local, rng), ys = jax.lax.scan(
+                step, carry0, clocks)
+            x_final = base + jnp.sum(
+                uring * (uclock[:, None, None] > RING_INVALID), axis=(0, 1))
+        state = dict(clock=clock0 + n_clocks, base=base,
+                     uring=uring, uclock=uclock, cview=cview,
+                     local=local, rng=rng,
+                     comm=cst if wired else None)
+        return {"ys": ys, "x_final": x_final, "state": state}
 
     local_spec = jax.tree_util.tree_map(lambda _: P_(worker_axes), app.local0)
     ys_specs = {"loss_ref": P_(), "loss_view": P_(),
                 "staleness": P_(None, worker_axes, None),
                 "forced": P_(None, worker_axes, None),
                 "delivered": P_(None, worker_axes, None),
-                "u_l2": P_(), "intransit_inf": P_()}
+                "u_l2": P_(), "intransit_inf": P_(), "ship_floats": P_()}
     if record_views:
         ys_specs["views0"] = P_()
+    comm_specs = None
+    if wired:
+        comm_specs = dict(acc=P_(None, "model"), res=P_(None, "model"),
+                          xring=P_(None, None, "model"),
+                          base_pod=P_(None, "model"),
+                          xbase_pod=P_(None, "model"))
     state_specs = dict(clock=P_(), base=P_("model"),
                        uring=P_(None, None, "model"), uclock=P_(),
                        cview=P_(worker_axes, None), local=local_spec,
-                       rng=P_())
+                       rng=P_(), comm=comm_specs)
+    in_specs = [P_(), P_(), P_("model"), P_(None, None, "model"), P_(),
+                P_(worker_axes, None), local_spec, P_()]
+    if wired:
+        in_specs.append(comm_specs)
     sharded = shard_map(
         body, mesh=mesh,
-        in_specs=(P_(), P_(), P_("model"), P_(None, None, "model"), P_(),
-                  P_(worker_axes, None), local_spec, P_()),
+        in_specs=tuple(in_specs),
         out_specs={"ys": ys_specs, "x_final": P_("model"),
                    "state": state_specs},
         check_rep=False)
 
     def run(state: PSState, cfg):
-        out = sharded(cfg, state.clock, state.base, state.uring,
-                      state.uclock, state.cview, state.local, state.rng)
+        args = (cfg, state.clock, state.base, state.uring,
+                state.uclock, state.cview, state.local, state.rng)
+        if wired:
+            args += (state.comm,)
+        out = sharded(*args)
         ys = out["ys"]
         trace = Trace(loss_ref=ys["loss_ref"], loss_view=ys["loss_view"],
                       staleness=ys["staleness"], forced=ys["forced"],
                       delivered=ys["delivered"], u_l2=ys["u_l2"],
                       intransit_inf=ys["intransit_inf"],
+                      ship_floats=ys["ship_floats"],
                       views0=ys.get("views0"),
                       x_final=out["x_final"][:d],
                       locals_final=out["state"]["local"])
@@ -334,7 +447,8 @@ def make_run_fn(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
             uclock=jnp.full((W,), RING_EMPTY, jnp.int32),
             cview=jnp.full((P, P), -1, jnp.int32),
             local=app.local0,
-            rng=jax.random.PRNGKey(seed))
+            rng=jax.random.PRNGKey(seed),
+            comm=comm.init_state(W, P, dpad, G) if wired else None)
 
     def _norm_cfg(cfg_run: ConsistencyConfig | None) -> ConsistencyConfig:
         c = cfg if cfg_run is None else cfg_run
@@ -343,9 +457,15 @@ def make_run_fn(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
                 f"runtime compiled for ring window {W}, got "
                 f"{c.effective_window}; set cfg.window explicitly or build "
                 f"a new run fn")
-        # normalize the static window so every same-family call shares one
-        # pytree treedef (and therefore one jit cache entry)
-        return c.replace(window=W)
+        if c.comm_active != wired or (wired and c.quant != quant0):
+            raise ValueError(
+                f"runtime compiled with comm_active={wired} "
+                f"(quant={quant0!r}); got comm_active={c.comm_active} "
+                f"(quant={c.quant!r}) — build a new run fn for a "
+                f"different comm structure")
+        # normalize the static window/wire flag so every same-family call
+        # shares one pytree treedef (and therefore one jit cache entry)
+        return c.replace(window=W, wire=wired)
 
     def run_from(state: PSState, cfg_run: ConsistencyConfig | None = None):
         """Advance ``state`` by ``n_clocks``; returns ``(Trace, PSState)``.

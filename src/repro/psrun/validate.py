@@ -39,7 +39,7 @@ from ..core.ps import PSApp, Trace, simulate
 from .runtime import PSRuntime
 
 TRACE_FIELDS = ("loss_ref", "loss_view", "staleness", "forced", "delivered",
-                "u_l2", "intransit_inf", "x_final")
+                "u_l2", "intransit_inf", "ship_floats", "x_final")
 
 # Float drift budget for VAP under multi-device compilation (see module
 # doc), asserted in ulp units so it stays scale-free.  Measured drift on

@@ -1,0 +1,483 @@
+"""The comm substrate contract (`repro.comm` + the wired engine paths).
+
+What is pinned here:
+
+- **mass conservation** (hypothesis): the error-feedback pack satisfies
+  ``wire + residual == delta`` *exactly* in the f32 path (disjoint
+  supports — no coordinate is ever rounded), and a whole ship/accumulate
+  stream telescopes: shipped + in-flight == produced;
+- **Pallas kernel parity**: `kernels.delta_pack` under ``interpret=True``
+  matches the jnp reference bit for bit across quants and shapes;
+- **widened staleness contract** (hypothesis): under k-clock aggregation
+  every channel obeys ``s`` intra-pod and ``s + s_xpod + agg_clocks - 1``
+  cross-pod, replica divergence obeys the widened bound, and cross-pod
+  visibility only ever lands on shipment boundaries;
+- **bit-identity pins**: the default path (``agg_clocks=1, topk_frac=1.0,
+  quant="f32"``, substrate off) is bit-identical between engines, and the
+  *neutral* substrate (same knobs, ``wire=True``) reproduces the dense
+  decisions exactly with views equal to float association;
+- **runtime == oracle on the compressed path**: `PSRuntime`/`PodsRuntime`
+  with compressed configs match ``core.ps.simulate`` bit for bit
+  (thresholds from gathered full rows — the reduction-order discipline of
+  the Trace-producer contract extends to the wire);
+- **bytes accounting**: ``Trace.ship_floats`` and
+  `pods.reconcile.reconcile_stats` measure real compression (dense-eager
+  ratio 1.0; aggregated+sparse+quantized > 4x), and the `TimeModel`
+  cross-pod tier charges them as seconds over ``bandwidth_xpod``;
+- **value-bound analogue** (ROADMAP follow-up (b)):
+  `pods.reconcile.replica_value_divergence` holds under VAP (``2 v_t``),
+  reports measured-only for async, and rides `cross_validate_pods`.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.comm import substrate as comm
+from repro.core import essp, simulate, ssp, vap
+from repro.core.consistency import ConsistencyConfig, compressed, podded
+from repro.core.ps import PSApp
+from repro.core.sweep import stack_configs, sweep
+from repro.core.timemodel import TimeModel
+from repro.kernels import ops, ref
+from repro.pods.reconcile import (reconcile_stats, replica_divergence,
+                                  replica_value_divergence)
+from repro.psrun import PSRuntime
+from repro.psrun.runtime import default_mesh as flat_mesh_for
+from repro.psrun.runtime import trace_count
+from repro.psrun.validate import TRACE_FIELDS, check_staleness_bound
+
+
+def make_quad(P, d=16):
+    def worker_update(view, local, wid, clock, rng):
+        g = view + 0.05 * jax.random.normal(rng, view.shape)
+        return -(0.3 / jnp.sqrt(1.0 + clock)) * g / P, local
+
+    return PSApp(name=f"quad{P}", dim=d, n_workers=P,
+                 x0=jnp.ones((d,)) * 2.0,
+                 local0={"_": jnp.zeros((P, 1))},
+                 worker_update=worker_update,
+                 loss=lambda x, l: jnp.sum(jnp.square(x)))
+
+
+@pytest.fixture(scope="module")
+def quad8():
+    return make_quad(8)
+
+
+def oracle(app, cfg, T, seed):
+    return jax.jit(lambda sd: simulate(app, cfg, T, seed=sd))(
+        jnp.uint32(seed))
+
+
+def assert_bit_identical(got, want, context=""):
+    for name in TRACE_FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(got, name)), np.asarray(getattr(want, name)),
+            err_msg=f"{context}:{name}")
+
+
+POD = dict(s_xpod=3, t_net_xpod=6.0)
+
+
+# ---------------------------------------------------------------------------
+# pack: mass conservation + kernel parity
+# ---------------------------------------------------------------------------
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10**6),
+       topk_frac=st.floats(min_value=0.05, max_value=1.0),
+       P=st.sampled_from([1, 4, 8]))
+def test_pack_f32_conserves_mass_exactly(seed, topk_frac, P):
+    """f32 path: wire and residual have disjoint supports, so
+    ``wire + residual == delta`` with zero rounding — shipped plus
+    held-back mass is exactly what was accumulated."""
+    d = 96
+    delta = np.asarray(jax.random.normal(
+        jax.random.PRNGKey(seed), (P, d)) * 3.0, np.float32)
+    wire, resid, nnz = comm.pack(jnp.asarray(delta), topk_frac, "f32")
+    wire, resid = np.asarray(wire), np.asarray(resid)
+    assert ((wire == 0) | (resid == 0)).all()          # disjoint supports
+    np.testing.assert_array_equal(wire + resid, delta)  # exact, not allclose
+    k = int(np.ceil(topk_frac * d))
+    assert (np.asarray(nnz) >= k).all()                # ties only ever add
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10**6),
+       quant=st.sampled_from(["bf16", "int8"]),
+       topk_frac=st.floats(min_value=0.1, max_value=1.0))
+def test_pack_quantized_residual_carries_error(seed, quant, topk_frac):
+    """Quantized paths conserve mass by construction: the residual is
+    computed as ``delta - dequant``, so the quantization error re-ships
+    later.  ``wire + residual`` matches ``delta`` to one rounding."""
+    delta = np.asarray(jax.random.normal(
+        jax.random.PRNGKey(seed), (4, 64)) * 2.0, np.float32)
+    wire, resid, _ = comm.pack(jnp.asarray(delta), topk_frac, quant)
+    np.testing.assert_allclose(np.asarray(wire) + np.asarray(resid), delta,
+                               rtol=0, atol=1e-5)
+    if quant == "int8":      # wire values live on the 255-level lattice
+        scale = np.maximum(np.abs(delta).max(axis=1), 1e-12)[:, None] / 127.0
+        q = np.asarray(wire) / scale
+        np.testing.assert_allclose(q, np.round(q), atol=1e-4)
+
+
+def test_stream_conserves_mass():
+    """A whole accumulate/ship stream telescopes (f32, any agg/topk):
+    everything shipped plus everything still in flight equals everything
+    produced — dropped coordinates are delayed, never lost."""
+    rng = np.random.default_rng(0)
+    P, d, agg, topk = 4, 32, 3, 0.25
+    acc = np.zeros((P, d), np.float32)
+    res = np.zeros((P, d), np.float32)
+    shipped = np.zeros((P, d), np.float64)
+    total = np.zeros((P, d), np.float64)
+    for t in range(30):
+        u = rng.standard_normal((P, d)).astype(np.float32)
+        total += u
+        acc += u
+        if (t + 1) % agg == 0:
+            delta = acc + res
+            wire, resid, _ = comm.pack(jnp.asarray(delta), topk, "f32")
+            np.testing.assert_array_equal(
+                np.asarray(wire) + np.asarray(resid), delta)
+            shipped += np.asarray(wire)
+            res, acc = np.asarray(resid), np.zeros_like(acc)
+    np.testing.assert_allclose(shipped + acc + res, total, atol=1e-4)
+
+
+@pytest.mark.parametrize("quant", ["f32", "bf16", "int8"])
+@pytest.mark.parametrize("shape", [(4, 128), (8, 256), (1, 128)])
+def test_delta_pack_pallas_interpret_matches_ref(quant, shape):
+    P, d = shape
+    delta = jax.random.normal(jax.random.PRNGKey(7), (P, d)) * 2.0
+    thresh = comm.row_threshold(delta, 0.3)
+    scale = comm.quant_scale(delta, quant)
+    want = ref.delta_pack(delta, thresh, scale, quant)
+    ops.set_backend("pallas_interpret")
+    try:
+        got = ops.delta_pack(delta, thresh, scale, quant)
+    finally:
+        ops.set_backend("auto")
+    delta_np = np.asarray(delta, np.float32)
+    sel = np.abs(delta_np) >= np.asarray(thresh)[:, None]
+    for g, w, kind in zip(got, want, ("wire", "res")):
+        g, w = np.asarray(g), np.asarray(w)
+        if quant == "int8":
+            # interpret-mode XLA contracts round(x/s)*s differently (FMA):
+            # values drift a few ulp and a |x/s| ~ .5 coordinate can round
+            # across the lattice step.  The *selection* stays exact (it
+            # only reads |delta| vs thresh) and values stay within one
+            # lattice step — semantic parity, like the VAP ulp budget.
+            step = np.broadcast_to(np.asarray(scale)[:, None] * 1.001,
+                                   g.shape)
+            np.testing.assert_array_less(np.abs(g - w), step,
+                                         err_msg=f"{quant}@{shape}:{kind}")
+            ref_zero = (~sel) if kind == "wire" else None
+            if ref_zero is not None:
+                assert not g[ref_zero].any()     # unselected never ships
+        else:
+            np.testing.assert_array_equal(g, w, err_msg=f"{quant}@{shape}")
+
+
+def test_topk_one_is_identity():
+    delta = jax.random.normal(jax.random.PRNGKey(1), (4, 64))
+    wire, resid, nnz = comm.pack(delta, 1.0, "f32")
+    np.testing.assert_array_equal(np.asarray(wire), np.asarray(delta))
+    assert not np.asarray(resid).any()
+    assert (np.asarray(nnz) == 64).all()
+    # dense shipments need no index side-channel
+    assert (np.asarray(comm.wire_floats(nnz, 64, "f32")) == 64).all()
+    # sparse ones pay 32-bit indices on top of the (quantized) values
+    assert float(comm.wire_floats(jnp.asarray([16.0]), 64, "int8")[0]) \
+        == 16 * 0.25 + 16
+
+
+def test_ship_schedule():
+    for agg in (1, 2, 3, 5):
+        a = jnp.int32(agg)
+        for c in range(12):
+            end = int(comm.shipped_end(jnp.int32(c), a))
+            thr = int(comm.shipped_through(jnp.int32(c), a))
+            assert end == ((c + 1) // agg) * agg - 1
+            assert thr == (c // agg) * agg - 1
+            assert c - agg <= thr <= c - 1      # refresh target stays fresh
+            assert thr <= end <= c
+            if agg == 1:
+                assert (end, thr) == (c, c - 1)  # collapses to dense
+
+
+# ---------------------------------------------------------------------------
+# widened staleness contract + boundary-only cross-pod visibility
+# ---------------------------------------------------------------------------
+@settings(max_examples=10, deadline=None)
+@given(s=st.integers(min_value=0, max_value=3),
+       s_xpod=st.integers(min_value=0, max_value=4),
+       agg=st.integers(min_value=1, max_value=4),
+       topk=st.floats(min_value=0.1, max_value=1.0),
+       model=st.sampled_from(["ssp", "essp"]),
+       seed=st.integers(min_value=0, max_value=99))
+def test_widened_staleness_contract_property(quad8, s, s_xpod, agg, topk,
+                                             model, seed):
+    """For any knob draw under the substrate: per-channel lag <= s intra /
+    s + s_xpod + agg - 1 cross-pod, replica divergence within the widened
+    bound, and cross-pod cview only ever sits on shipment boundaries."""
+    mk = ssp if model == "ssp" else essp
+    cfg = compressed(podded(mk(s, window=14), 2, s_xpod=s_xpod,
+                            t_net_xpod=6.0),
+                     agg_clocks=agg, topk_frac=topk).replace(window=14)
+    tr = jax.jit(lambda sd, c: simulate(quad8, c, 16, seed=sd))(
+        jnp.uint32(seed), cfg)
+    chk = check_staleness_bound(tr, cfg)     # widened bound, per channel
+    assert chk["violations"] == 0, (model, s, s_xpod, agg, chk)
+    div = replica_divergence(tr, cfg)
+    assert div["bound"] == s + s_xpod + agg - 1
+    assert div["ok"], div
+    # cross-pod visibility lands only on shipment boundaries
+    st_ = np.asarray(tr.staleness)           # [T, P, P], = cview - c
+    from repro.core.delays import same_pod_mask
+    same = np.asarray(same_pod_mask(8, 2))
+    T = st_.shape[0]
+    cview = st_ + np.arange(T)[:, None, None]
+    xv = cview[:, ~same]
+    assert (((xv + 1) % agg == 0) | (xv == -1)).all()
+
+
+def test_shipments_only_on_boundaries(quad8):
+    cfg = compressed(podded(essp(2), 2, **POD), agg_clocks=3, topk_frac=0.5)
+    tr = oracle(quad8, cfg, 18, 0)
+    ship = np.asarray(tr.ship_floats)        # [T, P]
+    clocks = np.arange(ship.shape[0])
+    assert (ship[(clocks + 1) % 3 != 0] == 0).all()
+    assert (ship[(clocks + 1) % 3 == 0] > 0).all()
+
+
+# ---------------------------------------------------------------------------
+# bit-identity pins (defaults + neutral substrate + runtime == oracle)
+# ---------------------------------------------------------------------------
+def test_default_path_has_substrate_off():
+    assert not ConsistencyConfig().comm_active
+    assert not podded(essp(2), 2, s_xpod=3).comm_active
+    assert compressed(podded(essp(2), 2), 2, 0.5, "int8").comm_active
+    # traced/batched knobs without an explicit wire flag stay OFF ...
+    stacked = stack_configs([podded(essp(2), 2, **POD),
+                             podded(essp(3), 2, **POD)])
+    assert stacked.wire is False and not stacked.comm_active
+    # ... and a stacked compressed family stays ON
+    stacked_c = stack_configs([
+        compressed(podded(essp(2), 2, **POD), 2, 0.5),
+        compressed(podded(essp(3), 2, **POD), 4, 0.25)])
+    assert stacked_c.wire is True and stacked_c.comm_active
+
+
+def test_neutral_substrate_matches_dense_decisions(quad8):
+    """agg=1 / topk=1.0 / f32 through the substrate ships the exact dense
+    delta: every integer decision matches the dense path bit for bit, and
+    the float fields agree to association (split-ring summation order)."""
+    dense = podded(essp(2), 2, **POD)
+    tr_d = oracle(quad8, dense, 25, 3)
+    tr_n = oracle(quad8, compressed(dense), 25, 3)
+    for f in ("staleness", "forced", "delivered", "ship_floats"):
+        np.testing.assert_array_equal(np.asarray(getattr(tr_d, f)),
+                                      np.asarray(getattr(tr_n, f)), f)
+    np.testing.assert_allclose(np.asarray(tr_d.x_final),
+                               np.asarray(tr_n.x_final), rtol=0, atol=1e-5)
+
+
+def test_dense_ship_floats_schema(quad8):
+    """Dense-path ship_floats: d per producer-clock for push models, 0 for
+    pull-based ssp — the PR 4 accounting, now recorded in the trace."""
+    tr = oracle(quad8, podded(essp(2), 2, **POD), 10, 0)
+    assert (np.asarray(tr.ship_floats) == quad8.dim).all()
+    tr = oracle(quad8, podded(ssp(2), 2, **POD), 10, 0)
+    assert not np.asarray(tr.ship_floats).any()
+
+
+@pytest.mark.parametrize("cfg", [
+    compressed(podded(essp(2), 2, **POD)),
+    compressed(podded(essp(2), 2, **POD), 2, 0.25, "int8"),
+    compressed(podded(ssp(2), 2, **POD), 3, 0.5, "bf16"),
+    compressed(podded(ConsistencyConfig(model="async", staleness=2), 2,
+                      **POD), 2, 0.5),
+], ids=["neutral", "essp-agg2-int8", "ssp-agg3-bf16", "async-agg2"])
+def test_runtime_bit_identical_on_compressed_path(quad8, cfg):
+    """The oracle contract extends to the wire: PSRuntime with a
+    compressed config reproduces the simulator bit for bit (thresholds
+    from gathered full rows, elementwise pack on shards)."""
+    rt = PSRuntime(flat_mesh_for(8))
+    got = rt.run(quad8, cfg, 20, seed=1)
+    assert_bit_identical(got, oracle(quad8, cfg, 20, 1),
+                         context=f"comm {cfg.model}/{cfg.quant}")
+
+
+def test_wired_checkpoint_resume_bit_identical(quad8):
+    """`PSState.comm` (acc/res/xring/base_pod/xbase_pod) rides the same
+    checkpoint contract as the rest of the state: a mid-run save/restore
+    through disk resumes the compressed run bit for bit."""
+    import os
+    import tempfile
+
+    from repro.checkpoint import io as ckpt
+    cfg = compressed(podded(essp(2), 2, **POD), 2, 0.25, "int8")
+    rt = PSRuntime(flat_mesh_for(8))
+    full, _ = rt.run_fn(quad8, cfg, 20).run_from(
+        rt.init_state(quad8, cfg, seed=3), cfg)
+    tr1, mid = rt.run_from(quad8, cfg, 8, rt.init_state(quad8, cfg, seed=3))
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "state.npz")
+        ckpt.save_runtime(path, mid)
+        restored = ckpt.restore_runtime(
+            path, rt.init_state(quad8, cfg, seed=0))
+    tr2, _ = rt.run_from(quad8, cfg, 12, restored)
+    for name in TRACE_FIELDS:
+        if name == "x_final":
+            continue
+        a = np.concatenate([np.asarray(getattr(tr1, name)),
+                            np.asarray(getattr(tr2, name))])
+        np.testing.assert_array_equal(
+            a, np.asarray(getattr(full, name)), err_msg=name)
+    np.testing.assert_array_equal(np.asarray(tr2.x_final),
+                                  np.asarray(full.x_final))
+
+
+def test_comm_knob_changes_reuse_compile(quad8):
+    base = compressed(podded(essp(2), 2, **POD), 2, 0.5).replace(window=10)
+    rt = PSRuntime(flat_mesh_for(8))
+    fn = rt.run_fn(quad8, base, 8)
+    fn(0, base)                                  # warm
+    n0 = trace_count()
+    for cfg in (base.replace(agg_clocks=3, topk_frac=0.25),
+                base.replace(agg_clocks=1, topk_frac=1.0),
+                base.replace(topk_frac=0.1, s_xpod=1)):
+        tr = fn(0, cfg)
+        assert np.isfinite(np.asarray(tr.loss_ref)).all()
+    assert trace_count() == n0                   # knob moves: no retrace
+    # quant is static: a different wire format is a different family
+    assert base.family != base.replace(quant="int8").family
+    with pytest.raises(ValueError):
+        fn(0, podded(essp(2), 2, **POD).replace(window=10))  # substrate off
+
+
+def test_comm_sweep_one_compile_matches_oracle(quad8):
+    """agg_clocks/topk_frac batch through the sweep engine like any other
+    knob: one compile for the grid, each lane bit-identical to standalone
+    simulate."""
+    configs = [compressed(podded(essp(2), 2, **POD), a, t)
+               for a, t in [(1, 1.0), (2, 0.5), (4, 0.25)]]
+    res = sweep(quad8, configs, 12, seeds=1)
+    assert res.n_compiles == 1
+    for i in range(len(configs)):
+        want = jax.jit(lambda c=res.harmonized[i]:
+                       simulate(quad8, c, 12, seed=0))()
+        assert_bit_identical(res.trace(i, 0), want, context=f"sweep[{i}]")
+
+
+# ---------------------------------------------------------------------------
+# config surface
+# ---------------------------------------------------------------------------
+def test_config_guards():
+    with pytest.raises(ValueError):
+        ConsistencyConfig(model="bsp", n_pods=2, wire=True)    # barrier
+    with pytest.raises(ValueError):
+        ConsistencyConfig(model="vap", v0=0.5, n_pods=2, wire=True)
+    with pytest.raises(ValueError):
+        ConsistencyConfig(model="essp", n_pods=1, wire=True)   # no x-wire
+    with pytest.raises(ValueError):
+        ConsistencyConfig(model="essp", n_pods=2, quant="fp4")
+    with pytest.raises(ValueError):
+        ConsistencyConfig(model="essp", n_pods=2, wire=True, agg_clocks=0)
+    with pytest.raises(ValueError):
+        ConsistencyConfig(model="essp", n_pods=2, wire=True, topk_frac=0.0)
+
+
+def test_effective_window_covers_aggregation():
+    base = podded(essp(2), 2, s_xpod=3)
+    assert base.effective_window == 7
+    assert compressed(base, 1).effective_window == 7
+    assert compressed(base, 4).effective_window == 10    # + agg - 1
+    assert compressed(base).family != base.family        # substrate split
+
+
+# ---------------------------------------------------------------------------
+# bytes accounting: reconcile_stats + TimeModel tier
+# ---------------------------------------------------------------------------
+def test_reconcile_stats_wire_accounting(quad8):
+    dense = podded(essp(1), 2, **POD)
+    comp = compressed(dense, agg_clocks=2, topk_frac=0.125, quant="int8")
+    T = 40
+    rec_d = reconcile_stats(oracle(quad8, dense, T, 0), dense, dim=quad8.dim)
+    rec_c = reconcile_stats(oracle(quad8, comp, T, 0), comp, dim=quad8.dim)
+    # dense-eager: the true accounting equals the dense counterfactual
+    assert rec_d["wire_compression"] == pytest.approx(1.0)
+    assert rec_d["dense_equiv_compression"] is not None  # PR 4 ratio kept
+    # compressed: agg=2 halves shipments, topk+int8 shrink each one
+    assert rec_c["wire_floats"] < rec_d["wire_floats"]
+    assert rec_c["wire_compression"] > 4.0
+    # gated dense pulls: one d-float delta per pull event
+    g = podded(ssp(1), 2, **POD)
+    rec_g = reconcile_stats(oracle(quad8, g, T, 0), g, dim=quad8.dim)
+    assert rec_g["wire_floats"] == rec_g["gated_pulls"] * quad8.dim
+
+
+def test_timemodel_xpod_tier(quad8):
+    cfg_d = podded(essp(1), 2, **POD)
+    cfg_c = compressed(cfg_d, agg_clocks=2, topk_frac=0.125, quant="int8")
+    tm = TimeModel(t_comp=0.01, bandwidth_xpod=float(quad8.dim * 4 * 8))
+    tr_d, tr_c = oracle(quad8, cfg_d, 20, 0), oracle(quad8, cfg_c, 20, 0)
+    wall_d = float(tm.wall_time(tr_d, "essp", cfg=cfg_d)[-1])
+    wall_c = float(tm.wall_time(tr_c, "essp", cfg=cfg_c)[-1])
+    assert wall_c < wall_d            # fewer bytes -> cheaper clocks
+    # dense-eager on this thin pipe is bandwidth-bound: wire time floor
+    wire_d = 4.0 * 1 * quad8.dim * quad8.n_workers / tm.bandwidth_xpod
+    assert float(tm.per_clock(tr_d, "essp", cfg=cfg_d)[0].min()) \
+        >= wire_d - 1e-9
+    # without cfg the accounting is the historical single-tier model
+    flat = essp(1)
+    tr_f = oracle(quad8, flat, 10, 0)
+    np.testing.assert_array_equal(
+        np.asarray(tm.wall_time(tr_f, "essp")),
+        np.asarray(tm.wall_time(tr_f, "essp", cfg=flat)))
+
+
+# ---------------------------------------------------------------------------
+# value-bound analogue for async/VAP replica divergence (follow-up (b))
+# ---------------------------------------------------------------------------
+def test_replica_value_divergence_vap_checked(quad8):
+    cfg = podded(vap(0.5, staleness=3), 2, t_net_xpod=6.0)
+    tr = oracle(quad8, cfg, 25, 1)
+    out = replica_value_divergence(tr, cfg)
+    assert out["ok"] is True and out["violations"] == 0
+    assert out["bound_final"] == pytest.approx(2 * 0.5 / np.sqrt(25))
+    # clock bound stays None for the unbounded models
+    assert replica_divergence(tr, cfg)["bound"] is None
+    # negative control: an inflated envelope must be caught
+    bad = dataclasses.replace(tr, intransit_inf=tr.intransit_inf + 10.0)
+    assert replica_value_divergence(bad, cfg)["ok"] is False
+
+
+def test_replica_value_divergence_async_measured_only(quad8):
+    cfg = podded(ConsistencyConfig(model="async", staleness=2), 2, **POD)
+    tr = oracle(quad8, cfg, 20, 0)
+    out = replica_value_divergence(tr, cfg)
+    assert out["ok"] is None and out["bound_final"] is None
+    assert np.isfinite(out["max_envelope"])
+
+
+def test_cross_validate_pods_reports_value_bound(quad8):
+    """`cross_validate_pods` wires the value-bound analogue in for the
+    unbounded-clock models (and the new wire accounting for all)."""
+    from repro.pods import PodsRuntime, cross_validate_pods, \
+        default_pods_mesh
+    n = len(jax.devices())
+    if n < 4 or n % 2:
+        pytest.skip("needs a >=4, even device count for a 2-pod mesh")
+    rt = PodsRuntime(default_pods_mesh(8, n_pods=2))
+    out = cross_validate_pods(
+        make_quad(8), podded(vap(0.5, staleness=3), 2, t_net_xpod=6.0),
+        15, runtime=rt)
+    assert out["ok"], out
+    assert out["replica_value_divergence"]["violations"] == 0
+    assert "wire_floats" in out["reconcile"]

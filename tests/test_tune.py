@@ -229,7 +229,7 @@ def _fake_trace(st):
     z = jnp.zeros(())
     return Trace(loss_ref=z, loss_view=z, staleness=jnp.asarray(st),
                  forced=z, delivered=z, u_l2=z, intransit_inf=z,
-                 views0=None, x_final=z, locals_final=None)
+                 ship_floats=z, views0=None, x_final=z, locals_final=None)
 
 
 def test_summary_skips_warmup_clocks():
