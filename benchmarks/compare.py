@@ -1,0 +1,138 @@
+"""Perf-trajectory gate: compare two directories of BENCH_*.json records.
+
+The scheduled CI lane saves machine-readable perf records
+(``common.save_bench_json``: ``{"bench", "schema", "n_devices",
+"metrics", "claim"}``) as a build artifact.  This tool diffs the current
+run against the previous artifact and **exits nonzero when any metric
+regresses by more than the threshold** (default 15%) or a claim that
+passed before now trips — the trajectory must not silently decay.
+
+Direction is inferred from the metric name: throughput-flavored metrics
+(``clocks_per_sec``, ``speedup``, ``compression``, ``reduction``,
+``throughput``) regress downward, everything else (seconds, clocks,
+floats-on-wire) regresses upward.  ``None`` metrics (e.g. a threshold
+never reached) and metrics missing from the baseline (new benchmarks) are
+reported but never gate; a current ``None`` where the baseline had a
+value IS a regression (the run stopped reaching its threshold).  A
+missing baseline directory or file passes trivially — the first run of a
+new lane seeds the trajectory.
+
+Usage: ``python -m benchmarks.compare BASELINE_DIR CURRENT_DIR
+[--threshold 0.15]``.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+HIGHER_BETTER = ("clocks_per_sec", "speedup", "compression", "reduction",
+                 "throughput")
+
+
+def _higher_better(name: str) -> bool:
+    return any(tok in name for tok in HIGHER_BETTER)
+
+
+def _load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def _claim_bools(claim, prefix="") -> dict:
+    out = {}
+    if isinstance(claim, dict):
+        for k, v in claim.items():
+            out.update(_claim_bools(v, f"{prefix}.{k}" if prefix else str(k)))
+    elif isinstance(claim, bool):
+        out[prefix] = claim
+    return out
+
+
+def compare_bench(base: dict, cur: dict, threshold: float) -> dict:
+    """Diff one benchmark record pair -> {rows, regressions}."""
+    rows, regressions = [], []
+    bm, cm = base.get("metrics", {}), cur.get("metrics", {})
+    for name in sorted(cm):
+        b, c = bm.get(name), cm[name]
+        if name not in bm:
+            rows.append((name, b, c, None, "new"))
+            continue
+        if b is None and c is None:
+            rows.append((name, b, c, None, "n/a"))
+            continue
+        if c is None:
+            rows.append((name, b, c, None, "REGRESSED (lost threshold)"))
+            regressions.append(f"{name}: {b} -> None")
+            continue
+        if b is None or not isinstance(b, (int, float)) \
+                or not isinstance(c, (int, float)):
+            rows.append((name, b, c, None, "seeded"))
+            continue
+        if b == 0:
+            rows.append((name, b, c, None, "zero-baseline"))
+            continue
+        rel = (c - b) / abs(b)
+        bad = -rel if _higher_better(name) else rel
+        status = "ok"
+        if bad > threshold:
+            status = f"REGRESSED ({bad:+.1%})"
+            regressions.append(f"{name}: {b:g} -> {c:g} ({rel:+.1%})")
+        rows.append((name, b, c, rel, status))
+    cb, bb = (_claim_bools(cur.get("claim", {})),
+              _claim_bools(base.get("claim", {})))
+    for name, was in sorted(bb.items()):
+        now = cb.get(name)
+        if was and now is False:
+            regressions.append(f"claim {name}: True -> False")
+            rows.append((f"claim:{name}", was, now, None, "REGRESSED"))
+    return {"rows": rows, "regressions": regressions}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline", help="directory with the previous run's "
+                                     "BENCH_*.json records")
+    ap.add_argument("current", help="directory with this run's records")
+    ap.add_argument("--threshold", type=float, default=0.15,
+                    help="relative regression gate (default 0.15 = 15%%)")
+    args = ap.parse_args(argv)
+
+    cur_files = sorted(glob.glob(os.path.join(args.current, "BENCH_*.json")))
+    if not cur_files:
+        print(f"no BENCH_*.json in {args.current}", file=sys.stderr)
+        return 2
+    if not os.path.isdir(args.baseline):
+        print(f"no baseline directory {args.baseline} — seeding the "
+              f"trajectory, nothing to gate")
+        return 0
+
+    all_regressions = []
+    for path in cur_files:
+        name = os.path.basename(path)
+        base_path = os.path.join(args.baseline, name)
+        cur = _load(path)
+        print(f"\n== {cur.get('bench', name)} ==")
+        if not os.path.exists(base_path):
+            print("   (no baseline record — seeding)")
+            continue
+        res = compare_bench(_load(base_path), cur, args.threshold)
+        for mname, b, c, rel, status in res["rows"]:
+            delta = "" if rel is None else f" {rel:+.1%}"
+            print(f"   {mname}: {b} -> {c}{delta}  [{status}]")
+        all_regressions += [f"{name}: {r}" for r in res["regressions"]]
+
+    if all_regressions:
+        print(f"\n{len(all_regressions)} regression(s) past "
+              f"{args.threshold:.0%}:", file=sys.stderr)
+        for r in all_regressions:
+            print(f"  {r}", file=sys.stderr)
+        return 1
+    print(f"\nno regressions past {args.threshold:.0%}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -18,9 +18,24 @@ from __future__ import annotations
 import argparse
 import sys
 import time
+import traceback
 
 
-def main(argv=None) -> None:
+def failed_claims(claim, prefix="") -> list:
+    """Recursively collect the paths of boolean claim leaves that are
+    False.  Non-boolean leaves (counts, seconds, ratios) are context, not
+    gates; every boolean in a claim dict is positively phrased ("pass",
+    "ok", "..._stable") by convention, so False means the claim tripped."""
+    out = []
+    if isinstance(claim, dict):
+        for k, v in claim.items():
+            out += failed_claims(v, f"{prefix}.{k}" if prefix else str(k))
+    elif isinstance(claim, bool) and not claim:
+        out.append(prefix)
+    return out
+
+
+def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--json-dir", default=None, metavar="DIR",
                     help="directory for all JSON artifacts (per-suite "
@@ -37,32 +52,59 @@ def main(argv=None) -> None:
     if args.json_dir:
         common.set_results_dir(args.json_dir)
 
-    claims = {}
+    claims, errors = {}, {}
+
+    def suite(name, fn):
+        """Run one suite; a crash is recorded (and fails the harness) but
+        never silences the remaining suites' rows and artifacts."""
+        try:
+            claims[name] = fn()
+        except Exception:
+            errors[name] = traceback.format_exc()
+            print(f"\n!! suite {name} crashed:\n{errors[name]}",
+                  file=sys.stderr)
+
     print("name,us_per_call,derived")
-    claims["C1_staleness_profile"] = staleness_profile.run()["claim_C1"]
-    claims["C2_mf"] = mf_convergence.run()["claim_C2"]
-    claims["C2_lda"] = lda_convergence.run()["claim_C2_lda"]
-    claims["C6_comm_comp"] = comm_comp.run()["claim_C6"]
-    claims["C3_robustness"] = robustness.run()["claim_C3"]
-    claims["stragglers"] = stragglers.run()["claim"]
-    claims["lm_consistency_pod"] = lm_consistency.run()["claim"]
-    theory = theory_validation.run()
-    claims["C4_variance"] = theory["variance"]
-    claims["C5_vap"] = theory["vap"]
-    sb = sweep_bench.run()
-    claims["sweep_engine"] = {"speedup": round(sb["speedup"], 1),
-                              "pass_3x": sb["pass_3x"]}
-    claims["autotune"] = autotune_bench.run()["claim"]
-    claims["psrun_eager_beats_lazy"] = psrun_bench.run()["claim"]
-    claims["pods_eager_beats_gated"] = pods_bench.run()["claim"]
-    claims["comm_substrate"] = comm_bench.run()["claim"]
-    kernels_bench.run()
+    suite("C1_staleness_profile", lambda: staleness_profile.run()["claim_C1"])
+    suite("C2_mf", lambda: mf_convergence.run()["claim_C2"])
+    suite("C2_lda", lambda: lda_convergence.run()["claim_C2_lda"])
+    suite("C6_comm_comp", lambda: comm_comp.run()["claim_C6"])
+    suite("C3_robustness", lambda: robustness.run()["claim_C3"])
+    suite("stragglers", lambda: stragglers.run()["claim"])
+    suite("lm_consistency_pod", lambda: lm_consistency.run()["claim"])
+
+    def _theory():
+        theory = theory_validation.run()
+        claims["C4_variance"] = theory["variance"]
+        return theory["vap"]
+
+    suite("C5_vap", _theory)
+
+    def _sweep():
+        sb = sweep_bench.run()
+        return {"speedup": round(sb["speedup"], 1), "pass_3x": sb["pass_3x"]}
+
+    suite("sweep_engine", _sweep)
+    suite("autotune", lambda: autotune_bench.run()["claim"])
+    suite("psrun_eager_beats_lazy", lambda: psrun_bench.run()["claim"])
+    suite("pods_eager_beats_gated", lambda: pods_bench.run()["claim"])
+    suite("comm_substrate", lambda: comm_bench.run()["claim"])
+    suite("kernels", lambda: kernels_bench.run())
 
     print("\n=== paper-fidelity claim summary ===")
     for k, v in claims.items():
         print(f"{k}: {v}")
+    tripped = failed_claims(claims)
+    status = 0
+    if tripped:
+        print(f"\nFAILED claims: {', '.join(tripped)}", file=sys.stderr)
+        status = 1
+    if errors:
+        print(f"FAILED suites: {', '.join(errors)}", file=sys.stderr)
+        status = 1
     print(f"\ntotal bench wall: {time.time()-t0:.1f}s")
+    return status
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

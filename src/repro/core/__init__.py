@@ -1,6 +1,7 @@
 """The paper's contribution: PS consistency models + ESSPTable simulator."""
 from .consistency import (ConsistencyConfig, bsp, ssp, essp, vap, podded,
                           compressed, MODELS)
+from .delays import ChurnSchedule, make_churn, no_churn
 from .ps import PSApp, Trace, simulate, simulate_jit
 from .sweep import SweepResult, stack_configs, sweep
 from .timemodel import TimeModel
@@ -8,6 +9,7 @@ from . import staleness, theory, timemodel, tune
 
 __all__ = ["ConsistencyConfig", "bsp", "ssp", "essp", "vap", "podded",
            "compressed", "MODELS",
+           "ChurnSchedule", "make_churn", "no_churn",
            "PSApp", "Trace", "simulate", "simulate_jit",
            "SweepResult", "stack_configs", "sweep", "TimeModel",
            "staleness", "theory", "timemodel", "tune"]

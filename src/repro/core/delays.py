@@ -26,15 +26,150 @@ network-tier ratios exactly like any other knob.  At the defaults
 single-tier model — the same uniforms compared against the same
 probabilities.
 
+Fleet churn
+-----------
+:class:`ChurnSchedule` makes the fleet itself a traced axis: a per-clock
+worker liveness mask (worker outages, whole-pod drop/rejoin windows), an
+optional mid-run straggler-*regime* shift (per-clock ``straggler_workers``
+/ ``straggler_rate`` arrays overriding the config's static knobs), and an
+optional per-clock ``bandwidth_xpod`` multiplier consumed only by
+`core.timemodel.TimeModel`.  Both engines (`core.ps.simulate` and
+`psrun.runtime`) accept a schedule and honor it identically: dead workers
+push nothing (their updates are zeroed before entering the ring), their
+reader rows of ``cview`` freeze, and their in-flight updates either keep
+draining to survivors (the default) or drop at death
+(``drop_inflight=True``).  The schedule is an ordinary pytree whose arrays
+are traced jit arguments — different schedules of the same shape reuse the
+compiled program — and indexing is by *absolute* clock, so a
+``run_from`` segment sees exactly the slice the uninterrupted run would.
+
 Everything is driven by the ConsistencyConfig so experiment sweeps stay
-declarative (see benchmarks/stragglers.py, benchmarks/pods_bench.py).
+declarative (see benchmarks/stragglers.py, benchmarks/pods_bench.py,
+benchmarks/robustness.py for churn scenarios).
 """
 from __future__ import annotations
 
+from dataclasses import dataclass, field
+from typing import Any
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .consistency import ConsistencyConfig
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class ChurnSchedule:
+    """Per-clock fleet churn, indexed by absolute clock.
+
+    ``live[t, p]`` is worker ``p``'s liveness at clock ``t`` (clocks past
+    the schedule's horizon clamp to the last row).  The optional regime
+    arrays override the config's static straggler knobs per clock; the
+    optional ``bw_scale`` multiplies ``TimeModel.bandwidth_xpod`` per
+    clock (a transient cross-pod bandwidth crunch) and never touches the
+    traces.  ``drop_inflight`` selects the in-flight policy at death:
+    False (default) lets a dead worker's already-produced updates keep
+    draining to survivors; True drops its ring rows (and, under the comm
+    substrate, its unshipped accumulator/residual/wire rows) the clock it
+    dies.
+    """
+
+    live: jax.Array                 # [T, P] bool worker liveness per clock
+    straggler_workers: Any = None   # [T] i32 per-clock slow-worker count
+    straggler_rate: Any = None      # [T] f32 per-clock slow-worker rate
+    bw_scale: Any = None            # [T] f32 bandwidth_xpod multiplier
+    #                                 (TimeModel only — not in the traces)
+    drop_inflight: bool = field(default=False, metadata=dict(static=True))
+
+    @property
+    def n_clocks(self) -> int:
+        return self.live.shape[0]
+
+    @property
+    def n_workers(self) -> int:
+        return self.live.shape[1]
+
+
+def no_churn(n_clocks: int, P: int) -> ChurnSchedule:
+    """The neutral schedule: everyone live, no regime shift.  Running with
+    it is bit-identical to running with no schedule at all (pinned by
+    ``tests/test_churn.py``)."""
+    return ChurnSchedule(live=jnp.ones((n_clocks, P), bool))
+
+
+def make_churn(n_clocks: int, P: int, *, n_pods: int = 1,
+               worker_outages=(), pod_outages=(), regime_shift=None,
+               bw_drop=None, drop_inflight: bool = False) -> ChurnSchedule:
+    """Build a `ChurnSchedule` from scenario primitives.
+
+    - ``worker_outages``: ``(worker, t0, t1)`` triples — worker dead on
+      clocks ``[t0, t1)``;
+    - ``pod_outages``: ``(pod, t0, t1)`` triples — every worker of the pod
+      (contiguous blocks, `pod_of`) dead on ``[t0, t1)``;
+    - ``regime_shift``: ``(clock, n_workers, rate)`` — from ``clock`` on,
+      the first ``n_workers`` producers push at ``rate`` of nominal
+      (before it: no stragglers — pass explicit arrays for a different
+      baseline regime);
+    - ``bw_drop``: ``(t0, t1, scale)`` — cross-pod bandwidth multiplied by
+      ``scale`` on ``[t0, t1)`` (TimeModel only).
+    """
+    live = np.ones((n_clocks, P), bool)
+    for w, t0, t1 in worker_outages:
+        live[t0:t1, w] = False
+    pods = np.asarray(pod_of(P, n_pods))
+    for g, t0, t1 in pod_outages:
+        live[t0:t1, pods == g] = False
+    sw = sr = bws = None
+    if regime_shift is not None:
+        t0, n_w, rate = regime_shift
+        sw = np.zeros(n_clocks, np.int32)
+        sw[t0:] = n_w
+        sr = np.ones(n_clocks, np.float32)
+        sr[t0:] = rate
+    if bw_drop is not None:
+        t0, t1, scale = bw_drop
+        bws = np.ones(n_clocks, np.float32)
+        bws[t0:t1] = scale
+    return ChurnSchedule(
+        live=jnp.asarray(live),
+        straggler_workers=None if sw is None else jnp.asarray(sw),
+        straggler_rate=None if sr is None else jnp.asarray(sr),
+        bw_scale=None if bws is None else jnp.asarray(bws),
+        drop_inflight=drop_inflight)
+
+
+def churn_live(schedule: ChurnSchedule, c):
+    """``(live_now[P], died[P])`` at (possibly traced) absolute clock ``c``.
+
+    ``died`` marks workers whose outage *starts* this clock (live at
+    ``c-1``, dead at ``c``) — the edge the ``drop_inflight`` policy acts
+    on.  Clocks beyond the schedule clamp to its last row, so a short
+    schedule extends its final fleet state indefinitely.
+    """
+    T = schedule.live.shape[0]
+    t = jnp.clip(c, 0, T - 1)
+    live_now = schedule.live[t]
+    prev = jnp.where(c > 0, schedule.live[jnp.clip(c - 1, 0, T - 1)], True)
+    died = prev & ~live_now
+    return live_now, died
+
+
+def churn_rates(cfg: ConsistencyConfig, schedule: ChurnSchedule | None,
+                P: int, c) -> jax.Array | None:
+    """Per-producer rate multipliers at clock ``c`` under the schedule's
+    straggler regime, or ``None`` when the schedule carries no regime
+    arrays (callers then fall back to the config's static
+    :func:`worker_rates` — the bit-identical default path)."""
+    if schedule is None or schedule.straggler_workers is None:
+        return None
+    T = schedule.straggler_workers.shape[0]
+    t = jnp.clip(c, 0, T - 1)
+    n = schedule.straggler_workers[t]
+    rate = schedule.straggler_rate[t].astype(jnp.float32)
+    ids = jnp.arange(P)
+    return jnp.where(ids < n, rate, 1.0)
 
 
 def pod_of(P: int, n_pods: int) -> jax.Array:
@@ -90,14 +225,18 @@ def worker_rates(cfg: ConsistencyConfig, P: int) -> jax.Array:
     return jnp.where(ids < n, jnp.asarray(rate, jnp.float32), 1.0)
 
 
-def channel_push_prob(cfg: ConsistencyConfig, P: int) -> jax.Array:
+def channel_push_prob(cfg: ConsistencyConfig, P: int,
+                      rates=None) -> jax.Array:
     """Per-channel one-clock delivery probability [reader, producer].
 
     ``push_prob x producer_rate``, divided by the channel's tier delay
     (``t_net_intra`` intra-pod, ``t_net_xpod`` cross-pod).  Division by the
     default delay 1.0 is exact, keeping the flat model bit-identical.
+    ``rates`` overrides the config-derived producer multipliers (a churn
+    schedule's per-clock straggler regime, :func:`churn_rates`).
     """
-    rates = worker_rates(cfg, P)
+    if rates is None:
+        rates = worker_rates(cfg, P)
     p = cfg.push_prob * rates[None, :]                    # [1, producer]
     tier_i = 1.0 / jnp.maximum(jnp.asarray(cfg.t_net_intra, jnp.float32), 1.0)
     tier_x = 1.0 / jnp.maximum(jnp.asarray(cfg.t_net_xpod, jnp.float32), 1.0)
@@ -105,16 +244,19 @@ def channel_push_prob(cfg: ConsistencyConfig, P: int) -> jax.Array:
     return p * jnp.where(same, tier_i, tier_x)            # [reader, producer]
 
 
-def delivery_matrix(rng, cfg: ConsistencyConfig, P: int) -> jax.Array:
+def delivery_matrix(rng, cfg: ConsistencyConfig, P: int,
+                    rates=None) -> jax.Array:
     """Sample the end-of-clock delivery matrix [P(reader), P(producer)].
 
     A channel delivers this clock iff (a) the producer's push crosses the
     channel's network tier (Bernoulli(push_prob x producer_rate / t_tier))
     and (b) the channel is not transiently congested
-    (Bernoulli(straggler_prob) blocks it).
+    (Bernoulli(straggler_prob) blocks it).  ``rates`` threads a churn
+    schedule's per-clock straggler regime through (same uniforms, shifted
+    thresholds — the RNG stream is schedule-independent).
     """
     k1, k2 = jax.random.split(rng)
-    p = channel_push_prob(cfg, P)
+    p = channel_push_prob(cfg, P, rates)
     pushed = jax.random.uniform(k1, (P, P)) < p
     congested = jax.random.bernoulli(k2, cfg.straggler_prob, (P, P))
     return pushed & ~congested

@@ -123,8 +123,8 @@ from ..comm import substrate as comm
 from ..kernels import ops
 from ..kernels.ref import RING_EMPTY, RING_INVALID
 from .consistency import ConsistencyConfig
-from .delays import delivery_matrix, pod_of, same_pod_mask, \
-    staleness_bound_matrix
+from .delays import ChurnSchedule, churn_live, churn_rates, \
+    delivery_matrix, pod_of, same_pod_mask, staleness_bound_matrix
 
 
 @dataclass
@@ -172,14 +172,19 @@ class Trace:
     #                            indices at shipment clocks, 0 otherwise;
     #                            dense path: d for push models, 0 for
     #                            pull-based ssp) — see repro.comm
+    live: jax.Array            # [T, P] worker liveness per clock (all True
+    #                            without a ChurnSchedule): dead workers
+    #                            push nothing, their reader rows freeze —
+    #                            consumers must re-derive staleness claims
+    #                            over the live set (psrun.validate)
     views0: jax.Array | None   # [T, d] worker-0 views (if record_views)
     x_final: jax.Array         # [d] final reference parameters
     locals_final: Any          # final worker-local state
 
 
-def _delivery(rng, cfg: ConsistencyConfig, P: int):
+def _delivery(rng, cfg: ConsistencyConfig, P: int, rates=None):
     """Sample the end-of-clock delivery matrix (see core/delays.py)."""
-    return delivery_matrix(rng, cfg, P)
+    return delivery_matrix(rng, cfg, P, rates)
 
 
 def enforce_vap(cfg: ConsistencyConfig, c, cview, norms, W: int):
@@ -209,11 +214,28 @@ def enforce_vap(cfg: ConsistencyConfig, c, cview, norms, W: int):
 
 
 def simulate(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
-             seed=0, record_views: bool = False) -> Trace:
-    """Run ``n_clocks`` of the app under the given consistency model."""
+             seed=0, record_views: bool = False,
+             schedule: ChurnSchedule | None = None) -> Trace:
+    """Run ``n_clocks`` of the app under the given consistency model.
+
+    ``schedule`` (a `core.delays.ChurnSchedule`) makes the fleet churn:
+    dead workers run no update (their pushes are zeroed before entering
+    the ring, their worker-local state and reader rows of ``cview``
+    freeze, and — under the comm substrate — they ship nothing), while the
+    RNG stream, delivery sampling, and every survivor channel stay exactly
+    the no-churn stream: survivors' floats are bit-identical between a
+    schedule and its all-live restriction wherever no dead content flows.
+    A rejoining worker trips the SSP/ESSP bound on its first read and
+    catches up through one forced refresh burst, so the (re-derived)
+    staleness contract over *live* readers holds unconditionally.
+    """
     P, d = app.n_workers, app.dim
     W = cfg.effective_window
     f32 = jnp.float32
+    churned = schedule is not None
+    if churned and schedule.live.shape[1] != P:
+        raise ValueError(f"schedule has {schedule.live.shape[1]} workers, "
+                         f"app has {P}")
     # Static: route cross-pod shipment through the comm substrate
     # (k-clock aggregation + sparse/quantized wire with error feedback —
     # see repro.comm).  Off (the default) is byte-identical to the
@@ -247,6 +269,25 @@ def simulate(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
         else:
             base, uring, uclock, cview, local, rng = carry
         rng, k_upd, k_net = jax.random.split(rng, 3)
+
+        if churned:
+            live_now, died = churn_live(schedule, c)        # [P], [P]
+            rates = churn_rates(cfg, schedule, P, c)
+            if schedule.drop_inflight:
+                # drop policy: a worker dying this clock takes its
+                # in-flight (and, wired, unshipped) mass with it — the
+                # reference sequence loses those updates too.
+                keep = ~died
+                uring = jnp.where(keep[None, :, None], uring, 0.0)
+                if wired:
+                    cst = dict(cst,
+                               acc=jnp.where(keep[:, None], cst["acc"], 0.0),
+                               res=jnp.where(keep[:, None], cst["res"], 0.0),
+                               xring=jnp.where(keep[None, :, None],
+                                               cst["xring"], 0.0))
+            cview_pre = cview
+        else:
+            rates = None
 
         # Per-producer suffix-aggregate inf-norms of the newest k clocks
         # (kernels/ps_view.py): drives both VAP enforcement and the
@@ -282,6 +323,13 @@ def simulate(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
         if cfg.read_my_writes:
             eye = jnp.eye(P, dtype=bool)
             cview = jnp.where(eye, c - 1, cview)
+
+        if churned:
+            # dead readers neither fetch nor advance: their cview rows
+            # freeze at death, which is what trips the bound (one forced
+            # burst) on their first read back — the catch-up mechanism.
+            forced = forced & live_now[:, None]
+            cview = jnp.where(live_now[:, None], cview, cview_pre)
 
         staleness = cview - c                               # [P, P]
 
@@ -324,8 +372,20 @@ def simulate(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
 
         # --- 3. worker computation ----------------------------------------
         upd_keys = jax.random.split(k_upd, P)
-        u, local = vmapped_update(views, local, worker_ids, c, upd_keys)
+        u, local_new = vmapped_update(views, local, worker_ids, c, upd_keys)
         u = u.astype(f32)
+        if churned:
+            # dead workers push nothing and their local state freezes;
+            # the update still *runs* (vmap has no ragged lanes) but its
+            # output is discarded, so survivor lanes are untouched.
+            u = jnp.where(live_now[:, None], u, 0.0)
+            local = jax.tree_util.tree_map(
+                lambda new, old: jnp.where(
+                    live_now.reshape((P,) + (1,) * (new.ndim - 1)),
+                    new, old),
+                local_new, local)
+        else:
+            local = local_new
 
         # --- 4. commit to server: fold oldest slot, write newest ----------
         slot = jnp.mod(c, W)
@@ -353,25 +413,48 @@ def simulate(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
             wire_u, resid = ops.delta_pack(delta, thresh, scale, cfg.quant)
             nnz = comm.selected_count(delta, thresh)
             ship = comm.ship_now(c, cfg.agg_clocks)     # traced bool
-            wire_u = jnp.where(ship, wire_u, jnp.zeros_like(wire_u))
+            if churned:
+                # dead producers hold their shipment: acc/res keep the
+                # unshipped mass (drain policy) and release it at the
+                # first boundary after rejoin — catching up through the
+                # wire ring.
+                ship = ship & live_now                  # [P]
+                ship_b = ship[:, None]
+            else:
+                ship_b = ship
+            wire_u = jnp.where(ship_b, wire_u, jnp.zeros_like(wire_u))
             cst = dict(cst,
-                       acc=jnp.where(ship, jnp.zeros_like(acc), acc),
-                       res=jnp.where(ship, resid, cst["res"]),
+                       acc=jnp.where(ship_b, jnp.zeros_like(acc), acc),
+                       res=jnp.where(ship_b, resid, cst["res"]),
                        xring=cst["xring"].at[slot].set(wire_u))
             ship_floats = jnp.where(
                 ship, comm.wire_floats(nnz, d, cfg.quant),
                 jnp.zeros((P,), f32))
         else:
             ship_floats = comm.dense_ship_floats(cfg.model, P, d)
+            if churned:
+                ship_floats = jnp.where(live_now, ship_floats, 0.0)
 
         # --- 5. end-of-clock delivery (affects reads at c+1) --------------
         if cfg.model == "bsp":
             delivered = jnp.ones((P, P), bool)
-            cview = jnp.full_like(cview, c)
+            if churned:
+                # the barrier drains to live readers only; dead rows stay
+                # frozen (and catch up through the barrier on rejoin)
+                delivered = delivered & live_now[:, None]
+                cview = jnp.where(live_now[:, None],
+                                  jnp.full_like(cview, c), cview)
+            else:
+                cview = jnp.full_like(cview, c)
         elif cfg.model == "ssp":
             delivered = jnp.zeros((P, P), bool)   # pull-based: no pushes
         else:  # essp / async / vap: delay-driven eager delivery
-            delivered = _delivery(k_net, cfg, P)
+            delivered = _delivery(k_net, cfg, P, rates)
+            if churned:
+                # pushes to dead readers are lost (their caches are gone);
+                # the sampling itself is unmasked so survivor channels see
+                # the identical RNG draws with or without churn.
+                delivered = delivered & live_now[:, None]
             if wired:
                 # a cross-pod delivery carries the latest *shipment*, so
                 # visibility advances only to the aggregation boundary
@@ -395,7 +478,8 @@ def simulate(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
         out = dict(loss_ref=loss_ref, loss_view=loss_view,
                    staleness=staleness, forced=forced, delivered=delivered,
                    u_l2=jnp.linalg.norm(u, axis=-1),
-                   intransit_inf=intransit_inf, ship_floats=ship_floats)
+                   intransit_inf=intransit_inf, ship_floats=ship_floats,
+                   live=live_now if churned else jnp.ones((P,), bool))
         if record_views:
             out["views0"] = views[0]
         if wired:
@@ -419,11 +503,21 @@ def simulate(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
         staleness=ys["staleness"], forced=ys["forced"],
         delivered=ys["delivered"], u_l2=ys["u_l2"],
         intransit_inf=ys["intransit_inf"], ship_floats=ys["ship_floats"],
-        views0=ys.get("views0"), x_final=x_final, locals_final=local)
+        live=ys["live"], views0=ys.get("views0"), x_final=x_final,
+        locals_final=local)
 
 
 def simulate_jit(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
-                 seed=0, record_views: bool = False) -> Trace:
-    """jit-compiled run; ``seed`` may be a traced int (vmap over seeds)."""
-    fn = jax.jit(lambda sd: simulate(app, cfg, n_clocks, sd, record_views))
-    return fn(jnp.asarray(seed, jnp.uint32))
+                 seed=0, record_views: bool = False,
+                 schedule: ChurnSchedule | None = None) -> Trace:
+    """jit-compiled run; ``seed`` may be a traced int (vmap over seeds).
+
+    The schedule's arrays enter as jit arguments, so re-running with a
+    different same-shape schedule reuses the compiled program."""
+    if schedule is None:
+        fn = jax.jit(
+            lambda sd: simulate(app, cfg, n_clocks, sd, record_views))
+        return fn(jnp.asarray(seed, jnp.uint32))
+    fn = jax.jit(lambda sd, sch: simulate(app, cfg, n_clocks, sd,
+                                          record_views, schedule=sch))
+    return fn(jnp.asarray(seed, jnp.uint32), schedule)

@@ -102,7 +102,8 @@ class TimeModel:
         return self.t_comp * jnp.exp(sig * z - 0.5 * sig * sig)
 
     # ------------------------------------------------------------- traced
-    def per_clock(self, trace: Trace, model: str, fold=(), cfg=None):
+    def per_clock(self, trace: Trace, model: str, fold=(), cfg=None,
+                  schedule=None):
         """Returns (wall[T], comp[T], comm[T]) per-clock seconds (traced).
 
         ``cfg`` (a hierarchical `ConsistencyConfig`, ``n_pods > 1``)
@@ -111,24 +112,44 @@ class TimeModel:
         cross-pod shipments (``Trace.ship_floats``) need on
         ``bandwidth_xpod`` (see module doc).  Without it the accounting
         is exactly the historical single-tier model.
+
+        Churn-aware: dead workers (``Trace.live``) draw no compute, so
+        they leave the slowest-worker max — the fleet genuinely shrinks —
+        while a rejoiner's catch-up cost is charged automatically through
+        its forced-refresh burst at the tiered rates (the rejoin gap in
+        seconds).  A ``schedule`` with ``bw_scale`` scales
+        ``bandwidth_xpod`` per clock (transient cross-pod crunches): both
+        the wire floor and cross-pod fetches ride the scaled tier.
         """
         forced = jnp.asarray(trace.forced)           # [T, P, P] sync fetches
         T, P, _ = forced.shape
         comp = self.comp_draws((T, P), fold)         # [T, P]
+        live = getattr(trace, "live", None)
+        if live is not None:
+            # all-ones without churn: where(True, comp, 0) == comp exactly,
+            # so pre-churn callers get bit-identical numbers
+            comp = jnp.where(jnp.asarray(live).astype(bool), comp, 0.0)
 
         xfer = self.bytes_per_channel / self.bandwidth
         tiered = cfg is not None and cfg.n_pods > 1
         if tiered:
-            xfer_x = self.bytes_per_channel / self.bandwidth_xpod
+            bw_x = self.bandwidth_xpod               # scalar or [T] scaled
+            if schedule is not None and schedule.bw_scale is not None:
+                Ts = schedule.bw_scale.shape[0]
+                idx = jnp.clip(jnp.arange(T), 0, Ts - 1)
+                bw_x = bw_x * jnp.maximum(
+                    jnp.asarray(schedule.bw_scale)[idx], 1e-6)
+            xfer_x = jnp.asarray(self.bytes_per_channel / bw_x)
+            xfer_x_col = xfer_x[:, None] if xfer_x.ndim else xfer_x
             same = same_pod_mask(P, cfg.n_pods)[None, :, :]
             f = forced.astype(jnp.float32)
             sync = ((f * same).sum(axis=2) * (self.rtt + xfer)
-                    + (f * ~same).sum(axis=2) * (self.rtt + xfer_x))
+                    + (f * ~same).sum(axis=2) * (self.rtt + xfer_x_col))
             # background shipments: bytes each producer put on the wire,
             # to every other pod's replica, through the thin tier
             wire = (4.0 * (cfg.n_pods - 1)
                     * jnp.asarray(trace.ship_floats).sum(axis=1)
-                    / self.bandwidth_xpod)           # [T]
+                    / bw_x)                          # [T]
         else:
             sync = forced.astype(jnp.float32).sum(axis=2) * (self.rtt + xfer)
 

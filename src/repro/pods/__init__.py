@@ -27,6 +27,7 @@ simulator, VAP agrees to a strict ulp budget with exactly-equal decisions
 — `pods.validate.cross_validate_pods`, enforced by ``tests/test_pods.py``
 under the CI 16-device lane.
 """
+from .elastic import concat_traces, run_with_pod_rejoin, splice_rejoin_state
 from .reconcile import (reconcile_stats, replica_clock, replica_divergence,
                         replica_value_divergence, xpod_channel_mask)
 from .runtime import PodsRuntime, default_pods_mesh
@@ -35,4 +36,5 @@ from .validate import cross_validate_pods
 __all__ = ["PodsRuntime", "default_pods_mesh", "cross_validate_pods",
            "replica_clock", "replica_divergence",
            "replica_value_divergence", "reconcile_stats",
-           "xpod_channel_mask"]
+           "xpod_channel_mask",
+           "run_with_pod_rejoin", "splice_rejoin_state", "concat_traces"]

@@ -1,0 +1,203 @@
+"""Elastic pod membership: drop a pod mid-run, rejoin it from a checkpoint.
+
+The churn tentpole makes worker/pod liveness a traced axis of the engines
+(`core.delays.ChurnSchedule`); this module runs the *operational* story on
+top of it — what a real deployment does when a pod dies and later comes
+back:
+
+1. run to ``drop_clock`` and snapshot the `PSState` via
+   ``checkpoint.io.save_runtime`` (the pod's last consistent state);
+2. run the outage window ``[drop_clock, rejoin_clock)`` on the survivor
+   set (the schedule marks the pod dead: its workers push nothing, their
+   reader rows freeze, their queued comm shipments drain per policy);
+3. at ``rejoin_clock``, restore the checkpoint and **splice** the dead
+   pod's frozen leaves — its ``cview`` reader rows, its workers' local
+   state, and (drain policy, wired) its producers' unshipped ``acc``/
+   ``res`` mass — into the survivors' live state, then continue.
+
+The correctness claim is sharp: the engines froze *exactly* what the
+checkpoint captured, so the spliced state equals the live state **bit for
+bit** (asserted leaf by leaf), the concatenated three-segment trace equals
+the uninterrupted churned run (schedules index by absolute clock), and the
+rejoined pod catches up through the normal machinery — its first read
+trips the two-tier staleness bound, the enforcement step answers with a
+forced-refresh burst (charged in seconds by `core.timemodel.TimeModel`
+through the tiered fetch rates), and under the comm substrate its held
+mass ships at the first aggregation boundary after rejoin.  What does
+*not* come from the checkpoint is equally deliberate: ring slots of dead
+producers keep advancing (overwritten with zeroed pushes), so ``uring``/
+``xring``/``base``/``rng``/``clock`` always come from the live survivors.
+
+`tests/test_churn.py` pins all of it; `benchmarks/robustness.py` measures
+the recovery cost per consistency family.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+
+import jax
+import numpy as np
+
+from ..checkpoint import io as ckpt_io
+from ..core.consistency import ConsistencyConfig
+from ..core.delays import ChurnSchedule, make_churn, pod_of
+from ..core.ps import PSApp, Trace
+from ..psrun.validate import check_staleness_bound
+from .runtime import PodsRuntime
+
+# Time-axis Trace fields, in dataclass order (views0 handled separately).
+_TIME_FIELDS = ("loss_ref", "loss_view", "staleness", "forced", "delivered",
+                "u_l2", "intransit_inf", "ship_floats", "live")
+
+
+def concat_traces(traces) -> Trace:
+    """Concatenate per-segment `Trace`s along the clock axis.
+
+    Final-state fields (``x_final``, ``locals_final``) come from the last
+    segment; ``views0`` concatenates when every segment recorded it.
+    """
+    traces = list(traces)
+    fields = {name: np.concatenate(
+        [np.asarray(getattr(t, name)) for t in traces], axis=0)
+        for name in _TIME_FIELDS}
+    views0 = None
+    if all(t.views0 is not None for t in traces):
+        views0 = np.concatenate([np.asarray(t.views0) for t in traces],
+                                axis=0)
+    last = traces[-1]
+    return Trace(views0=views0, x_final=np.asarray(last.x_final),
+                 locals_final=jax.tree_util.tree_map(np.asarray,
+                                                     last.locals_final),
+                 **fields)
+
+
+def _pod_rows(P: int, n_pods: int, pod: int) -> np.ndarray:
+    """Boolean [P] mask of the workers living in ``pod``."""
+    return np.asarray(pod_of(P, n_pods)) == pod
+
+
+def splice_rejoin_state(live_state, ckpt_state, cfg: ConsistencyConfig,
+                        pod: int, drop_inflight: bool = False):
+    """Rebuild the post-outage state from survivors + the pod's checkpoint.
+
+    Takes the dead pod's frozen leaves from ``ckpt_state`` — its ``cview``
+    reader rows, its workers' ``local`` rows, and (drain policy, wired)
+    its producers' unshipped ``acc``/``res`` — and everything else
+    (advancing ring/base/rng/clock, survivor rows) from ``live_state``.
+    Returns ``(spliced_state, max_abs_diff)`` where the diff compares the
+    spliced state against ``live_state`` leaf-for-leaf: the engines froze
+    exactly these leaves during the outage, so it must be 0.0 — the
+    checkpoint restores the pod to precisely the state the continuous
+    churned run says it is in.
+    """
+    P = live_state.cview.shape[0]
+    rows = _pod_rows(P, cfg.n_pods, pod)                 # [P] bool
+
+    def rowwise(live_leaf, ckpt_leaf, mask):
+        m = np.asarray(mask).reshape((P,) + (1,) * (live_leaf.ndim - 1))
+        return np.where(m, np.asarray(ckpt_leaf), np.asarray(live_leaf))
+
+    cview = rowwise(np.asarray(live_state.cview),
+                    np.asarray(ckpt_state.cview), rows)
+    local = jax.tree_util.tree_map(
+        lambda lv, ck: rowwise(np.asarray(lv), np.asarray(ck), rows),
+        live_state.local, ckpt_state.local)
+    comm = live_state.comm
+    if comm is not None and not drop_inflight:
+        # drain policy: the pod's unshipped aggregation mass was held at
+        # death and is still sitting in acc/res — identical in both states
+        comm = dict(comm,
+                    acc=rowwise(np.asarray(comm["acc"]),
+                                np.asarray(ckpt_state.comm["acc"]), rows),
+                    res=rowwise(np.asarray(comm["res"]),
+                                np.asarray(ckpt_state.comm["res"]), rows))
+    spliced = live_state.__class__(
+        clock=live_state.clock, base=live_state.base,
+        uring=live_state.uring, uclock=live_state.uclock,
+        cview=cview, local=local, rng=live_state.rng, comm=comm)
+    diffs = {}
+    for (pa, a), (_, b) in zip(
+            jax.tree_util.tree_flatten_with_path(spliced)[0],
+            jax.tree_util.tree_flatten_with_path(live_state)[0]):
+        name = jax.tree_util.keystr(pa)
+        a, b = np.asarray(a), np.asarray(b)
+        diffs[name] = float(np.abs(a.astype(np.float64)
+                                   - b.astype(np.float64)).max())
+    return spliced, diffs
+
+
+def run_with_pod_rejoin(runtime: PodsRuntime, app: PSApp,
+                        cfg: ConsistencyConfig, n_clocks: int, *,
+                        pod: int, drop_clock: int, rejoin_clock: int,
+                        seed=0, ckpt_path: str | None = None,
+                        drop_inflight: bool = False,
+                        schedule: ChurnSchedule | None = None) -> dict:
+    """Drop ``pod`` at ``drop_clock``, rejoin it from checkpoint at
+    ``rejoin_clock``, and prove the recovery exact.
+
+    Runs three ``run_from`` segments under one absolute-clock
+    `ChurnSchedule` (built from the outage unless given), checkpointing at
+    the drop and splicing the restored pod state back at the rejoin.
+    Returns::
+
+        {"trace":            the full concatenated Trace,
+         "state":            final PSState,
+         "splice_max_diff":  per-leaf |spliced - live|  (all 0.0),
+         "splice_exact":     bool — checkpoint rejoin is bit-exact,
+         "staleness_post":   check_staleness_bound on the post-rejoin
+                             segment (ssp/essp; None otherwise),
+         "ckpt_path":        where the pod's snapshot lives,
+         "schedule":         the ChurnSchedule used}
+
+    The equality claim is strict by design: if any engine leaked state
+    into a dead pod's frozen leaves, ``splice_exact`` trips — this is the
+    executable proof that checkpoint-restore + catch-up-through-the-wire
+    reproduces the continuous churned run bit for bit.
+    """
+    if not (0 < drop_clock < rejoin_clock <= n_clocks):
+        raise ValueError(f"need 0 < drop_clock({drop_clock}) < "
+                         f"rejoin_clock({rejoin_clock}) <= {n_clocks}")
+    if schedule is None:
+        schedule = make_churn(n_clocks, app.n_workers, n_pods=cfg.n_pods,
+                              pod_outages=((pod, drop_clock, rejoin_clock),),
+                              drop_inflight=drop_inflight)
+    if ckpt_path is None:
+        ckpt_path = os.path.join(tempfile.mkdtemp(prefix="repro_rejoin_"),
+                                 f"pod{pod}_clock{drop_clock}.npz")
+
+    # segment 1: healthy fleet -> drop_clock; snapshot the state the dying
+    # pod will restore from
+    state = runtime.init_state(app, cfg, seed=seed, n_clocks=drop_clock)
+    tr1, state = runtime.run_from(app, cfg, drop_clock, state,
+                                  schedule=schedule)
+    ckpt_io.save_runtime(ckpt_path, state)
+
+    # segment 2: the outage window — survivors only (the schedule masks
+    # the pod; its frozen leaves ride along untouched)
+    tr2, state = runtime.run_from(app, cfg, rejoin_clock - drop_clock,
+                                  state, schedule=schedule)
+
+    # segment 3: restore + splice + continue.  The restored checkpoint is
+    # the rejoining pod's entire local knowledge; the splice must land on
+    # exactly the live state (the freeze/checkpoint agreement).
+    restored = ckpt_io.restore_runtime(
+        ckpt_path, runtime.init_state(app, cfg, seed=seed,
+                                      n_clocks=drop_clock))
+    spliced, diffs = splice_rejoin_state(state, restored, cfg, pod,
+                                         drop_inflight=drop_inflight)
+    splice_exact = all(v == 0.0 for v in diffs.values())
+    spliced = jax.tree_util.tree_map(
+        lambda ref, arr: jax.numpy.asarray(
+            arr, dtype=getattr(ref, "dtype", None)),
+        state, spliced)
+    tr3, state = runtime.run_from(app, cfg, n_clocks - rejoin_clock,
+                                  spliced, schedule=schedule)
+
+    post = None
+    if cfg.model in ("ssp", "essp"):
+        post = check_staleness_bound(tr3, cfg)
+    return {"trace": concat_traces((tr1, tr2, tr3)), "state": state,
+            "splice_max_diff": diffs, "splice_exact": splice_exact,
+            "staleness_post": post, "ckpt_path": ckpt_path,
+            "schedule": schedule}

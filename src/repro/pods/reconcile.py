@@ -46,18 +46,30 @@ def xpod_channel_mask(cfg: ConsistencyConfig, P: int) -> np.ndarray:
     return ~np.asarray(same_pod_mask(P, cfg.n_pods))
 
 
+REPLICA_DEAD = np.iinfo(np.int64).max
+"""Sentinel `replica_clock` value for a pod with no live reader at a clock
+(its frozen rows say nothing about the replica's guarantees)."""
+
+
 def replica_clock(trace: Trace, cfg: ConsistencyConfig) -> np.ndarray:
     """Per-clock replica clocks ``rep[t, g, q]`` relative to the barrier.
 
     Derived from ``Trace.staleness = cview - c``: ``rep[t, g, q]`` is the
-    staleness of pod ``g``'s weakest reader of producer ``q`` (so ``-1``
-    means "replica g has everything through the barrier from q").
+    staleness of pod ``g``'s weakest *live* reader of producer ``q`` (so
+    ``-1`` means "replica g has everything through the barrier from q").
+    Dead readers (``Trace.live``) are excluded — their rows are frozen at
+    death and describe no read; a pod with no live reader at a clock gets
+    the `REPLICA_DEAD` sentinel.  Without churn every reader is live and
+    this is exactly the historical min.
     """
-    st = np.asarray(trace.staleness)                    # [T, P, P]
+    st = np.asarray(trace.staleness).astype(np.int64)   # [T, P, P]
     P = st.shape[-1]
     pods = np.asarray(pod_of(P, cfg.n_pods))
     G = cfg.n_pods
-    return np.stack([st[:, pods == g, :].min(axis=1) for g in range(G)],
+    live = (np.asarray(trace.live) if trace.live is not None
+            else np.ones(st.shape[:2], bool))           # [T, P(r)]
+    stm = np.where(live[:, :, None], st, REPLICA_DEAD)
+    return np.stack([stm[:, pods == g, :].min(axis=1) for g in range(G)],
                     axis=1)                             # [T, G, P]
 
 
@@ -70,7 +82,12 @@ def replica_divergence(trace: Trace, cfg: ConsistencyConfig) -> dict:
     the measured divergence with ``ok=None``.
     """
     rep = replica_clock(trace, cfg)                     # [T, G, P]
-    div = rep.max(axis=1) - rep.min(axis=1)             # [T, P]
+    valid = rep != REPLICA_DEAD                         # pod had live readers
+    # divergence only where >= 2 pods have live readers: a dead pod's
+    # frozen prefix is not a replica anyone reads from
+    rmax = np.where(valid, rep, np.iinfo(np.int64).min).max(axis=1)
+    rmin = np.where(valid, rep, REPLICA_DEAD).min(axis=1)
+    div = np.where(valid.sum(axis=1) >= 2, rmax - rmin, 0)   # [T, P]
     out = {"max": int(div.max()) if div.size else 0,
            "per_clock": div.max(axis=-1)}
     if cfg.model == "bsp":

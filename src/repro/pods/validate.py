@@ -24,7 +24,8 @@ from .runtime import PodsRuntime
 
 
 def cross_validate_pods(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
-                        runtime: PodsRuntime | None = None, seed=0) -> dict:
+                        runtime: PodsRuntime | None = None, seed=0,
+                        schedule=None) -> dict:
     """Run both engines and check the hierarchical oracle contract.
 
     BSP/SSP/ESSP: bit-identical traces (+ two-tier staleness bound for
@@ -34,11 +35,13 @@ def cross_validate_pods(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
     (+ ``agg_clocks - 1``); unbounded models (async/VAP): the replica
     value-divergence envelope, checked against ``2 v_t`` for VAP (clock
     bound stays ``None``).  Returns the evidence dict with an overall
-    ``ok``.
+    ``ok``.  Under a ``schedule`` (fleet churn) every layer re-derives
+    over the live set: the staleness check masks dead readers, and the
+    replica layer drops pods with no live reader at a clock.
     """
     runtime = runtime or PodsRuntime()
     out = cross_validate(app, cfg, n_clocks, runtime=runtime, seed=seed,
-                         return_trace=True)
+                         return_trace=True, schedule=schedule)
     tr = out.pop("trace")          # reuse — don't re-execute the run
     div = replica_divergence(tr, cfg)
     out["replica_divergence"] = {k: v for k, v in div.items()

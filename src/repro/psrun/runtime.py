@@ -72,7 +72,8 @@ from jax.sharding import PartitionSpec as P_
 
 from ..comm import substrate as comm
 from ..core.consistency import ConsistencyConfig
-from ..core.delays import delivery_matrix, pod_of, staleness_bound_matrix
+from ..core.delays import ChurnSchedule, churn_live, churn_rates, \
+    delivery_matrix, pod_of, staleness_bound_matrix
 from ..core.ps import PSApp, Trace, enforce_vap
 from ..kernels import ops
 from ..kernels.ref import RING_EMPTY, RING_INVALID
@@ -151,19 +152,26 @@ def _layout(app: PSApp, mesh, worker_axes):
 
 def make_run_fn(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
                 mesh=None, record_views: bool = False,
-                worker_axes: tuple = ("data",)):
+                worker_axes: tuple = ("data",),
+                schedule: ChurnSchedule | None = None):
     """Build the jitted runtime for one config *family* on ``mesh``.
 
-    Returns a callable ``fn(seed, cfg) -> Trace``.  ``cfg``'s numeric knobs
-    are traced jit arguments — calling with different
-    staleness/push_prob/straggler values (same model, same ring window)
-    reuses the compiled program.  The ``cfg`` given here only fixes the
-    static structure (model, window, read_my_writes, n_pods).
+    Returns a callable ``fn(seed, cfg, schedule=None) -> Trace``.
+    ``cfg``'s numeric knobs are traced jit arguments — calling with
+    different staleness/push_prob/straggler values (same model, same ring
+    window) reuses the compiled program.  The ``cfg`` given here only
+    fixes the static structure (model, window, read_my_writes, n_pods).
+    Likewise ``schedule`` here only fixes the churn *structure* (present
+    or not, which optional arrays it carries, the in-flight policy): the
+    actual liveness/regime arrays are traced jit arguments too, so
+    same-shape schedules share one compile.
 
     The callable also exposes the state-carrying entry points
-    ``fn.init_state(seed) -> PSState`` and ``fn.run_from(state, cfg) ->
-    (Trace, PSState)``; ``fn(seed, cfg)`` is exactly
-    ``fn.run_from(fn.init_state(seed), cfg)[0]``.
+    ``fn.init_state(seed) -> PSState`` and ``fn.run_from(state, cfg,
+    schedule) -> (Trace, PSState)``; ``fn(seed, cfg)`` is exactly
+    ``fn.run_from(fn.init_state(seed), cfg)[0]``.  Schedules index by
+    *absolute* clock, so a resumed segment reads the same slice the
+    uninterrupted run would.
 
     ``worker_axes`` names the mesh axes that partition the workers
     (``("data",)`` for the flat runtime, ``("pod", "data")`` for
@@ -182,9 +190,15 @@ def make_run_fn(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
     # the oracle contract covers the compressed path too.
     wired = cfg.comm_active
     quant0, G = cfg.quant, cfg.n_pods
+    churned = schedule is not None
+    if churned and schedule.live.shape[1] != P:
+        raise ValueError(f"schedule has {schedule.live.shape[1]} workers, "
+                         f"app has {P}")
 
     def body(cfg, clock0, base, uring, uclock, cview, local, rng,
-             cst=None):
+             *extra):
+        cst = extra[0] if wired else None
+        sched = extra[-1] if churned else None
         # local shards: base [dl], uring [W, P, dl], uclock [W] (replicated),
         # cview [Pl, P], local leaves [Pl, ...], rng/clock0 replicated;
         # comm state (wired only): acc/res [P, dl], xring [W, P, dl],
@@ -216,6 +230,29 @@ def make_run_fn(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
                 base, uring, uclock, cview, local, rng = carry
             rng, k_upd, k_net = jax.random.split(rng, 3)
 
+            if churned:
+                live_now, died = churn_live(sched, c)     # [P], [P]
+                live_l = jax.lax.dynamic_slice_in_dim(
+                    live_now, rows0, Pl)                  # local reader rows
+                rates = churn_rates(cfg, sched, P, c)
+                if sched.drop_inflight:
+                    # drop policy: mirror the oracle — a dying worker's
+                    # in-flight ring rows (and unshipped comm rows) zero
+                    # out the clock it dies.
+                    keep = ~died
+                    uring = jnp.where(keep[None, :, None], uring, 0.0)
+                    if wired:
+                        cst = dict(cst,
+                                   acc=jnp.where(keep[:, None],
+                                                 cst["acc"], 0.0),
+                                   res=jnp.where(keep[:, None],
+                                                 cst["res"], 0.0),
+                                   xring=jnp.where(keep[None, :, None],
+                                                   cst["xring"], 0.0))
+                cview_pre = cview
+            else:
+                rates = None
+
             # global per-producer suffix-aggregate inf-norms: local block
             # norms, max-reduced over the owning shards.
             norms = jax.lax.pmax(
@@ -242,6 +279,11 @@ def make_run_fn(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
 
             if cfg.read_my_writes:
                 cview = jnp.where(eye_l, c - 1, cview)
+
+            if churned:
+                # dead readers neither fetch nor advance (oracle mirror)
+                forced = forced & live_l[:, None]
+                cview = jnp.where(live_l[:, None], cview, cview_pre)
 
             staleness = cview - c                              # [Pl, P]
 
@@ -271,8 +313,21 @@ def make_run_fn(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
             # --- 3. worker computation (this shard's workers only) --------
             upd_keys = jax.lax.dynamic_slice_in_dim(
                 jax.random.split(k_upd, P), rows0, Pl)
-            u_l, local = vmapped_update(views, local, worker_ids, c, upd_keys)
+            u_l, local_new = vmapped_update(views, local, worker_ids, c,
+                                            upd_keys)
             u_l = u_l.astype(f32)                              # [Pl, d]
+            if churned:
+                # mask dead workers' pushes BEFORE the all-gather so the
+                # gathered [P, d] (and u_l2 on it) matches the oracle's
+                # masked operand bit for bit; freeze their local state.
+                u_l = jnp.where(live_l[:, None], u_l, 0.0)
+                local = jax.tree_util.tree_map(
+                    lambda new, old: jnp.where(
+                        live_l.reshape((Pl,) + (1,) * (new.ndim - 1)),
+                        new, old),
+                    local_new, local)
+            else:
+                local = local_new
 
             # --- 4. push to owning shards; fold oldest slot ---------------
             # The all-gather over the worker axes is the data plane: under a
@@ -314,26 +369,43 @@ def make_run_fn(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
                                                cfg.quant)
                 nnz = comm.selected_count(delta_full, thresh)
                 ship = comm.ship_now(c, cfg.agg_clocks)
-                wire_u = jnp.where(ship, wire_u, jnp.zeros_like(wire_u))
+                if churned:
+                    # dead producers hold their shipment (drain policy:
+                    # acc/res keep the mass until the first boundary
+                    # after rejoin) — oracle mirror.
+                    ship = ship & live_now                 # [P]
+                    ship_b = ship[:, None]
+                else:
+                    ship_b = ship
+                wire_u = jnp.where(ship_b, wire_u, jnp.zeros_like(wire_u))
                 cst = dict(cst,
-                           acc=jnp.where(ship, jnp.zeros_like(acc), acc),
-                           res=jnp.where(ship, resid, cst["res"]),
+                           acc=jnp.where(ship_b, jnp.zeros_like(acc), acc),
+                           res=jnp.where(ship_b, resid, cst["res"]),
                            xring=cst["xring"].at[slot].set(wire_u))
                 ship_floats = jnp.where(
                     ship, comm.wire_floats(nnz, d, cfg.quant),
                     jnp.zeros((P,), f32))
             else:
                 ship_floats = comm.dense_ship_floats(cfg.model, P, d)
+                if churned:
+                    ship_floats = jnp.where(live_now, ship_floats, 0.0)
 
             # --- 5. end-of-clock delivery (affects reads at c+1) ----------
             if cfg.model == "bsp":
                 delivered = jnp.ones((Pl, P), bool)
-                cview = jnp.full_like(cview, c)
+                if churned:
+                    delivered = delivered & live_l[:, None]
+                    cview = jnp.where(live_l[:, None],
+                                      jnp.full_like(cview, c), cview)
+                else:
+                    cview = jnp.full_like(cview, c)
             elif cfg.model == "ssp":
                 delivered = jnp.zeros((Pl, P), bool)
             else:  # essp / async / vap: delay-driven eager delivery
                 delivered = jax.lax.dynamic_slice_in_dim(
-                    delivery_matrix(k_net, cfg, P), rows0, Pl)
+                    delivery_matrix(k_net, cfg, P, rates), rows0, Pl)
+                if churned:
+                    delivered = delivered & live_l[:, None]
                 if wired:
                     tgt = jnp.where(in_pod, c,
                                     comm.shipped_end(c, cfg.agg_clocks))
@@ -363,7 +435,9 @@ def make_run_fn(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
                        staleness=staleness, forced=forced,
                        delivered=delivered,
                        u_l2=u_l2, intransit_inf=intransit_inf,
-                       ship_floats=ship_floats)
+                       ship_floats=ship_floats,
+                       live=live_now if churned
+                       else jnp.ones((P,), bool))
             if record_views:
                 out["views0"] = views_all[0]
             if wired:
@@ -394,7 +468,8 @@ def make_run_fn(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
                 "staleness": P_(None, worker_axes, None),
                 "forced": P_(None, worker_axes, None),
                 "delivered": P_(None, worker_axes, None),
-                "u_l2": P_(), "intransit_inf": P_(), "ship_floats": P_()}
+                "u_l2": P_(), "intransit_inf": P_(), "ship_floats": P_(),
+                "live": P_()}
     if record_views:
         ys_specs["views0"] = P_()
     comm_specs = None
@@ -411,6 +486,10 @@ def make_run_fn(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
                 P_(worker_axes, None), local_spec, P_()]
     if wired:
         in_specs.append(comm_specs)
+    if churned:
+        # the schedule is replicated: every shard reads the full per-clock
+        # liveness rows (it needs producer liveness for all P)
+        in_specs.append(jax.tree_util.tree_map(lambda _: P_(), schedule))
     sharded = shard_map(
         body, mesh=mesh,
         in_specs=tuple(in_specs),
@@ -418,18 +497,20 @@ def make_run_fn(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
                    "state": state_specs},
         check_rep=False)
 
-    def run(state: PSState, cfg):
+    def run(state: PSState, cfg, sched):
         args = (cfg, state.clock, state.base, state.uring,
                 state.uclock, state.cview, state.local, state.rng)
         if wired:
             args += (state.comm,)
+        if churned:
+            args += (sched,)
         out = sharded(*args)
         ys = out["ys"]
         trace = Trace(loss_ref=ys["loss_ref"], loss_view=ys["loss_view"],
                       staleness=ys["staleness"], forced=ys["forced"],
                       delivered=ys["delivered"], u_l2=ys["u_l2"],
                       intransit_inf=ys["intransit_inf"],
-                      ship_floats=ys["ship_floats"],
+                      ship_floats=ys["ship_floats"], live=ys["live"],
                       views0=ys.get("views0"),
                       x_final=out["x_final"][:d],
                       locals_final=out["state"]["local"])
@@ -467,17 +548,42 @@ def make_run_fn(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
         # shares one pytree treedef (and therefore one jit cache entry)
         return c.replace(window=W, wire=wired)
 
-    def run_from(state: PSState, cfg_run: ConsistencyConfig | None = None):
+    def _norm_sched(sched):
+        s = schedule if sched is None else sched
+        if (s is not None) != churned:
+            raise ValueError(
+                f"runtime compiled with churn={'on' if churned else 'off'}; "
+                f"build a new run fn to change the churn structure")
+        if s is not None and s.live.shape[1] != P:
+            raise ValueError(f"schedule has {s.live.shape[1]} workers, "
+                             f"app has {P}")
+        return s
+
+    def run_from(state: PSState, cfg_run: ConsistencyConfig | None = None,
+                 schedule: ChurnSchedule | None = None):
         """Advance ``state`` by ``n_clocks``; returns ``(Trace, PSState)``.
         Bit-identical to running the clocks uninterrupted."""
-        return jitted(state, _norm_cfg(cfg_run))
+        return jitted(state, _norm_cfg(cfg_run), _norm_sched(schedule))
 
-    def fn(seed, cfg_run: ConsistencyConfig | None = None) -> Trace:
-        return jitted(init_state(seed), _norm_cfg(cfg_run))[0]
+    def fn(seed, cfg_run: ConsistencyConfig | None = None,
+           schedule: ChurnSchedule | None = None) -> Trace:
+        return jitted(init_state(seed), _norm_cfg(cfg_run),
+                      _norm_sched(schedule))[0]
 
     fn.init_state = init_state
     fn.run_from = run_from
     return fn
+
+
+def _churn_key(schedule: ChurnSchedule | None):
+    """The churn *structure* a compiled program is specialized on: presence,
+    which optional arrays the schedule carries, and the in-flight policy.
+    Array shapes/values stay jit-traced (jit retraces on new shapes)."""
+    if schedule is None:
+        return None
+    return (schedule.drop_inflight,
+            schedule.straggler_workers is not None,
+            schedule.bw_scale is not None)
 
 
 class PSRuntime:
@@ -487,11 +593,14 @@ class PSRuntime:
     *Trace-producer contract*: identical fields, leading clock axis, same
     RNG stream), executed over the mesh instead of vectorized on one
     device.  Compiled programs are cached per (app, config family, ring
-    window, n_clocks) — numeric knob changes re-use them.
+    window, n_clocks, churn structure) — numeric knob changes (and
+    same-structure churn schedules) re-use them.
 
     ``init_state`` / ``run_from`` expose the mid-run `PSState` for
     checkpointing: ``run_from`` resumed from a saved state reproduces the
-    uninterrupted trace bit for bit.
+    uninterrupted trace bit for bit — with or without a churn schedule
+    (schedules index by absolute clock, so segments line up exactly; see
+    `pods.elastic` for the pod-rejoin recipe built on this).
     """
 
     worker_axes: tuple = ("data",)
@@ -504,22 +613,26 @@ class PSRuntime:
         return make_ps_mesh()
 
     def run_fn(self, app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
-               record_views: bool = False):
+               record_views: bool = False,
+               schedule: ChurnSchedule | None = None):
         """The cached jitted ``fn(seed, cfg) -> Trace`` for this family."""
         key = (id(app), cfg.family, cfg.effective_window, n_clocks,
-               record_views)
+               record_views, _churn_key(schedule))
         fn = self._cache.get(key)
         if fn is None:
             fn = make_run_fn(app, cfg, n_clocks, mesh=self.mesh,
                              record_views=record_views,
-                             worker_axes=self.worker_axes)
+                             worker_axes=self.worker_axes,
+                             schedule=schedule)
             self._cache[key] = fn
         return fn
 
     def run(self, app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
-            seed=0, record_views: bool = False) -> Trace:
+            seed=0, record_views: bool = False,
+            schedule: ChurnSchedule | None = None) -> Trace:
         """Run ``n_clocks`` of the app under ``cfg`` on the mesh."""
-        return self.run_fn(app, cfg, n_clocks, record_views)(seed, cfg)
+        return self.run_fn(app, cfg, n_clocks, record_views,
+                           schedule)(seed, cfg, schedule)
 
     def init_state(self, app: PSApp, cfg: ConsistencyConfig, seed=0,
                    n_clocks: int = 1) -> PSState:
@@ -527,7 +640,8 @@ class PSRuntime:
         return self.run_fn(app, cfg, n_clocks).init_state(seed)
 
     def run_from(self, app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
-                 state: PSState, record_views: bool = False):
+                 state: PSState, record_views: bool = False,
+                 schedule: ChurnSchedule | None = None):
         """Advance ``state`` by ``n_clocks`` -> ``(Trace, PSState)``."""
-        return self.run_fn(app, cfg, n_clocks,
-                           record_views).run_from(state, cfg)
+        return self.run_fn(app, cfg, n_clocks, record_views,
+                           schedule).run_from(state, cfg, schedule)

@@ -39,7 +39,7 @@ from ..core.ps import PSApp, Trace, simulate
 from .runtime import PSRuntime
 
 TRACE_FIELDS = ("loss_ref", "loss_view", "staleness", "forced", "delivered",
-                "u_l2", "intransit_inf", "ship_floats", "x_final")
+                "u_l2", "intransit_inf", "ship_floats", "live", "x_final")
 
 # Float drift budget for VAP under multi-device compilation (see module
 # doc), asserted in ulp units so it stays scale-free.  Measured drift on
@@ -90,21 +90,36 @@ def check_staleness_bound(trace: Trace, cfg: ConsistencyConfig) -> dict:
     ``s_eff`` is per-channel: ``staleness`` intra-pod, ``staleness +
     s_xpod`` across pods (`core.delays.staleness_bound_matrix`) — the
     two-tier contract collapses to the flat one at ``n_pods=1``.
+
+    Under churn the contract is re-derived over the *live* set: a dead
+    worker runs no read, so its frozen rows are excluded via
+    ``Trace.live``, and the bound is asserted for every read a live
+    worker actually performs — including the rejoin read, which the
+    enforcement step repairs with a forced burst before the worker
+    computes.  ``live_frac`` reports how much of the matrix the check
+    covered (1.0 without churn).
     """
     st = np.asarray(trace.staleness)
     P = st.shape[-1]
     readers = np.arange(st.shape[-2])  # Pl reader rows (= P in the oracle)
     s_eff = np.asarray(staleness_bound_matrix(cfg, readers, P))
-    viol_old = int((st < -(s_eff + 1)).sum())
-    viol_fresh = int((st > -1).sum())
+    live = np.asarray(trace.live) if trace.live is not None else None
+    if live is not None and live.shape[-1] == st.shape[-2]:
+        live_r = live[:, :, None]                   # mask dead reader rows
+    else:  # hand-made traces without the field: check everything
+        live_r = np.ones_like(st, dtype=bool)
+    viol_old = int(((st < -(s_eff + 1)) & live_r).sum())
+    viol_fresh = int(((st > -1) & live_r).sum())
+    st_live = st[np.broadcast_to(live_r, st.shape)]
     return {"violations": viol_old + viol_fresh,
-            "min": int(st.min()), "max": int(st.max()),
-            "bound": -(int(np.max(s_eff)) + 1)}
+            "min": int(st_live.min()), "max": int(st_live.max()),
+            "bound": -(int(np.max(s_eff)) + 1),
+            "live_frac": float(np.broadcast_to(live_r, st.shape).mean())}
 
 
 def cross_validate(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
                    runtime: PSRuntime | None = None, seed=0,
-                   return_trace: bool = False) -> dict:
+                   return_trace: bool = False, schedule=None) -> dict:
     """Run both engines and check the model-appropriate oracle contract.
 
     Returns a dict with ``ok`` plus the per-model evidence.  BSP/SSP/ESSP
@@ -112,15 +127,22 @@ def cross_validate(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
     the (two-tier) staleness bound); VAP checks the value bound, exact
     decisions, and the ulp drift budget.  ``return_trace=True`` adds the
     runtime's `Trace` under ``"trace"`` so callers layering further checks
-    (``pods.validate``) don't re-execute the run.
+    (``pods.validate``) don't re-execute the run.  ``schedule`` (a
+    `core.delays.ChurnSchedule`) runs *both* engines under the same fleet
+    churn — the bit-identity contract covers the survivor set too.
     """
     runtime = runtime or PSRuntime()
-    tr = runtime.run(app, cfg, n_clocks, seed=seed)
+    tr = runtime.run(app, cfg, n_clocks, seed=seed, schedule=schedule)
     out: dict = {"model": cfg.model}
-    if cfg.model in ("bsp", "ssp", "essp"):
+
+    def _oracle():
         import jax
-        want = jax.jit(lambda sd: simulate(app, cfg, n_clocks, seed=sd))(
-            np.uint32(seed))
+        return jax.jit(
+            lambda sd: simulate(app, cfg, n_clocks, seed=sd,
+                                schedule=schedule))(np.uint32(seed))
+
+    if cfg.model in ("bsp", "ssp", "essp"):
+        want = _oracle()
         diffs = trace_max_diff(tr, want)
         out["max_diff"] = diffs
         out["ok"] = all(v == 0.0 for v in diffs.values())
@@ -129,11 +151,9 @@ def cross_validate(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
             out.update(chk)
             out["ok"] = out["ok"] and chk["violations"] == 0
     elif cfg.model == "vap":
-        import jax
         chk = valuebound.check_condition(tr, float(cfg.v0))
         out.update(chk)
-        want = jax.jit(lambda sd: simulate(app, cfg, n_clocks, seed=sd))(
-            np.uint32(seed))
+        want = _oracle()
         decisions_ok = all(
             np.array_equal(np.asarray(getattr(tr, name)),
                            np.asarray(getattr(want, name)))

@@ -1,0 +1,348 @@
+"""Fleet churn as a traced axis: worker/pod death, rejoin, regime shifts.
+
+Contract being pinned (the elastic-PS tentpole; see the churn sections of
+``core/delays.py``, ``core/ps.py``, ``psrun/runtime.py`` and
+``pods/elastic.py``):
+
+- a **neutral** (all-live) `ChurnSchedule` is bit-identical to running
+  with no schedule at all, for every model and on the wired path — churn
+  is an overlay, not a fork of the engines;
+- dead workers push nothing (their ``u_l2`` rows are exactly zero), their
+  reader rows freeze, and the recorded ``Trace.live`` equals the schedule;
+- the Trace-producer contract survives churn: seeded simulator and
+  runtime traces stay bit-identical (BSP/SSP/ESSP, dense and compressed),
+  VAP keeps exact decisions within the ulp budget — asserted through
+  ``cross_validate`` / ``cross_validate_pods`` with the schedule applied
+  to both engines;
+- the staleness contract re-derives over the live set: for *any* generated
+  schedule (hypothesis) live readers never violate the two-tier bound and
+  never read past the barrier — the rejoin read is repaired by a forced
+  burst before the worker computes;
+- a pod dropped mid-run rejoins from a ``checkpoint.io`` snapshot **bit
+  for bit** (`pods.elastic.run_with_pod_rejoin`): the spliced state equals
+  the live state leaf-for-leaf and the three-segment trace equals the
+  uninterrupted churned run;
+- `TimeModel` charges churn faithfully: dead workers leave the
+  slowest-worker max, and ``bw_scale`` scales the cross-pod wire floor;
+- same-structure schedules reuse the compiled program (liveness arrays are
+  jit arguments, like every other numeric knob).
+
+Under the CI churn lane (``REPRO_FORCE_HOST_DEVICES=16``) the runtime
+tests run genuinely sharded; on fewer devices they fall back to the widest
+mesh available — the semantics are placement-independent.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import bsp, essp, simulate, simulate_jit, ssp, vap
+from repro.core.consistency import ConsistencyConfig, compressed, podded
+from repro.core.delays import churn_rates, make_churn, no_churn
+from repro.core.timemodel import TimeModel
+from repro.pods import (PodsRuntime, cross_validate_pods,
+                        replica_divergence, run_with_pod_rejoin)
+from repro.psrun import PSRuntime
+from repro.psrun.runtime import default_mesh as flat_mesh_for
+from repro.psrun.runtime import trace_count
+from repro.psrun.validate import (TRACE_FIELDS, check_staleness_bound,
+                                  cross_validate)
+from test_pods import make_quad, pods_runtime_for
+
+T = 18
+OUTAGES = ((2, 4, 9), (5, 7, 14))        # (worker, down_from, up_at)
+
+
+def assert_bit_identical(got, want, context=""):
+    for name in TRACE_FIELDS:
+        a, b = np.asarray(getattr(got, name)), np.asarray(getattr(want, name))
+        np.testing.assert_array_equal(a, b, err_msg=f"{context}:{name}")
+
+
+@pytest.fixture(scope="module")
+def quad8():
+    return make_quad(8)
+
+
+@pytest.fixture(scope="module")
+def flat8():
+    return PSRuntime(flat_mesh_for(8))
+
+
+@pytest.fixture(scope="module")
+def pods8():
+    return pods_runtime_for(8, 2)
+
+
+def wired_cfg(s=2):
+    return compressed(podded(essp(s), 2, s_xpod=3, t_net_xpod=6.0),
+                      agg_clocks=2, topk_frac=0.5, quant="int8")
+
+
+# ---------------------------------------------------------------------------
+# simulator: churn is an overlay, not a fork
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("cfg", [
+    bsp(), ssp(2), essp(2), ConsistencyConfig(model="async"),
+    vap(0.5, staleness=4), wired_cfg(),
+], ids=lambda c: f"{c.model}{'-wired' if c.comm_active else ''}")
+def test_neutral_schedule_bit_identical(quad8, cfg):
+    """An all-live schedule reproduces the schedule-free run bit for bit —
+    every masking op collapses to identity when everyone is alive."""
+    want = simulate_jit(quad8, cfg, T, seed=3)
+    got = simulate_jit(quad8, cfg, T, seed=3, schedule=no_churn(T, 8))
+    assert_bit_identical(got, want, context=cfg.model)
+
+
+@pytest.mark.parametrize("cfg", [ssp(2), essp(2),
+                                 ConsistencyConfig(model="async")],
+                         ids=lambda c: c.model)
+def test_dead_workers_push_nothing(quad8, cfg):
+    sched = make_churn(T, 8, worker_outages=OUTAGES)
+    tr = simulate_jit(quad8, cfg, T, seed=0, schedule=sched)
+    live = np.asarray(tr.live)
+    np.testing.assert_array_equal(live, np.asarray(sched.live))
+    u = np.asarray(tr.u_l2)
+    assert (u[~live] == 0.0).all()           # dead workers push nothing
+    assert (u[live] > 0.0).any()             # survivors keep working
+    assert np.isfinite(np.asarray(tr.loss_ref)).all()
+
+
+def test_dead_reader_rows_freeze(quad8):
+    """While a worker is down, its cview reader rows don't move: recorded
+    staleness drifts by exactly -1 per clock (cview frozen, c advances)."""
+    w, t0, t1 = 2, 4, 9
+    sched = make_churn(T, 8, worker_outages=((w, t0, t1),))
+    tr = simulate_jit(quad8, essp(2), T, seed=0, schedule=sched)
+    stw = np.asarray(tr.staleness)[:, w, :]        # [T, P]
+    # clock t0 records the frozen row (post-t0-1-delivery cview); from
+    # there cview holds still while c advances
+    for c in range(t0 + 1, t1):
+        np.testing.assert_array_equal(stw[c], stw[t0] - (c - t0))
+    # and the first read after rejoin is repaired back inside the bound
+    chk = check_staleness_bound(tr, essp(2))
+    assert chk["violations"] == 0 and chk["max"] == -1, chk
+
+
+def test_drop_vs_drain_inflight_policy(quad8):
+    """The in-flight policy is observable: dropping a dead worker's queued
+    updates changes the trajectory vs draining them, and both stay inside
+    the re-derived staleness contract."""
+    mk = lambda drop: make_churn(T, 8, worker_outages=((1, 3, 10),),
+                                 drop_inflight=drop)
+    tr_drain = simulate_jit(quad8, essp(2), T, seed=0, schedule=mk(False))
+    tr_drop = simulate_jit(quad8, essp(2), T, seed=0, schedule=mk(True))
+    assert not np.array_equal(np.asarray(tr_drain.loss_ref),
+                              np.asarray(tr_drop.loss_ref))
+    for tr in (tr_drain, tr_drop):
+        assert check_staleness_bound(tr, essp(2))["violations"] == 0
+
+
+def test_regime_shift_changes_delivery(quad8):
+    """A mid-run straggler-regime shift thins deliveries for the slowed
+    workers after the shift clock, and churn_rates exposes the vector."""
+    cfg = essp(3).replace(push_prob=1.0)
+    sched = make_churn(40, 8, regime_shift=(20, 3, 0.2))
+    rates = np.asarray(churn_rates(cfg, sched, 8, jnp.asarray(25)))
+    np.testing.assert_allclose(rates, [0.2] * 3 + [1.0] * 5)
+    assert np.asarray(churn_rates(cfg, sched, 8, jnp.asarray(5))) is not None
+    tr = simulate_jit(quad8, cfg, 40, seed=0, schedule=sched)
+    d = np.asarray(tr.delivered).astype(float)     # [T, P(r), P(q)]
+    # producer-side delivery frequency of the slowed workers drops
+    before = d[:20, :, :3].mean()
+    after = d[20:, :, :3].mean()
+    assert after < before
+    assert check_staleness_bound(tr, cfg)["violations"] == 0
+
+
+# ---------------------------------------------------------------------------
+# runtimes: the oracle contract survives churn
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("cfg", [
+    bsp(), ssp(2), essp(2), ConsistencyConfig(model="async"),
+    vap(0.5, staleness=4),
+], ids=lambda c: c.model)
+def test_runtime_bit_identical_under_worker_churn(quad8, flat8, cfg):
+    sched = make_churn(T, 8, worker_outages=OUTAGES,
+                       regime_shift=(10, 2, 0.3))
+    out = cross_validate(quad8, cfg, T, runtime=flat8, seed=1,
+                         schedule=sched)
+    assert out["ok"], out
+
+
+@pytest.mark.parametrize("cfg", [
+    podded(ssp(2), 2, s_xpod=3, t_net_xpod=6.0),
+    wired_cfg(),
+    compressed(podded(ConsistencyConfig(model="async"), 2, t_net_xpod=6.0),
+               agg_clocks=2, topk_frac=0.5, quant="int8"),
+], ids=lambda c: f"{c.model}{'-wired' if c.comm_active else ''}")
+def test_pods_runtime_bit_identical_under_pod_outage(quad8, pods8, cfg):
+    """The acceptance contract: with churn enabled, seeded simulator and
+    PodsRuntime traces are bit-identical on the compressed path too."""
+    sched = make_churn(T, 8, n_pods=2, pod_outages=((1, 5, 12),),
+                       bw_drop=(4, 10, 0.25))
+    if isinstance(pods8, PodsRuntime):
+        out = cross_validate_pods(quad8, cfg, T, runtime=pods8, seed=1,
+                                  schedule=sched)
+    else:  # single-device fallback: flat runtime, same contract
+        out = cross_validate(quad8, cfg, T, runtime=pods8, seed=1,
+                             schedule=sched)
+    assert out["ok"], out
+
+
+def test_runtime_resume_under_churn_bit_identical(quad8, flat8):
+    """Segmented run_from under one absolute-clock schedule equals the
+    uninterrupted churned run — schedules don't drift on resume."""
+    cfg = essp(2)
+    sched = make_churn(T, 8, worker_outages=OUTAGES)
+    full = flat8.run(quad8, cfg, T, seed=2, schedule=sched)
+    tr1, mid = flat8.run_from(quad8, cfg, 7,
+                              flat8.init_state(quad8, cfg, seed=2),
+                              schedule=sched)
+    tr2, _ = flat8.run_from(quad8, cfg, T - 7, mid, schedule=sched)
+    for name in TRACE_FIELDS:
+        if name == "x_final":
+            continue
+        a = np.concatenate([np.asarray(getattr(tr1, name)),
+                            np.asarray(getattr(tr2, name))])
+        np.testing.assert_array_equal(a, np.asarray(getattr(full, name)),
+                                      err_msg=name)
+
+
+# ---------------------------------------------------------------------------
+# property: any schedule keeps the live-set staleness contract (hypothesis)
+# ---------------------------------------------------------------------------
+@settings(max_examples=10, deadline=None)
+@given(s=st.integers(min_value=0, max_value=4),
+       s_xpod=st.integers(min_value=0, max_value=4),
+       model=st.sampled_from(["ssp", "essp"]),
+       n_pods=st.sampled_from([1, 2]),
+       w=st.integers(min_value=0, max_value=7),
+       t0=st.integers(min_value=1, max_value=10),
+       dur=st.integers(min_value=1, max_value=10),
+       drop=st.booleans(),
+       seed=st.integers(min_value=0, max_value=99))
+def test_any_schedule_keeps_live_staleness_bound(
+        quad8, s, s_xpod, model, n_pods, w, t0, dur, drop, seed):
+    """For any generated ChurnSchedule: live readers never violate the
+    re-derived two-tier bound and never read past the barrier; dead
+    workers push exactly nothing.  The fixed ring window keeps all draws
+    inside one compile per (model, n_pods, policy)."""
+    mk = ssp if model == "ssp" else essp
+    cfg = podded(mk(s, window=10), n_pods, s_xpod=s_xpod, t_net_xpod=6.0)
+    sched = make_churn(15, 8, n_pods=n_pods,
+                       worker_outages=((w, t0, min(t0 + dur, 15)),),
+                       drop_inflight=drop)
+    tr = jax.jit(lambda sd, c, sc: simulate(quad8, c, 15, seed=sd,
+                                            schedule=sc))(
+        jnp.uint32(seed), cfg, sched)
+    chk = check_staleness_bound(tr, cfg)
+    assert chk["violations"] == 0, (model, n_pods, s, s_xpod, w, t0, chk)
+    assert chk["max"] == -1
+    live = np.asarray(tr.live)
+    assert (np.asarray(tr.u_l2)[~live] == 0.0).all()
+    if n_pods > 1:
+        div = replica_divergence(tr, cfg)
+        assert div["ok"], div
+
+
+# ---------------------------------------------------------------------------
+# elastic rejoin: checkpoint-restore + splice is bit-exact
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("cfg,drop", [
+    (podded(essp(2), 2, s_xpod=3, t_net_xpod=6.0), False),
+    (wired_cfg(), False),
+    (wired_cfg(), True),
+], ids=["dense-drain", "wired-drain", "wired-drop"])
+def test_pod_rejoin_from_checkpoint_bit_exact(quad8, pods8, cfg, drop,
+                                              tmp_path):
+    """A pod dropped mid-run rejoins from its PSState checkpoint: the
+    spliced state equals the continuous churned run's state leaf for leaf,
+    the concatenated trace equals the uninterrupted run, and the first
+    post-rejoin reads are already back inside the staleness bound."""
+    res = run_with_pod_rejoin(pods8, quad8, cfg, T, pod=1, drop_clock=5,
+                              rejoin_clock=12, seed=0,
+                              ckpt_path=str(tmp_path / "pod1.npz"),
+                              drop_inflight=drop)
+    assert res["splice_exact"], res["splice_max_diff"]
+    assert res["staleness_post"]["violations"] == 0
+    full = pods8.run(quad8, cfg, T, seed=0, schedule=res["schedule"])
+    for name in TRACE_FIELDS:
+        if name == "x_final":
+            continue
+        np.testing.assert_array_equal(
+            np.asarray(getattr(res["trace"], name)),
+            np.asarray(getattr(full, name)), err_msg=name)
+
+
+def test_rejoin_argument_guards(quad8, pods8):
+    cfg = podded(essp(2), 2, s_xpod=3, t_net_xpod=6.0)
+    with pytest.raises(ValueError):
+        run_with_pod_rejoin(pods8, quad8, cfg, T, pod=1, drop_clock=9,
+                            rejoin_clock=4)
+
+
+# ---------------------------------------------------------------------------
+# TimeModel: churn is charged in seconds
+# ---------------------------------------------------------------------------
+def test_timemodel_dead_workers_leave_the_max(quad8):
+    """The slowest-worker max is taken over the live set: killing the
+    straggler shortens the clock, never lengthens it."""
+    tm = TimeModel(seed=7)
+    cfg = essp(2)
+    tr_full = simulate_jit(quad8, cfg, T, seed=0)
+    sched = make_churn(T, 8, worker_outages=((0, 2, 16), (5, 4, 12)))
+    tr_churn = simulate_jit(quad8, cfg, T, seed=0, schedule=sched)
+    # same fold -> same comp draws; masking can only reduce the per-clock
+    # compute max (identical bit-for-bit on the all-live clocks)
+    _, comp_f, _ = tm.per_clock(tr_full, "essp")
+    _, comp_c, _ = tm.per_clock(tr_churn, "essp")
+    comp_f, comp_c = np.asarray(comp_f), np.asarray(comp_c)
+    dead_any = ~np.asarray(sched.live).all(axis=1)
+    assert (comp_c <= comp_f + 1e-12).all()
+    assert (comp_c[dead_any] < comp_f[dead_any]).any()
+
+
+def test_timemodel_bw_scale_floors_the_wire(quad8):
+    """bw_scale < 1 on the cross-pod tier raises the wire floor of exactly
+    the crunch window's clocks; a neutral bw_scale changes nothing."""
+    tm = TimeModel(t_comp=1e-6, straggler_sigma=0.0, rtt=0.0, seed=0)
+    cfg = wired_cfg()
+    tr = simulate_jit(quad8, cfg, T, seed=0)
+    wall, _, _ = tm.per_clock(tr, cfg.model, cfg=cfg)
+    neutral = make_churn(T, 8, n_pods=2, bw_drop=(0, T, 1.0))
+    wall_n, _, _ = tm.per_clock(tr, cfg.model, cfg=cfg, schedule=neutral)
+    np.testing.assert_array_equal(np.asarray(wall), np.asarray(wall_n))
+    crunch = make_churn(T, 8, n_pods=2, bw_drop=(4, 10, 0.25))
+    wall_c, _, _ = tm.per_clock(tr, cfg.model, cfg=cfg, schedule=crunch)
+    wall, wall_c = np.asarray(wall), np.asarray(wall_c)
+    shipped = np.asarray(tr.ship_floats).sum(axis=1) > 0
+    window = np.zeros(T, bool)
+    window[4:10] = True
+    assert (wall_c[window & shipped] > wall[window & shipped]).all()
+    np.testing.assert_array_equal(wall_c[~window], wall[~window])
+
+
+# ---------------------------------------------------------------------------
+# compile reuse + structure guards
+# ---------------------------------------------------------------------------
+def test_same_shape_schedules_reuse_compile(quad8, flat8):
+    cfg = essp(2)
+    s1 = make_churn(T, 8, worker_outages=((1, 3, 9),))
+    flat8.run(quad8, cfg, T, seed=0, schedule=s1)          # warm
+    n0 = trace_count()
+    s2 = make_churn(T, 8, worker_outages=((4, 2, 15), (6, 6, 8)))
+    tr = flat8.run(quad8, cfg, T, seed=1, schedule=s2)
+    assert np.isfinite(np.asarray(tr.loss_ref)).all()
+    assert trace_count() == n0          # liveness arrays are jit arguments
+
+
+def test_churn_structure_guards(quad8, flat8):
+    cfg = essp(2)
+    with pytest.raises(ValueError):     # worker-count mismatch
+        flat8.run(quad8, cfg, T, schedule=no_churn(T, 4))
+    fn = flat8.run_fn(quad8, cfg, T)    # compiled churn-free
+    with pytest.raises(ValueError):
+        fn(0, cfg, no_churn(T, 8))

@@ -227,9 +227,11 @@ def test_loss_at_budget_monotone_in_budget(quad_app):
 # ---------------- staleness warm-up fix -------------------------------------
 def _fake_trace(st):
     z = jnp.zeros(())
-    return Trace(loss_ref=z, loss_view=z, staleness=jnp.asarray(st),
+    st = jnp.asarray(st)
+    return Trace(loss_ref=z, loss_view=z, staleness=st,
                  forced=z, delivered=z, u_l2=z, intransit_inf=z,
-                 ship_floats=z, views0=None, x_final=z, locals_final=None)
+                 ship_floats=z, live=jnp.ones(st.shape[:2], bool),
+                 views0=None, x_final=z, locals_final=None)
 
 
 def test_summary_skips_warmup_clocks():
