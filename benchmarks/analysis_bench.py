@@ -1,0 +1,43 @@
+"""Static-analysis gate as a benchmark claim.
+
+``repro.analysis`` (pure AST + the staleness model checker) runs over
+``src/repro`` in strict mode; the claim leaf ``analysis_clean`` is True
+iff zero findings.  Putting the analyzer verdict in ``BENCH_analysis.json``
+means ``benchmarks.compare`` trips on a clean -> dirty transition the same
+way it trips on a perf regression — an analysis regression is a trajectory
+regression.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+from repro.analysis import analyze_paths
+
+from . import common
+
+_SRC = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src", "repro")
+
+
+def run() -> dict:
+    t0 = time.time()
+    findings = analyze_paths([_SRC], strict=True, model_check=True)
+    wall = time.time() - t0
+    claim = {"analysis_clean": not findings,
+             "n_findings": len(findings)}
+    common.emit("analysis_strict_scan", wall * 1e6,
+                f"findings={len(findings)}")
+    out = {"claim": claim, "wall_s": wall,
+           "findings": [str(f) for f in findings]}
+    common.save_json("analysis", out)
+    common.save_bench_json("analysis",
+                           {"scan_wall_s": wall,
+                            "n_findings": len(findings)},
+                           claim=claim)
+    return out
+
+
+if __name__ == "__main__":
+    r = run()
+    print(r["claim"])

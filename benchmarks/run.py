@@ -44,11 +44,11 @@ def main(argv=None) -> int:
                          "experiments/bench")
     args = ap.parse_args(argv)
     t0 = time.time()
-    from . import (autotune_bench, comm_bench, comm_comp, common,
-                   kernels_bench, lda_convergence, lm_consistency,
-                   mf_convergence, pods_bench, psrun_bench, robustness,
-                   staleness_profile, stragglers, sweep_bench,
-                   theory_validation)
+    from . import (analysis_bench, autotune_bench, comm_bench,
+                   comm_comp, common, kernels_bench, lda_convergence,
+                   lm_consistency, mf_convergence, pods_bench,
+                   psrun_bench, robustness, staleness_profile,
+                   stragglers, sweep_bench, theory_validation)
     if args.json_dir:
         common.set_results_dir(args.json_dir)
 
@@ -90,6 +90,7 @@ def main(argv=None) -> int:
     suite("pods_eager_beats_gated", lambda: pods_bench.run()["claim"])
     suite("comm_substrate", lambda: comm_bench.run()["claim"])
     suite("kernels", lambda: kernels_bench.run())
+    suite("analysis", lambda: analysis_bench.run()["claim"])
 
     print("\n=== paper-fidelity claim summary ===")
     for k, v in claims.items():

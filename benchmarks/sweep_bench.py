@@ -27,7 +27,7 @@ from .common import emit, save_json, sweep_meta
 
 
 def _quad_app(P: int = 8, d: int = 256, eta: float = 0.3) -> PSApp:
-    def worker_update(view, local, wid, clock, rng):
+    def worker_update(view, local, _wid, clock, rng):
         g = view + 0.05 * jax.random.normal(rng, view.shape)
         step = eta / jnp.sqrt(1.0 + clock)
         return -step * g / P, local
@@ -60,8 +60,10 @@ def view_profile(T: int = 60, dims=(256, 1024, 4096)):
             "view_bound": bool(slope <= 1.15)}
 
 
-def run(T: int = 100, n_seeds: int = 2, staleness_grid=tuple(range(12)),
+def run(T: int = 100, n_seeds: int = 2, staleness_grid=None,
         seed0: int = 0):
+    if staleness_grid is None:
+        staleness_grid = tuple(range(12))
     app = _quad_app()
     configs = [ssp(s) for s in staleness_grid]
     seeds = np.arange(seed0, seed0 + n_seeds)

@@ -24,7 +24,7 @@ def _quadratic_app(n_workers=8, dim=32, eta=0.4, noise=0.3):
     import jax.numpy as jnp
     from repro.core.ps import PSApp
 
-    def worker_update(view, local, wid, clock, rng):
+    def worker_update(view, local, _wid, clock, rng):
         g = view + noise * jax.random.normal(rng, view.shape)
         step = eta / jnp.sqrt(1.0 + clock)
         return -step * g / n_workers, local

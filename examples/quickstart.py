@@ -28,7 +28,8 @@ for name, cfg in [("BSP ", bsp()), (f"SSP({s})", ssp(s)),
                   (f"ESSP({s})", essp(s))]:
     tr = jax.jit(lambda c=cfg: simulate(app, c, T))()
     bins, probs = staleness.histogram(tr, lo=-(s + 2))
-    bar = " ".join(f"{b}:{p:.2f}" for b, p in zip(bins, probs) if p > 0.005)
+    bar = " ".join(f"{b}:{p:.2f}"
+                   for b, p in zip(bins, probs, strict=True) if p > 0.005)
     loss = np.asarray(tr.loss_ref)
     print(f"{name}  loss {loss[0]:.4f} -> {loss[T//2]:.4f} -> {loss[-1]:.4f}")
     print(f"      staleness histogram  {bar}\n")

@@ -1,0 +1,48 @@
+"""repro.analysis — the static consistency-contract checker.
+
+Run it over the tree::
+
+    PYTHONPATH=src python -m repro.analysis src/ [--strict]
+
+Rule families (``--list-rules`` for the full catalog):
+
+- ``recompile``  — traced-knob control flow / coercion / static_argnums
+  hazards inside jitted code (``traced-branch``, ``traced-coerce``,
+  ``traced-static-arg``);
+- ``rng``        — PRNG keys consumed twice without a split/fold_in
+  (``rng-reuse``);
+- ``collectives``— mesh-axis hygiene and the PR 6
+  masked-before-all-gather churn rule (``axis-unbound``,
+  ``collective-outside-shardmap``, ``unmasked-gather``);
+- ``pytree``     — registered-dataclass immutability and the
+  DATA/META knob-split contract (``pytree-frozen``, ``pytree-mutation``,
+  ``knob-split``);
+- ``pallas``     — kernel hygiene (``pallas-interpret``,
+  ``pallas-blockspec``, ``pallas-ref``);
+- ``staleness``  — the abstract interpreter + model checker over the
+  clock-step contract (``staleness-contract``, ``staleness-extract``).
+
+Suppress a single finding inline with a reasoned ignore::
+
+    x = risky()  # analysis: ignore[rule-id] -- why this one is fine
+
+``--strict`` also rejects ignores without a reason.
+"""
+from .base import (Finding, RULE_DOCS, analyze_paths,  # noqa: F401
+                   load_suppression_file)
+from .staleness_check import (BoundModel,  # noqa: F401
+                              Counterexample, EnforcementModel,
+                              ExtractionError,
+                              extract_bound_model,
+                              extract_bound_model_from_source,
+                              extract_enforcement,
+                              extract_enforcement_from_source,
+                              model_check)
+
+__all__ = [
+    "Finding", "RULE_DOCS", "analyze_paths", "load_suppression_file",
+    "BoundModel", "EnforcementModel", "Counterexample", "ExtractionError",
+    "extract_bound_model", "extract_bound_model_from_source",
+    "extract_enforcement", "extract_enforcement_from_source",
+    "model_check",
+]

@@ -1,0 +1,55 @@
+"""CLI: ``python -m repro.analysis [paths...] [--strict]``.
+
+Exit status 0 iff no findings survive suppression — the contract the CI
+``analysis`` lane gates on.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from .base import RULE_DOCS, analyze_paths, load_suppression_file
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="AST-driven consistency-contract checker")
+    ap.add_argument("paths", nargs="*", default=["src/"],
+                    help="files or directories to scan (default: src/)")
+    ap.add_argument("--strict", action="store_true",
+                    help="also reject `# analysis: ignore[...]` comments "
+                         "written without a reason")
+    ap.add_argument("--suppressions", default=None,
+                    help="repo-level suppression file (lines of "
+                         "`path-glob:rule-id`)")
+    ap.add_argument("--no-model-check", action="store_true",
+                    help="skip the staleness model checker")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalog and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        # importing the driver registers every rule module
+        analyze_paths([], model_check=False)
+        width = max(len(r) for r in RULE_DOCS)
+        for rule_id in sorted(RULE_DOCS):
+            print(f"{rule_id:<{width}}  {RULE_DOCS[rule_id]}")
+        return 0
+
+    supp = (load_suppression_file(args.suppressions)
+            if args.suppressions else None)
+    findings = analyze_paths(args.paths or ["src/"], strict=args.strict,
+                             suppressions=supp,
+                             model_check=not args.no_model_check)
+    for f in findings:
+        print(f)
+    n = len(findings)
+    mode = " (strict)" if args.strict else ""
+    print(f"repro.analysis{mode}: "
+          f"{n} finding{'s' if n != 1 else ''}")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

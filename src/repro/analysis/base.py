@@ -1,0 +1,427 @@
+"""Rule engine of the consistency-contract checker (``repro.analysis``).
+
+The analyzer is a *static* pass: it parses every Python module under the
+scanned roots into an AST and runs a registry of rule checkers over each.
+Nothing is imported or executed — the checker runs in milliseconds and has
+no JAX dependency, so it can gate CI before any compile happens.
+
+Vocabulary shared by the rule modules:
+
+- **traced context** — a function whose body is (or may be) staged by a JAX
+  transform: decorated with ``jit``/``pmap``, passed by name to
+  ``jit``/``vmap``/``lax.scan``/``shard_map``/``pallas_call``/..., returned
+  by a ``make_*`` factory (the repo's idiom for building jit targets), or
+  lexically nested in / called from one of those.  Python-level control
+  flow on *traced values* inside such a context is a recompile (or
+  concretization error) hazard — rule family ``recompile``.
+- **suppression** — an inline ``# analysis: ignore[rule-id] -- reason``
+  comment on the flagged line.  ``--strict`` additionally reports ignores
+  written without a reason (``bare-ignore``): every intentional exception
+  must say *why*.  A repo-level suppression file (``--suppressions``,
+  lines of ``path-glob:rule-id``) covers generated or vendored code.
+
+Rule checkers are registered with :func:`checker`; each returns
+`Finding`s tagged with a rule id from :data:`RULE_DOCS` (the catalog the
+CLI prints with ``--list-rules``).
+"""
+from __future__ import annotations
+
+import ast
+import fnmatch
+import os
+import re
+from dataclasses import dataclass
+
+IGNORE_RE = re.compile(
+    r"#\s*analysis:\s*ignore\[([A-Za-z0-9_\-, ]+)\]"
+    r"(?:\s*--\s*(\S.*))?")
+
+# rule id -> one-line doc (the catalog; see the rule modules for details)
+RULE_DOCS: dict = {}
+
+# registered checker callables: fn(module: ModuleInfo, ctx: RepoContext)
+CHECKERS: list = []
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One rule violation at a source location."""
+
+    rule: str
+    path: str
+    line: int
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+def checker(rule_ids: dict):
+    """Register a rule checker along with the rule ids it may emit."""
+    def deco(fn):
+        RULE_DOCS.update(rule_ids)
+        CHECKERS.append(fn)
+        return fn
+    return deco
+
+
+def add_parents(tree: ast.AST) -> None:
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            child.parent = node  # type: ignore[attr-defined]
+
+
+def dotted(node) -> str | None:
+    """``a.b.c`` for a Name/Attribute chain, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def enclosing_function(node):
+    """Nearest enclosing FunctionDef/AsyncFunctionDef/Lambda (or None)."""
+    cur = getattr(node, "parent", None)
+    while cur is not None:
+        if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef,
+                            ast.Lambda)):
+            return cur
+        cur = getattr(cur, "parent", None)
+    return None
+
+
+class ModuleInfo:
+    """One parsed module plus its inline suppressions."""
+
+    def __init__(self, path: str, source: str, rel: str | None = None):
+        self.path = path
+        self.rel = (rel or path).replace(os.sep, "/")
+        self.source = source
+        self.tree = ast.parse(source, filename=path)
+        add_parents(self.tree)
+        self.name = os.path.splitext(os.path.basename(path))[0]
+        # line -> suppressed rule ids; bare = ignores missing a reason
+        self.ignores: dict = {}
+        self.bare_ignores: list = []
+        for ln, text in enumerate(source.splitlines(), 1):
+            m = IGNORE_RE.search(text)
+            if m:
+                rules = {r.strip() for r in m.group(1).split(",")
+                         if r.strip()}
+                self.ignores[ln] = rules
+                if not (m.group(2) or "").strip():
+                    self.bare_ignores.append((ln, tuple(sorted(rules))))
+
+    def suppressed(self, rule: str, line: int) -> bool:
+        rules = self.ignores.get(line)
+        return bool(rules) and (rule in rules or "*" in rules)
+
+
+# --------------------------------------------------------------------------
+# repo context: knowledge extracted statically from the scanned tree
+# --------------------------------------------------------------------------
+
+# Fallbacks when the scan set does not contain the repo source (e.g. the
+# fixture tests): the knob split of `repro.core.consistency` at the time of
+# writing, and the mesh axes of `repro.launch.mesh`.
+_DEFAULT_DATA = {"staleness", "v0", "push_prob", "straggler_prob",
+                 "straggler_workers", "straggler_rate",
+                 "s_xpod", "t_net_intra", "t_net_xpod",
+                 "agg_clocks", "topk_frac"}
+_DEFAULT_META = {"model", "read_my_writes", "window", "max_extra_delay",
+                 "n_pods", "quant", "wire"}
+_DEFAULT_AXES = {"data", "model", "pod", "batch"}
+
+
+def _literal_strings(node) -> set:
+    out = set()
+    for n in ast.walk(node):
+        if isinstance(n, ast.Constant) and isinstance(n.value, str):
+            out.add(n.value)
+    return out
+
+
+def _tuple_of_names(node) -> set | None:
+    """String elements of a literal tuple/list/set, else None."""
+    if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+        vals = set()
+        for e in node.elts:
+            if isinstance(e, ast.Constant) and isinstance(e.value, str):
+                vals.add(e.value)
+            else:
+                return None
+        return vals
+    return None
+
+
+class RepoContext:
+    """Statically extracted repo knowledge shared by the rule checkers."""
+
+    def __init__(self, modules: list):
+        self.modules = modules
+        self.knob_data = set(_DEFAULT_DATA)
+        self.knob_meta = set(_DEFAULT_META)
+        self.knob_bounds: dict = {}
+        self.int_knobs: set = set()
+        self.mesh_axes = set(_DEFAULT_AXES)
+        self.consistency_mod: ModuleInfo | None = None
+        # (kernel module name, function name) pairs dispatched with a jnp
+        # reference fallback in kernels/ops.py
+        self.pallas_dispatched: set = set()
+        self.ref_names: set = set()
+        for mod in modules:
+            if mod.rel.endswith("core/consistency.py"):
+                self._load_knobs(mod)
+            if mod.rel.endswith("launch/mesh.py"):
+                self.mesh_axes |= _literal_strings(mod.tree)
+            if mod.rel.endswith("kernels/ops.py"):
+                self._load_dispatch(mod)
+            if mod.rel.endswith("kernels/ref.py"):
+                self.ref_names |= {
+                    n.name for n in mod.tree.body
+                    if isinstance(n, ast.FunctionDef)}
+
+    def _load_knobs(self, mod: ModuleInfo) -> None:
+        self.consistency_mod = mod
+        for stmt in mod.tree.body:
+            if not (isinstance(stmt, ast.Assign)
+                    and len(stmt.targets) == 1
+                    and isinstance(stmt.targets[0], ast.Name)):
+                continue
+            name = stmt.targets[0].id
+            vals = _tuple_of_names(stmt.value)
+            if name == "DATA_FIELDS" and vals is not None:
+                self.knob_data = vals
+            elif name == "META_FIELDS" and vals is not None:
+                self.knob_meta = vals
+            elif name == "INT_KNOBS" and vals is not None:
+                self.int_knobs = vals
+            elif name == "KNOB_BOUNDS" and isinstance(stmt.value, ast.Dict):
+                self.knob_bounds = {
+                    k.value: True for k in stmt.value.keys
+                    if isinstance(k, ast.Constant)}
+
+    def _load_dispatch(self, mod: ModuleInfo) -> None:
+        """Parse kernels/ops.py: a kernel function counts as *registered*
+        when some dispatch function references both ``<alias>.<fn>`` and a
+        ``ref.*`` fallback."""
+        for fn in mod.tree.body:
+            if not isinstance(fn, ast.FunctionDef):
+                continue
+            aliases = {"ref": "ref"}
+            for st in ast.walk(fn):
+                if isinstance(st, ast.ImportFrom):
+                    for a in st.names:
+                        aliases[a.asname or a.name] = a.name
+            attrs = [(n.value.id, n.attr) for n in ast.walk(fn)
+                     if isinstance(n, ast.Attribute)
+                     and isinstance(n.value, ast.Name)]
+            has_ref = any(aliases.get(base) == "ref" for base, _ in attrs)
+            if not has_ref:
+                continue
+            for base, attr in attrs:
+                target_mod = aliases.get(base)
+                if target_mod and target_mod != "ref":
+                    self.pallas_dispatched.add((target_mod, attr))
+
+
+# --------------------------------------------------------------------------
+# traced-context detection
+# --------------------------------------------------------------------------
+
+# call names (last dotted segment) that stage their function arguments
+TRANSFORM_CALLEES = {
+    "jit", "vmap", "pmap", "grad", "value_and_grad", "checkpoint", "remat",
+    "scan", "fori_loop", "while_loop", "cond", "switch", "map",
+    "associative_scan", "shard_map", "pallas_call", "custom_vjp",
+    "custom_jvp", "named_call",
+}
+
+
+def _decorator_traced(dec) -> bool:
+    d = dotted(dec)
+    if d and d.split(".")[-1] in ("jit", "pmap"):
+        return True
+    if isinstance(dec, ast.Call):
+        if _decorator_traced(dec.func):
+            return True
+        return any(_decorator_traced(a) for a in dec.args)
+    return False
+
+
+def traced_functions(mod: ModuleInfo) -> dict:
+    """Map of function/lambda nodes considered traced contexts -> reason.
+
+    Heuristic closure: decorated with jit/pmap; passed by name (or as a
+    lambda) to a staging transform; defined inside and returned by a
+    ``make_*`` factory; nested in a traced function; or called by name
+    from a traced body (fixpoint within the module).
+    """
+    defs: dict = {}
+    for node in ast.walk(mod.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            defs.setdefault(node.name, []).append(node)
+    traced: dict = {}
+
+    def mark(node, reason):
+        if node not in traced:
+            traced[node] = reason
+
+    for node in ast.walk(mod.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if any(_decorator_traced(d) for d in node.decorator_list):
+                mark(node, "jit-decorated")
+            # `make_*` factory returning an inner def: the repo idiom for
+            # building jit targets (make_run_fn/body, make_train_step/...)
+            outer = enclosing_function(node)
+            if (isinstance(outer, ast.FunctionDef)
+                    and outer.name.startswith("make_")):
+                for ret in ast.walk(outer):
+                    if (isinstance(ret, ast.Return)
+                            and ret.value is not None):
+                        for n in ast.walk(ret.value):
+                            if (isinstance(n, ast.Name)
+                                    and n.id == node.name):
+                                mark(node, f"returned by {outer.name}")
+        elif isinstance(node, ast.Call):
+            callee = dotted(node.func)
+            base = callee.split(".")[-1] if callee else None
+            if base not in TRANSFORM_CALLEES:
+                continue
+            cargs = list(node.args) + [kw.value for kw in node.keywords]
+            for arg in cargs:
+                if isinstance(arg, ast.Name) and arg.id in defs:
+                    for d in defs[arg.id]:
+                        mark(d, f"passed to {callee}")
+                elif isinstance(arg, ast.Lambda):
+                    mark(arg, f"passed to {callee}")
+
+    # fixpoint: nesting + same-module calls from traced bodies
+    changed = True
+    while changed:
+        changed = False
+        for node in list(traced):
+            for inner in ast.walk(node):
+                if inner is node:
+                    continue
+                if isinstance(inner, (ast.FunctionDef,
+                                      ast.AsyncFunctionDef, ast.Lambda)):
+                    if inner not in traced:
+                        traced[inner] = "nested in traced context"
+                        changed = True
+                if isinstance(inner, ast.Call):
+                    callee = dotted(inner.func)
+                    if callee and "." not in callee and callee in defs:
+                        for d in defs[callee]:
+                            if d not in traced:
+                                traced[d] = f"called from traced context"
+                                changed = True
+    return traced
+
+
+def statements_of(fnode):
+    """Direct statements of a function body, recursing into compound
+    statements but NOT into nested function/lambda definitions."""
+    out = []
+
+    def visit(stmts):
+        for st in stmts:
+            if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            out.append(st)
+            for field in ("body", "orelse", "finalbody"):
+                if hasattr(st, field):
+                    visit(getattr(st, field))
+            if hasattr(st, "handlers"):
+                for h in st.handlers:
+                    visit(h.body)
+    if isinstance(fnode, ast.Lambda):
+        return []
+    visit(fnode.body)
+    return out
+
+
+# --------------------------------------------------------------------------
+# driver
+# --------------------------------------------------------------------------
+
+def collect_files(paths) -> list:
+    files = []
+    for p in paths:
+        if os.path.isfile(p):
+            files.append(p)
+            continue
+        for root, dirs, names in os.walk(p):
+            dirs[:] = [d for d in dirs if d != "__pycache__"]
+            for n in sorted(names):
+                if n.endswith(".py"):
+                    files.append(os.path.join(root, n))
+    return files
+
+
+def load_modules(paths):
+    """(modules, findings): unparsable files become syntax-error findings."""
+    modules, findings = [], []
+    for f in collect_files(paths):
+        with open(f, encoding="utf-8") as fh:
+            src = fh.read()
+        try:
+            modules.append(ModuleInfo(f, src, rel=os.path.relpath(f)))
+        except SyntaxError as e:
+            findings.append(Finding("syntax-error", f, e.lineno or 0,
+                                    str(e.msg)))
+    return modules, findings
+
+
+def load_suppression_file(path: str) -> list:
+    """Lines of ``path-glob:rule-id  # reason`` -> [(glob, rule)]."""
+    out = []
+    with open(path, encoding="utf-8") as fh:
+        for line in fh:
+            line = line.split("#", 1)[0].strip()
+            if not line:
+                continue
+            glob, _, rule = line.rpartition(":")
+            if glob and rule:
+                out.append((glob, rule))
+    return out
+
+
+def analyze_paths(paths, strict: bool = False,
+                  suppressions: list | None = None,
+                  model_check: bool = True):
+    """Run every registered rule over the modules under ``paths``.
+
+    Returns the filtered (non-suppressed) findings, sorted by location.
+    ``suppressions`` is a list of ``(path-glob, rule-id)`` pairs from a
+    repo-level suppression file.
+    """
+    # the rule modules self-register on import
+    from . import collectives, pallas_rules, pytree_rules, recompile, rng  # noqa: F401
+    modules, findings = load_modules(paths)
+    ctx = RepoContext(modules)
+    for mod in modules:
+        for check in CHECKERS:
+            for f in check(mod, ctx):
+                if mod.suppressed(f.rule, f.line):
+                    continue
+                findings.append(f)
+        if strict:
+            for ln, rules in mod.bare_ignores:
+                findings.append(Finding(
+                    "bare-ignore", mod.rel, ln,
+                    f"suppression of {', '.join(rules)} has no reason; "
+                    f"write `# analysis: ignore[rule] -- why`"))
+    if model_check:
+        from .staleness_check import check_repo
+        findings.extend(check_repo(modules))
+    if suppressions:
+        findings = [
+            f for f in findings
+            if not any(r == f.rule and fnmatch.fnmatch(f.path, g)
+                       for g, r in suppressions)]
+    return sorted(findings, key=lambda f: (f.path, f.line, f.rule))

@@ -1,0 +1,245 @@
+"""Rule family ``collectives``: axis hygiene + the churn mask rule.
+
+- ``axis-unbound`` — a collective (``psum``/``all_gather``/``ppermute``/
+  ...) names a mesh axis as a string literal that no ``shard_map`` /
+  ``Mesh`` spec in the scanned tree binds.  An unbound axis name fails
+  only at trace time *on the sharded path* — single-device CI never
+  executes it, so this is exactly the class of bug the forced-device
+  lanes exist for, caught statically instead.
+- ``collective-outside-shardmap`` — a collective with a literal axis name
+  in a function that is never (transitively) passed to ``shard_map`` —
+  the axis could not be bound at the call site.
+- ``unmasked-gather`` — the PR 6 churn race rule: inside churn-aware code
+  (any function that derives a ``live``/``churn_live`` mask), a
+  worker-axis ``all_gather``/``psum`` of a plain variable that was never
+  run through the live mask (``jnp.where(live..., x, 0)``).  A dead
+  producer's stale shard entering a reduction silently diverges from the
+  survivor-set oracle; masking *before* the gather keeps reductions
+  order-identical with the simulator.
+
+Variable (non-literal) axis arguments are skipped — e.g. the
+``worker_axes`` generalization in ``psrun.runtime`` and the
+``axis_names`` parameter of ``psdist.grad_sync`` bind axes dynamically,
+which this pass cannot refute.
+"""
+from __future__ import annotations
+
+import ast
+
+from .base import Finding, checker, dotted, enclosing_function
+
+COLLECTIVES = {"psum", "pmean", "pmax", "pmin", "all_gather", "ppermute",
+               "all_to_all", "pshuffle", "psum_scatter", "axis_index"}
+# collectives whose *operand* is a reduction over producers (the mask rule)
+REDUCING = {"all_gather", "psum", "pmean", "psum_scatter"}
+WORKER_AXIS_LITERALS = {"data", "pod"}
+
+_DOCS = {
+    "axis-unbound": "collective names a mesh axis no shard_map/mesh spec "
+                    "binds",
+    "collective-outside-shardmap": "collective with a literal axis name "
+                                   "outside any shard_map-staged function",
+    "unmasked-gather": "worker-axis gather/psum of un-live-masked data in "
+                       "churn-aware code (PR 6 masked-before-all-gather "
+                       "rule)",
+}
+
+
+def _axis_literals(node) -> set | None:
+    """Literal axis names of an axis argument, or None if dynamic."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return {node.value}
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = set()
+        for e in node.elts:
+            if isinstance(e, ast.Constant) and isinstance(e.value, str):
+                out.add(e.value)
+            else:
+                return None
+        return out
+    return None
+
+
+def _axis_arg(call, base: str):
+    """The axis-name argument node of a collective call, or None."""
+    for kw in call.keywords:
+        if kw.arg in ("axis_name", "axis"):
+            # jax.lax collectives use `axis_name`; `axis=` on all_gather is
+            # the positional array axis, not a mesh axis
+            if kw.arg == "axis_name":
+                return kw.value
+    if base == "axis_index":
+        return call.args[0] if call.args else None
+    return call.args[1] if len(call.args) > 1 else None
+
+
+def _shardmapped_functions(mod) -> set:
+    """Function nodes (transitively) staged by a shard_map in this module."""
+    defs: dict = {}
+    for node in ast.walk(mod.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            defs.setdefault(node.name, []).append(node)
+    staged: set = set()
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Call):
+            d = dotted(node.func)
+            if not d or d.split(".")[-1] != "shard_map":
+                continue
+            for arg in node.args[:1] + [kw.value for kw in node.keywords
+                                        if kw.arg in (None, "f")]:
+                if isinstance(arg, ast.Name):
+                    for fn in defs.get(arg.id, []):
+                        staged.add(fn)
+                elif isinstance(arg, ast.Lambda):
+                    staged.add(arg)
+    changed = True
+    while changed:
+        changed = False
+        for fn in list(staged):
+            for inner in ast.walk(fn):
+                if inner is fn:
+                    continue
+                if isinstance(inner, (ast.FunctionDef,
+                                      ast.AsyncFunctionDef, ast.Lambda)) \
+                        and inner not in staged:
+                    staged.add(inner)
+                    changed = True
+                if isinstance(inner, ast.Call):
+                    d = dotted(inner.func)
+                    if d and "." not in d:
+                        for fn2 in defs.get(d, []):
+                            if fn2 not in staged:
+                                staged.add(fn2)
+                                changed = True
+    return staged
+
+
+def _function_masked_vars(fnode):
+    """(live_vars, masked_vars) within one function body."""
+    live_vars: set = set()
+    masked: set = set()
+    for node in ast.walk(fnode):
+        if isinstance(node, ast.Assign):
+            rhs_names = {n.id for n in ast.walk(node.value)
+                         if isinstance(n, ast.Name)}
+            is_churn_src = isinstance(node.value, ast.Call) and (
+                (dotted(node.value.func) or "").split(".")[-1]
+                == "churn_live")
+            tgt_names = [n.id for t in node.targets
+                         for n in ast.walk(t) if isinstance(n, ast.Name)]
+            if is_churn_src:
+                live_vars.update(tgt_names)
+                continue
+            if any(v in live_vars or v.startswith("live")
+                   for v in rhs_names):
+                live_vars.update(
+                    t for t in tgt_names if t.startswith("live"))
+                masked.update(tgt_names)
+        for n in [node] if isinstance(node, ast.arg) else []:
+            if n.arg.startswith("live"):
+                live_vars.add(n.arg)
+    for a in getattr(fnode, "args", None).args if hasattr(fnode, "args") \
+            and not isinstance(fnode, ast.Lambda) else []:
+        if a.arg.startswith("live"):
+            live_vars.add(a.arg)
+    return live_vars, masked
+
+
+def _is_worker_axis(axis_node) -> bool:
+    lits = _axis_literals(axis_node)
+    if lits is not None:
+        return bool(lits & WORKER_AXIS_LITERALS)
+    return isinstance(axis_node, ast.Name) \
+        and axis_node.id in ("worker_axes", "axes")
+
+
+def _lambda_params(fnode) -> set:
+    if not isinstance(fnode, ast.Lambda):
+        return set()
+    return {a.arg for a in fnode.args.args}
+
+
+@checker(_DOCS)
+def check_collectives(mod, ctx):
+    findings = []
+    staged = _shardmapped_functions(mod)
+    known_axes = set(ctx.mesh_axes)
+    # axis names bound by shard_map/Mesh specs in this very module
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Call):
+            d = dotted(node.func)
+            last = d.split(".")[-1] if d else ""
+            if last in ("shard_map", "Mesh", "make_mesh",
+                        "AbstractMesh", "PartitionSpec"):
+                for n in ast.walk(node):
+                    if isinstance(n, ast.Constant) \
+                            and isinstance(n.value, str):
+                        known_axes.add(n.value)
+
+    # per-function churn-mask context
+    fn_mask_cache: dict = {}
+
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        d = dotted(node.func)
+        if not d:
+            continue
+        base = d.split(".")[-1]
+        if base not in COLLECTIVES:
+            continue
+        # require a lax-ish or bare call so that e.g. np.all_to_all in
+        # unrelated code does not trip the rule
+        if "." in d and "lax" not in d and not d.startswith("jax."):
+            continue
+        axis_node = _axis_arg(node, base)
+        if axis_node is None:
+            continue
+        lits = _axis_literals(axis_node)
+        fnode = enclosing_function(node)
+        if lits is not None:
+            unknown = sorted(lits - known_axes)
+            if unknown:
+                findings.append(Finding(
+                    "axis-unbound", mod.rel, node.lineno,
+                    f"`{base}` names mesh axis {unknown} not bound by any "
+                    f"shard_map/mesh spec in the scanned tree"))
+            in_staged = False
+            cur = fnode
+            while cur is not None:
+                if cur in staged:
+                    in_staged = True
+                    break
+                cur = enclosing_function(cur)
+            if not in_staged:
+                findings.append(Finding(
+                    "collective-outside-shardmap", mod.rel, node.lineno,
+                    f"`{base}('{'/'.join(sorted(lits))}')` in a function "
+                    f"never passed to shard_map — the axis cannot be "
+                    f"bound here"))
+
+        # masked-before-all-gather (worker-axis reductions only)
+        if base in REDUCING and node.args \
+                and _is_worker_axis(axis_node) and fnode is not None:
+            root = fnode
+            # mask context is per outermost staged function: the step/body
+            # closure shares live_* locals
+            while enclosing_function(root) is not None:
+                root = enclosing_function(root)
+            if root not in fn_mask_cache:
+                fn_mask_cache[root] = _function_masked_vars(root)
+            live_vars, masked = fn_mask_cache[root]
+            if not live_vars:
+                continue            # not churn-aware code
+            operand = node.args[0]
+            if isinstance(operand, ast.Name) \
+                    and operand.id not in masked \
+                    and operand.id not in live_vars \
+                    and operand.id not in _lambda_params(fnode):
+                findings.append(Finding(
+                    "unmasked-gather", mod.rel, node.lineno,
+                    f"worker-axis `{base}` of `{operand.id}` in "
+                    f"churn-aware code without a prior live-mask "
+                    f"(`jnp.where(live..., {operand.id}, 0)`) — dead "
+                    f"producers' stale shards enter the reduction"))
+    return findings

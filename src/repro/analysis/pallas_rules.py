@@ -1,0 +1,144 @@
+"""Rule family ``pallas``: kernel-call hygiene.
+
+- ``pallas-interpret`` — a literal ``interpret=True`` on a
+  ``pallas_call`` outside ``tests/``.  Interpret mode is the
+  correctness fallback; a hardcoded True in library code silently turns
+  the "Pallas" path into a slow emulation everywhere (the repo threads a
+  runtime ``interpret=interpret`` flag instead, selected by
+  ``kernels.ops.set_backend``).
+- ``pallas-blockspec`` — statically checkable ``BlockSpec`` mismatches:
+  the index-map lambda must return as many coordinates as the block
+  shape has dimensions, and (when the grid is a literal) take one
+  parameter per grid axis.  Both mistakes lower to wrong-strided loads
+  that interpret mode happily executes — the worst kind of silent wrong.
+- ``pallas-ref`` — every function containing a ``pallas_call`` must have
+  a registered jnp reference: either the kernels/ops.py dispatcher
+  routes it with a ``ref.*`` fallback in the same dispatch function, or
+  (for standalone modules/fixtures) the defining module itself
+  references a ``<name>_ref`` implementation.  The reference is what
+  CI's oracle tests diff the kernel against; an unreferenced kernel is
+  unverifiable.
+"""
+from __future__ import annotations
+
+import ast
+
+from .base import Finding, checker, dotted, enclosing_function
+
+_DOCS = {
+    "pallas-interpret": "literal interpret=True on a pallas_call outside "
+                        "tests/",
+    "pallas-blockspec": "BlockSpec index-map arity mismatches block shape "
+                        "or grid rank",
+    "pallas-ref": "pallas_call without a registered jnp reference "
+                  "(ops.py dispatch or <name>_ref)",
+}
+
+
+def _literal_tuple_len(node) -> int | None:
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return len(node.elts)
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return 1
+    return None
+
+
+def _kwarg(call, name):
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def _blockspec_calls(node):
+    for n in ast.walk(node):
+        if isinstance(n, ast.Call):
+            d = dotted(n.func)
+            if d and d.split(".")[-1] == "BlockSpec":
+                yield n
+
+
+def _check_blockspec(spec, grid_rank, mod, findings):
+    shape_node = spec.args[0] if spec.args else _kwarg(spec, "block_shape")
+    imap = spec.args[1] if len(spec.args) > 1 \
+        else _kwarg(spec, "index_map")
+    if imap is None or not isinstance(imap, ast.Lambda):
+        return
+    rank = _literal_tuple_len(shape_node)
+    n_params = len(imap.args.args)
+    ret_len = _literal_tuple_len(imap.body)
+    if ret_len is None and not isinstance(imap.body, ast.Tuple):
+        # single-expression body: one coordinate
+        ret_len = 1
+    if rank is not None and ret_len is not None and ret_len != rank:
+        findings.append(Finding(
+            "pallas-blockspec", mod.rel, spec.lineno,
+            f"BlockSpec index map returns {ret_len} coordinate(s) for a "
+            f"rank-{rank} block shape — wrong-strided loads"))
+    if grid_rank is not None and n_params != grid_rank:
+        findings.append(Finding(
+            "pallas-blockspec", mod.rel, spec.lineno,
+            f"BlockSpec index map takes {n_params} grid index(es) but the "
+            f"grid is rank {grid_rank}"))
+
+
+def _module_has_ref(mod, fn_name: str) -> bool:
+    """Standalone registration: the module references `<fn_name>_ref` or a
+    `ref.`-qualified fallback."""
+    want = f"{fn_name}_ref"
+    for n in ast.walk(mod.tree):
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                and n.name == want:
+            return True
+        if isinstance(n, ast.Name) and n.id == want:
+            return True
+    return False
+
+
+@checker(_DOCS)
+def check_pallas(mod, ctx):
+    findings = []
+    parts = mod.rel.split("/")
+    in_tests = ("tests" in parts or "test" in parts) \
+        and "analysis_fixtures" not in parts
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        d = dotted(node.func)
+        if not d or d.split(".")[-1] != "pallas_call":
+            continue
+        interp = _kwarg(node, "interpret")
+        if isinstance(interp, ast.Constant) and interp.value is True \
+                and not in_tests:
+            findings.append(Finding(
+                "pallas-interpret", mod.rel, interp.lineno,
+                "literal interpret=True outside tests/ — hardcodes the "
+                "emulated path; thread the backend's interpret flag "
+                "(kernels.ops.set_backend) instead"))
+
+        grid = _kwarg(node, "grid")
+        grid_rank = _literal_tuple_len(grid) if grid is not None else None
+        for key in ("in_specs", "out_specs"):
+            specs = _kwarg(node, key)
+            if specs is None:
+                continue
+            for spec in _blockspec_calls(specs):
+                _check_blockspec(spec, grid_rank, mod, findings)
+
+        fnode = enclosing_function(node)
+        while isinstance(fnode, ast.Lambda) or (
+                fnode is not None
+                and enclosing_function(fnode) is not None):
+            fnode = enclosing_function(fnode)
+        if fnode is None or in_tests:
+            continue
+        fn_name = fnode.name
+        dispatched = any(f == fn_name for _, f in ctx.pallas_dispatched)
+        if not dispatched and not _module_has_ref(mod, fn_name):
+            findings.append(Finding(
+                "pallas-ref", mod.rel, node.lineno,
+                f"`{fn_name}` wraps a pallas_call but has no registered "
+                f"jnp reference (no kernels/ops.py dispatch with a ref.* "
+                f"fallback, no `{fn_name}_ref` in the module) — the "
+                f"kernel is unverifiable against an oracle"))
+    return findings

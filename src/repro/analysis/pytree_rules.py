@@ -1,0 +1,181 @@
+"""Rule family ``pytree``: registered-dataclass and knob-split contracts.
+
+- ``pytree-frozen`` — a ``jax.tree_util.register_dataclass`` dataclass
+  must be ``frozen=True``.  Registered pytrees are flattened/unflattened
+  by value; in-place mutation of an instance desynchronizes it from the
+  traced copies JAX holds, and a frozen class turns that bug into an
+  immediate ``FrozenInstanceError``.
+- ``pytree-mutation`` — attribute assignment (or
+  ``object.__setattr__``) on an instance of a registered pytree class.
+- ``knob-split`` — the static/traced leaf classification of
+  ``ConsistencyConfig`` must be internally consistent: ``DATA_FIELDS``
+  and ``META_FIELDS`` partition the dataclass fields exactly (no overlap,
+  no stragglers), every ``KNOB_BOUNDS`` entry is a traced DATA field
+  (bounds describe sweepable knobs), and ``INT_KNOBS`` is a subset of
+  ``KNOB_BOUNDS``.  This is the contract the sweep engine, the tuner and
+  the recompile rules all assume.
+"""
+from __future__ import annotations
+
+import ast
+
+from .base import Finding, checker, dotted
+
+_DOCS = {
+    "pytree-frozen": "registered pytree dataclass is not frozen=True",
+    "pytree-mutation": "attribute assignment on a registered pytree "
+                       "instance",
+    "knob-split": "ConsistencyConfig static/traced field classification "
+                  "is inconsistent",
+}
+
+
+def _is_register_dataclass(dec) -> bool:
+    d = dotted(dec if not isinstance(dec, ast.Call) else dec.func)
+    return bool(d) and d.split(".")[-1] == "register_dataclass"
+
+
+def _dataclass_frozen(cls) -> bool | None:
+    """True/False if decorated with @dataclass, None if not a dataclass."""
+    for dec in cls.decorator_list:
+        d = dotted(dec if not isinstance(dec, ast.Call) else dec.func)
+        if d and d.split(".")[-1] == "dataclass":
+            if isinstance(dec, ast.Call):
+                for kw in dec.keywords:
+                    if kw.arg == "frozen" \
+                            and isinstance(kw.value, ast.Constant):
+                        return bool(kw.value.value)
+            return False
+    return None
+
+
+def _registered_classes(mod) -> dict:
+    """Registered pytree dataclass name -> ClassDef in this module."""
+    out = {}
+    classes = {n.name: n for n in ast.walk(mod.tree)
+               if isinstance(n, ast.ClassDef)}
+    for name, cls in classes.items():
+        if any(_is_register_dataclass(d) for d in cls.decorator_list):
+            out[name] = cls
+    # call form: jax.tree_util.register_dataclass(Cls, ...)
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Call) and _is_register_dataclass(node.func):
+            for arg in node.args[:1]:
+                if isinstance(arg, ast.Name) and arg.id in classes:
+                    out[arg.id] = classes[arg.id]
+    return out
+
+
+def _instance_vars(mod, class_names: set) -> dict:
+    """var name -> class name, for vars provably bound to instances."""
+    out = {}
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            d = dotted(node.value.func)
+            if d and d.split(".")[-1] in class_names:
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        out[t.id] = d.split(".")[-1]
+        elif isinstance(node, ast.arg) and node.annotation is not None:
+            d = dotted(node.annotation)
+            if d and d.split(".")[-1] in class_names:
+                out[node.arg] = d.split(".")[-1]
+        elif isinstance(node, ast.AnnAssign) \
+                and isinstance(node.target, ast.Name) \
+                and node.annotation is not None:
+            d = dotted(node.annotation)
+            if d and d.split(".")[-1] in class_names:
+                out[node.target.id] = d.split(".")[-1]
+    return out
+
+
+@checker(_DOCS)
+def check_pytree(mod, ctx):
+    findings = []
+    registered = _registered_classes(mod)
+    for name, cls in registered.items():
+        frozen = _dataclass_frozen(cls)
+        if frozen is False:
+            findings.append(Finding(
+                "pytree-frozen", mod.rel, cls.lineno,
+                f"registered pytree dataclass `{name}` is not "
+                f"frozen=True — in-place mutation would desynchronize "
+                f"instances from their traced flatten/unflatten copies"))
+
+    if registered:
+        inst = _instance_vars(mod, set(registered))
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Assign):
+                for t in node.targets:
+                    if isinstance(t, ast.Attribute) \
+                            and isinstance(t.value, ast.Name) \
+                            and t.value.id in inst \
+                            and t.value.id != "self":
+                        findings.append(Finding(
+                            "pytree-mutation", mod.rel, node.lineno,
+                            f"attribute assignment on registered pytree "
+                            f"instance `{t.value.id}` "
+                            f"({inst[t.value.id]}) — use dataclasses."
+                            f"replace / construct a new instance"))
+            elif isinstance(node, ast.Call):
+                d = dotted(node.func)
+                if d == "object.__setattr__" and node.args \
+                        and isinstance(node.args[0], ast.Name) \
+                        and node.args[0].id in inst:
+                    findings.append(Finding(
+                        "pytree-mutation", mod.rel, node.lineno,
+                        f"object.__setattr__ on registered pytree "
+                        f"instance `{node.args[0].id}` "
+                        f"({inst[node.args[0].id]})"))
+
+    findings.extend(_check_knob_split(mod, ctx))
+    return findings
+
+
+def _check_knob_split(mod, ctx):
+    """Consistency of the DATA/META split — only in the defining module."""
+    if ctx.consistency_mod is not mod or mod is None:
+        return []
+    findings = []
+    line = 1
+    fields = set()
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.ClassDef) \
+                and node.name == "ConsistencyConfig":
+            line = node.lineno
+            for st in node.body:
+                if isinstance(st, ast.AnnAssign) \
+                        and isinstance(st.target, ast.Name):
+                    fields.add(st.target.id)
+    data, meta = ctx.knob_data, ctx.knob_meta
+    overlap = sorted(data & meta)
+    if overlap:
+        findings.append(Finding(
+            "knob-split", mod.rel, line,
+            f"fields in both DATA_FIELDS and META_FIELDS: {overlap}"))
+    if fields:
+        missing = sorted(fields - data - meta)
+        phantom = sorted((data | meta) - fields)
+        if missing:
+            findings.append(Finding(
+                "knob-split", mod.rel, line,
+                f"ConsistencyConfig fields in neither DATA_FIELDS nor "
+                f"META_FIELDS: {missing} — unclassified leaves break the "
+                f"pytree registration"))
+        if phantom:
+            findings.append(Finding(
+                "knob-split", mod.rel, line,
+                f"DATA_FIELDS/META_FIELDS name non-existent fields: "
+                f"{phantom}"))
+    bad_bounds = sorted(set(ctx.knob_bounds) - data)
+    if bad_bounds:
+        findings.append(Finding(
+            "knob-split", mod.rel, line,
+            f"KNOB_BOUNDS entries that are not traced DATA fields: "
+            f"{bad_bounds} — bounds describe sweepable (traced) knobs"))
+    bad_int = sorted(ctx.int_knobs - set(ctx.knob_bounds))
+    if bad_int:
+        findings.append(Finding(
+            "knob-split", mod.rel, line,
+            f"INT_KNOBS not covered by KNOB_BOUNDS: {bad_int}"))
+    return findings

@@ -1,0 +1,223 @@
+"""Rule family ``recompile``: traced-knob hazards inside jitted code.
+
+The PR 1 pytree split exists so that every sweepable consistency knob
+(``consistency.DATA_FIELDS``) is a *traced* leaf: one compile covers the
+whole (config x seed) grid.  Python-level control flow, ``int()``-style
+coercion, or ``hash()`` on such a knob inside a traced context either
+fails at trace time (ConcretizationTypeError) or — worse — silently bakes
+the knob into the compiled program and recompiles per config point,
+destroying the one-compile property the sweep engine is built on.
+
+Rules:
+
+- ``traced-branch``   — ``if`` / ``while`` / ``assert`` on an expression
+  tainted by a traced knob, inside a traced context;
+- ``traced-coerce``   — ``int()`` / ``bool()`` / ``float()`` / ``hash()``
+  / ``range()`` of a tainted expression, inside a traced context;
+- ``traced-static-arg`` — a ``jit(..., static_argnames=...)`` /
+  ``static_argnums`` marking a config or data knob static (per-value
+  recompilation), detected on the jit call and on call sites of
+  same-module jit-wrapped aliases.
+
+Taint seeds are ``<cfg>.<knob>`` attribute reads where ``<cfg>`` is a
+parameter named ``cfg``/``config`` or annotated ``ConsistencyConfig``,
+and ``<knob>`` is a DATA field; taint propagates flow-insensitively
+through same-function assignments.  Static META fields
+(``cfg.model`` etc.) never taint — branching on them is the supported
+per-family specialization.
+"""
+from __future__ import annotations
+
+import ast
+
+from .base import (Finding, checker, dotted, enclosing_function,
+                   statements_of, traced_functions)
+
+CONFIG_NAMES = {"cfg", "config", "cfg_run"}
+COERCERS = {"int", "bool", "float", "hash", "range"}
+
+_DOCS = {
+    "traced-branch": "Python if/while/assert on a traced consistency knob "
+                     "inside jitted code",
+    "traced-coerce": "int()/bool()/float()/hash()/range() of a traced "
+                     "knob inside jitted code",
+    "traced-static-arg": "traced config/knob passed through "
+                         "static_argnums/static_argnames",
+}
+
+
+def _is_config_annotation(node) -> bool:
+    d = dotted(node) if node is not None else None
+    return bool(d) and d.split(".")[-1] == "ConsistencyConfig"
+
+
+def _config_params(fnode) -> set:
+    """Parameter names of ``fnode`` that carry a ConsistencyConfig."""
+    out = set()
+    args = fnode.args
+    for a in (args.posonlyargs + args.args + args.kwonlyargs):
+        if a.arg in CONFIG_NAMES or _is_config_annotation(a.annotation):
+            out.add(a.arg)
+    return out
+
+
+def _collect_taint(fnode, cfg_names: set, knob_data: set) -> set:
+    """Flow-insensitive taint fixpoint over same-function assignments."""
+    tainted: set = set()
+
+    def expr_tainted(node) -> bool:
+        for n in ast.walk(node):
+            if isinstance(n, ast.Attribute) and n.attr in knob_data \
+                    and isinstance(n.value, ast.Name) \
+                    and n.value.id in cfg_names:
+                return True
+            if isinstance(n, ast.Name) and n.id in tainted:
+                return True
+        return False
+
+    stmts = statements_of(fnode)
+    changed = True
+    while changed:
+        changed = False
+        for st in stmts:
+            targets = []
+            if isinstance(st, ast.Assign):
+                targets, value = st.targets, st.value
+            elif isinstance(st, ast.AugAssign):
+                targets, value = [st.target], st.value
+            elif isinstance(st, ast.AnnAssign) and st.value is not None:
+                targets, value = [st.target], st.value
+            else:
+                continue
+            if not expr_tainted(value):
+                continue
+            for t in targets:
+                for n in ast.walk(t):
+                    if isinstance(n, ast.Name) and n.id not in tainted:
+                        tainted.add(n.id)
+                        changed = True
+    return tainted, expr_tainted
+
+
+def _owned_by(node, fnode) -> bool:
+    return enclosing_function(node) is fnode
+
+
+@checker(_DOCS)
+def check_recompile(mod, ctx):
+    findings = []
+    traced = traced_functions(mod)
+    knob_data = ctx.knob_data
+
+    for fnode in traced:
+        if isinstance(fnode, ast.Lambda):
+            continue
+        cfg_names = _config_params(fnode)
+        if not cfg_names:
+            continue
+        _, expr_tainted = _collect_taint(fnode, cfg_names, knob_data)
+
+        for node in ast.walk(fnode):
+            if not _owned_by(node, fnode):
+                continue
+            if isinstance(node, (ast.If, ast.While)) \
+                    and expr_tainted(node.test):
+                kind = "if" if isinstance(node, ast.If) else "while"
+                findings.append(Finding(
+                    "traced-branch", mod.rel, node.lineno,
+                    f"Python `{kind}` on a traced consistency knob inside "
+                    f"jitted `{fnode.name}` — recompile/concretization "
+                    f"hazard; use jnp.where/lax.cond"))
+            elif isinstance(node, ast.Assert) \
+                    and expr_tainted(node.test):
+                findings.append(Finding(
+                    "traced-branch", mod.rel, node.lineno,
+                    f"assert on a traced consistency knob inside jitted "
+                    f"`{fnode.name}` — concretizes the knob at trace time"))
+            elif isinstance(node, ast.Call):
+                d = dotted(node.func)
+                if d in COERCERS and any(expr_tainted(a)
+                                         for a in node.args):
+                    findings.append(Finding(
+                        "traced-coerce", mod.rel, node.lineno,
+                        f"`{d}()` of a traced consistency knob inside "
+                        f"jitted `{fnode.name}` — bakes the knob into the "
+                        f"compiled program (one compile per value)"))
+
+    findings.extend(_check_static_args(mod, ctx))
+    return findings
+
+
+def _jit_static_info(call):
+    """(static_names, static_nums) literals of a jit call, else None."""
+    d = dotted(call.func)
+    if not d or d.split(".")[-1] != "jit":
+        return None
+    names, nums = set(), set()
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            if isinstance(kw.value, ast.Constant) \
+                    and isinstance(kw.value.value, str):
+                names.add(kw.value.value)
+            elif isinstance(kw.value, (ast.Tuple, ast.List)):
+                for e in kw.value.elts:
+                    if isinstance(e, ast.Constant) \
+                            and isinstance(e.value, str):
+                        names.add(e.value)
+        elif kw.arg == "static_argnums":
+            if isinstance(kw.value, ast.Constant) \
+                    and isinstance(kw.value.value, int):
+                nums.add(kw.value.value)
+            elif isinstance(kw.value, (ast.Tuple, ast.List)):
+                for e in kw.value.elts:
+                    if isinstance(e, ast.Constant) \
+                            and isinstance(e.value, int):
+                        nums.add(e.value)
+    return names, nums
+
+
+def _check_static_args(mod, ctx):
+    findings = []
+    # jit-wrapped aliases in this module: name -> static positions
+    wrapped: dict = {}
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        info = _jit_static_info(node)
+        if info is None:
+            continue
+        names, nums = info
+        bad = sorted(n for n in names
+                     if n in ctx.knob_data or n in CONFIG_NAMES)
+        if bad:
+            findings.append(Finding(
+                "traced-static-arg", mod.rel, node.lineno,
+                f"static_argnames marks traced knob(s) {bad} static — "
+                f"recompiles per config value; keep data knobs traced "
+                f"(consistency.DATA_FIELDS)"))
+        parent = getattr(node, "parent", None)
+        if nums and isinstance(parent, ast.Assign) \
+                and len(parent.targets) == 1 \
+                and isinstance(parent.targets[0], ast.Name):
+            wrapped[parent.targets[0].id] = nums
+    if wrapped:
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Call) \
+                    and isinstance(node.func, ast.Name) \
+                    and node.func.id in wrapped:
+                for pos in wrapped[node.func.id]:
+                    if pos >= len(node.args):
+                        continue
+                    arg = node.args[pos]
+                    hit = None
+                    for n in ast.walk(arg):
+                        if isinstance(n, ast.Attribute) \
+                                and n.attr in ctx.knob_data:
+                            hit = n.attr
+                    if hit is not None:
+                        findings.append(Finding(
+                            "traced-static-arg", mod.rel, node.lineno,
+                            f"call passes traced knob `{hit}` in static "
+                            f"position {pos} of jit-wrapped "
+                            f"`{node.func.id}` — one compile per value"))
+    return findings

@@ -95,7 +95,7 @@ def make_lda_app(cfg: LDAConfig) -> PSApp:
     ndk0, nkw0_per = jax.vmap(counts_for_worker)(z0, words, docid)
     nkw0 = jnp.sum(nkw0_per, axis=0)                          # [K, V]
 
-    def worker_update(view, local, wid, clock, rng):
+    def worker_update(view, local, _wid, clock, rng):
         nkw = view.reshape(K, V)
         # Clamp: staleness can transiently make counts locally negative;
         # real samplers clamp at read time too.

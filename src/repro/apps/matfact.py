@@ -95,7 +95,7 @@ def make_mf_app(cfg: MFConfig) -> PSApp:
     def unpack(x):
         return x[: n * k].reshape(n, k), x[n * k:].reshape(k, m)
 
-    def worker_update(view, local, wid, clock, rng):
+    def worker_update(view, local, _wid, clock, rng):
         L, R = unpack(view)
         gamma = cfg.lr / jnp.sqrt(1.0 + clock) if cfg.lr_decay else cfg.lr
         idx = jax.random.randint(rng, (cfg.batch,), 0, n_obs_per)

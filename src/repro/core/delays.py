@@ -60,7 +60,7 @@ from .consistency import ConsistencyConfig
 
 
 @jax.tree_util.register_dataclass
-@dataclass
+@dataclass(frozen=True)
 class ChurnSchedule:
     """Per-clock fleet churn, indexed by absolute clock.
 
@@ -156,7 +156,7 @@ def churn_live(schedule: ChurnSchedule, c):
     return live_now, died
 
 
-def churn_rates(cfg: ConsistencyConfig, schedule: ChurnSchedule | None,
+def churn_rates(_cfg: ConsistencyConfig, schedule: ChurnSchedule | None,
                 P: int, c) -> jax.Array | None:
     """Per-producer rate multipliers at clock ``c`` under the schedule's
     straggler regime, or ``None`` when the schedule carries no regime

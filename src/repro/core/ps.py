@@ -155,7 +155,7 @@ class PSApp:
 
 
 @jax.tree_util.register_dataclass
-@dataclass
+@dataclass(frozen=True)
 class Trace:
     """Per-clock traces from a simulation (leading axis = clock)."""
 

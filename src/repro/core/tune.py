@@ -87,7 +87,7 @@ def grid_configs(bases: ConsistencyConfig | Sequence[ConsistencyConfig],
     out = []
     for base in bases:
         for combo in itertools.product(*(knob_grids[n] for n in names)):
-            out.append(base.replace(**dict(zip(names, combo))))
+            out.append(base.replace(**dict(zip(names, combo, strict=True))))
     return out
 
 
@@ -275,7 +275,7 @@ def _grid_steps(knob_grids, refine_knobs) -> dict[str, float]:
     for k in refine_knobs:
         vals = sorted(set(float(v) for v in (knob_grids or {}).get(k, [])))
         if len(vals) >= 2:
-            steps[k] = min(b - a for a, b in zip(vals, vals[1:]))
+            steps[k] = min(b - a for a, b in zip(vals, vals[1:], strict=False))
         else:
             steps[k] = max(abs(vals[0]) * 0.5, 0.1) if vals else 0.1
     return steps

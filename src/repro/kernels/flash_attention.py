@@ -32,7 +32,7 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = float(np.finfo(np.float32).min) / 2
 
 
-def supported(q, k, v, kv_chunk=None) -> bool:
+def supported(q, k, v, _kv_chunk=None) -> bool:
     B, Sq, H, Dk = q.shape
     _, Sk, Hkv, _ = k.shape
     return (H % Hkv == 0 and Dk % 8 == 0 and v.shape[-1] % 8 == 0)

@@ -32,7 +32,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def supported(L, R, D) -> bool:
+def supported(L, R, _D) -> bool:
     n, k = L.shape
     m = R.shape[1]
     return k % 8 == 0 and n % 8 == 0 and m % 128 == 0

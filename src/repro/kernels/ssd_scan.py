@@ -31,7 +31,7 @@ def supported(x, B, chunk) -> bool:
 
 
 def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, st_ref,
-            *, chunk, n_chunks):
+            *, chunk):
     # st_ref is an *output* block revisited across the (innermost) chunk
     # grid dim — it doubles as the carried SSM state (legal accumulation
     # pattern on TPU; the value after the last chunk is the final state).
@@ -94,7 +94,7 @@ def ssd(x, dt, A, B, C, *, chunk: int = 128, interpret: bool = False):
     Ch = jnp.repeat(C, rep, axis=2).transpose(0, 2, 1, 3).reshape(b * h, s, n)
     Ah = jnp.tile(A.astype(jnp.float32), (b,)).reshape(b * h, 1)
 
-    kernel = functools.partial(_kernel, chunk=chunk, n_chunks=nc)
+    kernel = functools.partial(_kernel, chunk=chunk)
     y, st = pl.pallas_call(
         kernel,
         grid=(b * h, nc),

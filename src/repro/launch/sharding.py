@@ -101,7 +101,7 @@ def ns(mesh, shape, *axes):
     non-dividing or missing axes (and axes already used by earlier dims)."""
     used: set = set()
     out = []
-    for dim, ax in zip(shape, axes):
+    for dim, ax in zip(shape, axes, strict=True):
         ax = _filter_axes(mesh, ax, dim)
         if ax is None:
             out.append(None)
@@ -241,7 +241,7 @@ def state_structs(model, opt, sync, mesh, profile: str):
 
     flat_p, pdef = jax.tree_util.tree_flatten(pshard)
 
-    def like_params(tree):
+    def like_params(_tree):
         """Map a tree with params-shaped subtree onto param shardings."""
         return jax.tree_util.tree_unflatten(pdef, flat_p)
 

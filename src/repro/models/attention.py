@@ -298,7 +298,7 @@ def cross_attn_kv(p, mem):
     return k, v
 
 
-def cross_attn(p, a: AttnConfig, x, mem_kv):
+def cross_attn(p, _a: AttnConfig, x, mem_kv):
     """x [B,S,d] attends to precomputed memory K/V (no positional enc)."""
     k, v = mem_kv
     cdt = x.dtype

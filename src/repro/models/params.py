@@ -96,7 +96,7 @@ def zlib_crc(s: str) -> int:
 
 def cast_params(specs, dtype):
     """Return a spec tree with every float param cast to ``dtype``."""
-    def cast(path, ps):
+    def cast(_path, ps):
         if jnp.issubdtype(ps.dtype, jnp.floating):
             return dataclasses.replace(ps, dtype=dtype)
         return ps
@@ -135,7 +135,8 @@ def _divisible(shape, sharding) -> bool:
     from jax.sharding import PartitionSpec
     spec_ = sharding.spec
     mesh = sharding.mesh
-    for dim, names in zip(shape, tuple(spec_) + (None,) * (len(shape) - len(spec_))):
+    for dim, names in zip(shape, tuple(spec_) + (None,) * (len(shape) - len(spec_)),
+                          strict=True):
         if names is None:
             continue
         names = (names,) if isinstance(names, str) else names
@@ -151,13 +152,15 @@ def shardings(specs, mesh, rules):
     """NamedSharding tree for a spec tree (replicating non-divisible dims)."""
     from jax.sharding import NamedSharding, PartitionSpec
 
-    def one(path, ps):
+    def one(_path, ps):
         sh = logical_to_sharding(ps.axes, mesh, rules)
         if not _divisible(ps.shape, sh):
             # drop offending axes one by one (keep what divides)
             names = []
             used = set()
-            for dim, ax in zip(ps.shape, sh.spec + (None,) * (len(ps.shape) - len(sh.spec))):
+            for dim, ax in zip(ps.shape,
+                               sh.spec + (None,) * (len(ps.shape) - len(sh.spec)),
+                               strict=True):
                 if ax is None:
                     names.append(None); continue
                 axs = (ax,) if isinstance(ax, str) else tuple(ax)
@@ -198,7 +201,7 @@ def shape_structs(specs, mesh=None, rules=None):
 def param_count(specs) -> int:
     total = 0
 
-    def count(path, ps):
+    def count(_path, ps):
         nonlocal total
         total += int(np.prod(ps.shape))
         return ps

@@ -27,7 +27,7 @@ from .params import ParamSpec, _map_specs, spec
 # --------------------------------------------------------------------------
 def stack_specs(n: int, tree):
     """Prepend a ``layers`` axis of size n to every spec in the tree."""
-    def one(path, ps: ParamSpec):
+    def one(_path, ps: ParamSpec):
         return dataclasses.replace(
             ps, shape=(n,) + ps.shape, axes=("layers",) + ps.axes)
     return _map_specs(one, tree)
@@ -42,7 +42,7 @@ def _scan_blocks(block_fn, stacked_params, x, aux0, remat: bool,
         n = jax.tree.leaves(stacked_params)[0].shape[0]
         aux = aux0
         for i in range(n):
-            p_i = jax.tree.map(lambda a: a[i], stacked_params)
+            p_i = jax.tree.map(lambda a, i=i: a[i], stacked_params)
             x, a = f(p_i, x)
             aux = aux + a
         return x, aux
@@ -362,7 +362,7 @@ def _mamba_forward_with_state(p, cfg: ModelConfig, x):
     return y @ p["out_proj"].astype(cdt), state.astype(cdt)
 
 
-def _mamba_conv_tail(p, cfg: ModelConfig, x, conv_cache):
+def _mamba_conv_tail(p, cfg: ModelConfig, x, _conv_cache):
     """Last (conv_width-1) pre-conv activations, for decode continuation."""
     m = cfg.mamba
     cdt = x.dtype

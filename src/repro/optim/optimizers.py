@@ -25,10 +25,10 @@ def _cast_like(x, ref):
 def sgd(lr: float | Callable = 1e-2) -> Optimizer:
     sched = lr if callable(lr) else (lambda step: lr)
 
-    def init(params):
+    def init(_params):
         return {"step": jnp.zeros((), jnp.int32)}
 
-    def update(grads, state, params=None):
+    def update(grads, state, _params=None):
         step = state["step"]
         g = sched(step)
         upd = jax.tree.map(lambda gr: (-g * gr.astype(jnp.float32)), grads)
@@ -45,7 +45,7 @@ def momentum(lr: float | Callable = 1e-2, beta: float = 0.9) -> Optimizer:
                 "mu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
                                    params)}
 
-    def update(grads, state, params=None):
+    def update(grads, state, _params=None):
         step = state["step"]
         mu = jax.tree.map(lambda m, gr: beta * m + gr.astype(jnp.float32),
                           state["mu"], grads)

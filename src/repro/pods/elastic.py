@@ -119,7 +119,7 @@ def splice_rejoin_state(live_state, ckpt_state, cfg: ConsistencyConfig,
     diffs = {}
     for (pa, a), (_, b) in zip(
             jax.tree_util.tree_flatten_with_path(spliced)[0],
-            jax.tree_util.tree_flatten_with_path(live_state)[0]):
+            jax.tree_util.tree_flatten_with_path(live_state)[0], strict=True):
         name = jax.tree_util.keystr(pa)
         a, b = np.asarray(a), np.asarray(b)
         diffs[name] = float(np.abs(a.astype(np.float64)

@@ -86,7 +86,7 @@ def psum_mean_bucketed(grads, axis_names, n_buckets: int):
             continue
         # one logical collective per bucket: reduce leaves of this bucket
         group = [jax.lax.pmean(leaves[i], axis_names) for i in idx]
-        for i, g in zip(idx, group):
+        for i, g in zip(idx, group, strict=True):
             out[i] = g
     return jax.tree_util.tree_unflatten(treedef, out)
 

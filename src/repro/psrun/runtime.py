@@ -90,7 +90,7 @@ def trace_count() -> int:
 
 
 @jax.tree_util.register_dataclass
-@dataclass
+@dataclass(frozen=True)
 class PSState:
     """Mid-run runtime state (everything the clock step carries).
 
@@ -428,8 +428,8 @@ def make_run_fn(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
                 lambda x: jax.lax.all_gather(x, worker_axes, axis=0,
                                              tiled=True),
                 local)
-            views_all = jax.lax.all_gather(views, worker_axes, axis=0,
-                                           tiled=True)
+            views_all = jax.lax.all_gather(  # analysis: ignore[unmasked-gather] -- record-side gather of reader *views* for trace metrics, not a producer reduction; dead readers' rows are inert (their cview froze) and the oracle gathers identically
+                views, worker_axes, axis=0, tiled=True)
             out = dict(loss_ref=app.loss(x_ref, locals_all),
                        loss_view=app.loss(views_all[0], locals_all),
                        staleness=staleness, forced=forced,

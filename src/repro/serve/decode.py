@@ -37,7 +37,8 @@ def generate(model: Model, params, prompt_tokens, max_new: int,
     batch = {"tokens": prompt_tokens, **(extra_inputs or {})}
     logits, cache = jax.jit(model.prefill)(params, batch, cache)
     rng = rng if rng is not None else jax.random.PRNGKey(0)
-    tok = greedy_sample(logits, rng, temperature)
+    rng, k0 = jax.random.split(rng)
+    tok = greedy_sample(logits, k0, temperature)
 
     decode = jax.jit(model.decode_step)
 

@@ -14,7 +14,7 @@ from .losses import shift_labels, softmax_xent
 
 
 @jax.tree_util.register_dataclass
-@dataclass
+@dataclass(frozen=True)
 class TrainState:
     params: Any
     opt_state: Any

@@ -43,7 +43,7 @@ def sampled_from(elements) -> _Strategy:
     return _Strategy(lambda r: elements[r.randrange(len(elements))])
 
 
-def settings(max_examples: int = DEFAULT_EXAMPLES, deadline=None, **_kw):
+def settings(max_examples: int = DEFAULT_EXAMPLES, **_kw):
     def deco(fn):
         fn._stub_max_examples = max_examples
         return fn

@@ -1,0 +1,17 @@
+"""Fixture: axis hygiene + the masked-before-all-gather churn rule."""
+import jax
+from jax.experimental.shard_map import shard_map
+
+
+def body(u, x):
+    live_now, died = churn_live(schedule, c)  # noqa: F821 (fixture shape)
+    total = jax.lax.psum(x, "rows")  # VIOLATION: axis-unbound
+    u_all = jax.lax.all_gather(u, "data", axis=0, tiled=True)  # VIOLATION: unmasked-gather
+    return total, u_all
+
+
+run = shard_map(body, mesh=None, in_specs=None, out_specs=None)
+
+
+def stray(x):
+    return jax.lax.pmax(x, "model")  # VIOLATION: collective-outside-shardmap

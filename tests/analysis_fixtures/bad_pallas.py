@@ -1,0 +1,19 @@
+"""Fixture: Pallas hygiene violations."""
+import jax
+from jax.experimental import pallas as pl
+
+
+def kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2.0
+
+
+def doubled(x):
+    W, P = x.shape
+    return pl.pallas_call(  # VIOLATION: pallas-ref
+        kernel,
+        grid=(P,),
+        in_specs=[pl.BlockSpec((W, 1), lambda i, j: (0, i))],  # VIOLATION: pallas-blockspec
+        out_specs=pl.BlockSpec((W,), lambda i: (0, i)),  # VIOLATION: pallas-blockspec
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=True,  # VIOLATION: pallas-interpret
+    )(x)

@@ -1,0 +1,16 @@
+"""Fixture: registered-pytree contract violations."""
+from dataclasses import dataclass
+
+import jax
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class MutableState:  # VIOLATION: pytree-frozen
+    clock: jax.Array
+    base: jax.Array
+
+
+def advance(state: MutableState):
+    state.clock = state.clock + 1  # VIOLATION: pytree-mutation
+    return state

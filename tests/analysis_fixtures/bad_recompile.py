@@ -1,0 +1,27 @@
+"""Fixture: recompile hazards — traced knobs hit Python control flow.
+
+Lines tagged ``# VIOLATION: <rule-id>`` are asserted caught (exact rule
+and line) by tests/test_analysis.py.
+"""
+import jax
+import jax.numpy as jnp  # noqa: F401
+
+
+def make_step(cfg):
+    def step(cfg, carry, c):
+        if cfg.staleness > 0:  # VIOLATION: traced-branch
+            carry = carry + 1
+        w = int(cfg.agg_clocks)  # VIOLATION: traced-coerce
+        return carry + w * c
+
+    return step
+
+
+g = jax.jit(lambda cfg, x: x * cfg.v0, static_argnames="push_prob")  # VIOLATION: traced-static-arg
+
+
+wrapped = jax.jit(lambda a, b: a + b, static_argnums=(1,))
+
+
+def call_site(cfg, x):
+    return wrapped(x, cfg.topk_frac)  # VIOLATION: traced-static-arg

@@ -1,0 +1,22 @@
+"""Fixture: PRNG-key reuse — the decode/correlation bug shapes."""
+import jax
+import jax.numpy as jnp
+
+
+def double_sample(rng):
+    a = jax.random.normal(rng, (4,))
+    b = jax.random.uniform(rng, (4,))  # VIOLATION: rng-reuse
+    return a + b
+
+
+def split_after_use(rng):
+    tok = jax.random.categorical(rng, jnp.zeros((2, 8)))
+    keys = jax.random.split(rng, 4)  # VIOLATION: rng-reuse
+    return tok, keys
+
+
+def loop_reuse(rng, n):
+    out = 0.0
+    for _ in range(n):
+        out = out + jax.random.normal(rng, ())  # VIOLATION: rng-reuse
+    return out

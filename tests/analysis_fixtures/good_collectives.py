@@ -1,0 +1,20 @@
+"""Fixture: clean collective usage — no findings."""
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+
+
+def body(u, x):
+    live_now, died = churn_live(schedule, c)  # noqa: F821 (fixture shape)
+    u = jnp.where(live_now[:, None], u, 0.0)     # mask BEFORE the gather
+    total = jax.lax.psum(x, "model")
+    u_all = jax.lax.all_gather(u, "data", axis=0, tiled=True)
+    return total, u_all
+
+
+run = shard_map(body, mesh=None, in_specs=None, out_specs=None)
+
+
+def generic(x, axis_names):
+    # dynamic axis binding (psdist.grad_sync idiom): not refutable
+    return jax.lax.pmean(x, axis_names)

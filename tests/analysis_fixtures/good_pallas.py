@@ -1,0 +1,25 @@
+"""Fixture: clean Pallas usage — module-local jnp reference, threaded
+interpret flag, coherent BlockSpecs."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def doubled_ref(x):
+    return x * 2.0
+
+
+def kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2.0
+
+
+def doubled(x, interpret: bool = False):
+    W, P = x.shape
+    return pl.pallas_call(
+        kernel,
+        grid=(P,),
+        in_specs=[pl.BlockSpec((W, 1), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((W, 1), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,22 @@
+"""Fixture: clean registered-pytree usage — no findings."""
+import dataclasses
+from dataclasses import dataclass
+
+import jax
+
+
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class FrozenState:
+    clock: jax.Array
+    base: jax.Array
+
+
+def advance(state: FrozenState):
+    return dataclasses.replace(state, clock=state.clock + 1)
+
+
+@dataclass
+class PlainConfig:
+    # not a registered pytree: plain mutable dataclasses are fine
+    name: str = "x"

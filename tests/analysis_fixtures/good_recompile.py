@@ -1,0 +1,20 @@
+"""Fixture: the clean counterparts of bad_recompile — no findings."""
+import jax
+import jax.numpy as jnp
+
+
+def make_step(cfg):
+    def step(cfg, carry, c):
+        # traced select instead of a Python branch
+        carry = jnp.where(cfg.staleness > 0, carry + 1, carry)
+        # static META knobs may branch freely (per-family specialization)
+        if cfg.model == "bsp":
+            carry = carry * 2
+        w = jnp.asarray(cfg.agg_clocks)
+        return carry + w * c
+
+    return step
+
+
+# static_argnames on genuinely static structure is fine
+h = jax.jit(lambda cfg, n: jnp.zeros(n) + cfg.v0, static_argnames="n")

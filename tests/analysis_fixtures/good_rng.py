@@ -1,0 +1,30 @@
+"""Fixture: disciplined key handling — no findings."""
+import jax
+
+
+def double_sample(rng):
+    k_a, k_b = jax.random.split(rng)
+    a = jax.random.normal(k_a, (4,))
+    b = jax.random.uniform(k_b, (4,))
+    return a + b
+
+
+def per_step_streams(rng, n):
+    out = 0.0
+    for i in range(n):
+        k = jax.random.fold_in(rng, i)
+        out = out + jax.random.normal(k, ())
+    return out
+
+
+def loop_over_split(rng, n):
+    out = 0.0
+    for k in jax.random.split(rng, n):
+        out = out + jax.random.normal(k, ())
+    return out
+
+
+def branch_separated(rng, kind):
+    if kind == "a":
+        return jax.random.normal(rng, ())
+    return jax.random.uniform(rng, ())

@@ -39,12 +39,12 @@ def quad_app():
     P, d = 4, 16
     eta = 0.3
 
-    def worker_update(view, local, wid, clock, rng):
+    def worker_update(view, local, _wid, clock, rng):
         g = view + 0.05 * jax.random.normal(rng, view.shape)
         step = eta / jnp.sqrt(1.0 + clock)
         return -step * g / P, local
 
-    def loss(x, locals_):
+    def loss(x, _locals):
         return jnp.sum(jnp.square(x))
 
     x0 = jnp.ones((d,)) * 2.0

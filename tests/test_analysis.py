@@ -1,0 +1,191 @@
+"""Tests for repro.analysis: fixture catches, self-scan, model checker.
+
+The analyzer is pure-AST (no jax import needed at analysis time), so these
+tests are fast — the heaviest item is the exhaustive staleness model check.
+"""
+from __future__ import annotations
+
+import os
+import re
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis import (analyze_paths, extract_bound_model,
+                            extract_bound_model_from_source,
+                            extract_enforcement, model_check)
+from repro.analysis.staleness_check import ExtractionError
+
+HERE = os.path.dirname(__file__)
+REPO = os.path.dirname(HERE)
+FIXTURES = os.path.join(HERE, "analysis_fixtures")
+SRC = os.path.join(REPO, "src", "repro")
+
+FAMILIES = ("recompile", "rng", "collectives", "pytree", "pallas")
+
+
+def _expected_violations(path):
+    out = []
+    with open(path, encoding="utf-8") as fh:
+        for ln, line in enumerate(fh, 1):
+            m = re.search(r"# VIOLATION: ([\w-]+)", line)
+            if m:
+                out.append((ln, m.group(1)))
+    return sorted(out)
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_bad_fixture_caught(family):
+    """Every marked violation is reported with its exact rule id + line."""
+    path = os.path.join(FIXTURES, f"bad_{family}.py")
+    expected = _expected_violations(path)
+    assert expected, f"fixture {path} carries no VIOLATION markers"
+    got = sorted((f.line, f.rule)
+                 for f in analyze_paths([path], model_check=False))
+    assert got == expected
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_good_fixture_clean(family):
+    """The clean counterpart of each family produces zero findings."""
+    path = os.path.join(FIXTURES, f"good_{family}.py")
+    findings = analyze_paths([path], model_check=False)
+    assert findings == [], [str(f) for f in findings]
+
+
+def test_suppression_comment():
+    """An inline reasoned ignore silences exactly its rule on its line."""
+    path = os.path.join(FIXTURES, f"bad_rng.py")
+    src = open(path, encoding="utf-8").read()
+    patched = src.replace(
+        "# VIOLATION: rng-reuse",
+        "# analysis: ignore[rng-reuse] -- fixture", 1)
+    import tempfile
+    with tempfile.TemporaryDirectory() as td:
+        p = os.path.join(td, "patched.py")
+        with open(p, "w", encoding="utf-8") as fh:
+            fh.write(patched)
+        findings = analyze_paths([p], model_check=False)
+        rules = sorted((f.rule) for f in findings)
+        assert rules == ["rng-reuse", "rng-reuse"]  # 3 - 1 suppressed
+        # strict mode rejects reason-less ignores
+        bare = patched.replace("-- fixture", "")
+        with open(p, "w", encoding="utf-8") as fh:
+            fh.write(bare)
+        strict = analyze_paths([p], strict=True, model_check=False)
+        assert any(f.rule == "bare-ignore" for f in strict)
+
+
+def test_self_scan_clean():
+    """src/repro is violation-free (modulo inline reasoned ignores)."""
+    findings = analyze_paths([SRC], strict=True)
+    assert findings == [], "\n".join(str(f) for f in findings)
+
+
+def test_cli_exit_codes():
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(REPO, "src")
+               + os.pathsep + os.environ.get("PYTHONPATH", ""))
+    clean = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", SRC, "--strict"],
+        capture_output=True, text=True, env=env, cwd=REPO)
+    assert clean.returncode == 0, clean.stdout + clean.stderr
+    dirty = subprocess.run(
+        [sys.executable, "-m", "repro.analysis",
+         os.path.join(FIXTURES, "bad_rng.py"), "--no-model-check"],
+        capture_output=True, text=True, env=env, cwd=REPO)
+    assert dirty.returncode == 1
+    assert "rng-reuse" in dirty.stdout
+    rules = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--list-rules"],
+        capture_output=True, text=True, env=env, cwd=REPO)
+    assert rules.returncode == 0
+    for rule_id in ("traced-branch", "rng-reuse", "unmasked-gather",
+                    "pytree-frozen", "pallas-ref", "staleness-contract"):
+        assert rule_id in rules.stdout
+
+
+# ------------------------------------------------------------------ model
+
+
+PRODUCERS = [
+    ("core/ps.py", os.path.join(SRC, "core", "ps.py")),
+    ("psrun/runtime.py", os.path.join(SRC, "psrun", "runtime.py")),
+    ("pods/runtime.py", os.path.join(SRC, "pods", "runtime.py")),
+]
+
+
+def test_bound_extraction_matches_declared_algebra():
+    bm = extract_bound_model(os.path.join(SRC, "core", "delays.py"))
+    for s in range(3):
+        for sx in range(3):
+            for agg in (1, 2, 3):
+                assert bm.bound("intra", s, sx, agg) == s
+                assert bm.bound("xpod", s, sx, agg) == s + sx
+                assert bm.bound("xpod-wired", s, sx, agg) \
+                    == s + sx + agg - 1
+
+
+@pytest.mark.parametrize(("producer", "path"), PRODUCERS,
+                         ids=[p for p, _ in PRODUCERS])
+def test_model_check_verifies_producer(producer, path):
+    """The exhaustive small-config grid finds no contract violation, and
+    the pods runtime is recognized as delegating to the psrun body."""
+    bm = extract_bound_model(os.path.join(SRC, "core", "delays.py"))
+    enf = extract_enforcement(path, producer)
+    assert enf.trigger_offset == 1
+    assert enf.refresh_lag == 1
+    assert enf.xpod_refresh_shipped
+    assert enf.delivery_shipped
+    if producer == "pods/runtime.py":
+        assert enf.delegate == "psrun/runtime.py"
+    ces = model_check(bm, enf)
+    assert ces == [], "\n".join(str(c) for c in ces)
+
+
+def test_model_check_detects_widening_mutant():
+    """An off-by-one in the widening (`agg_clocks - 2`) is caught: the
+    post-refresh shipment lag on the wired cross-pod channel exceeds the
+    (mutated) bound, so the checker must produce counterexamples."""
+    src = open(os.path.join(SRC, "core", "delays.py"),
+               encoding="utf-8").read()
+    mutant = src.replace("(cfg.agg_clocks - 1)", "(cfg.agg_clocks - 2)")
+    assert mutant != src, "widening expression not found to mutate"
+    bm = extract_bound_model_from_source(mutant)
+    enf = extract_enforcement(os.path.join(SRC, "psrun", "runtime.py"),
+                              "psrun/runtime.py")
+    ces = model_check(bm, enf)
+    assert ces, "mutant bound not detected"
+    assert all(c.channel == "xpod-wired" for c in ces)
+    # and the un-mutated bound still verifies on the same extraction
+    assert model_check(extract_bound_model_from_source(src), enf) == []
+
+
+def test_extraction_is_brittle_on_drift():
+    """If a producer's enforcement pattern drifts, extraction fails loudly
+    rather than silently verifying stale algebra."""
+    src = open(os.path.join(SRC, "psrun", "runtime.py"),
+               encoding="utf-8").read()
+    drifted = src.replace("forced = cview < (c - s_eff - 1)",
+                          "forced = cview <= (c - s_eff - 1)")
+    assert drifted != src
+    from repro.analysis import extract_enforcement_from_source
+    with pytest.raises(ExtractionError):
+        extract_enforcement_from_source(drifted, "psrun/runtime.py")
+
+
+def test_model_check_covers_churn_outages():
+    """Dead-reader windows are part of the grid: freezing cview during an
+    outage and forcing on rejoin stays within bound (and a refresh that
+    failed to fire on rejoin would be caught)."""
+    bm = extract_bound_model(os.path.join(SRC, "core", "delays.py"))
+    enf = extract_enforcement(os.path.join(SRC, "psrun", "runtime.py"),
+                              "psrun/runtime.py")
+    assert model_check(bm, enf, churn=True) == []
+    # sanity: the adversary space is non-trivial — with a broken refresh
+    # (refresh to c - 3 instead of c - 1) the bound must break
+    import dataclasses
+    broken = dataclasses.replace(enf, refresh_lag=3)
+    assert model_check(bm, broken), \
+        "checker failed to refute a lagging refresh"

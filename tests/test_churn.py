@@ -123,7 +123,8 @@ def test_dead_reader_rows_freeze(quad8):
         np.testing.assert_array_equal(stw[c], stw[t0] - (c - t0))
     # and the first read after rejoin is repaired back inside the bound
     chk = check_staleness_bound(tr, essp(2))
-    assert chk["violations"] == 0 and chk["max"] == -1, chk
+    assert chk["violations"] == 0, chk
+    assert chk["max"] == -1, chk
 
 
 def test_drop_vs_drain_inflight_policy(quad8):
@@ -251,7 +252,7 @@ def test_any_schedule_keeps_live_staleness_bound(
 # ---------------------------------------------------------------------------
 # elastic rejoin: checkpoint-restore + splice is bit-exact
 # ---------------------------------------------------------------------------
-@pytest.mark.parametrize("cfg,drop", [
+@pytest.mark.parametrize(("cfg", "drop"), [
     (podded(essp(2), 2, s_xpod=3, t_net_xpod=6.0), False),
     (wired_cfg(), False),
     (wired_cfg(), True),
@@ -279,7 +280,7 @@ def test_pod_rejoin_from_checkpoint_bit_exact(quad8, pods8, cfg, drop,
 
 def test_rejoin_argument_guards(quad8, pods8):
     cfg = podded(essp(2), 2, s_xpod=3, t_net_xpod=6.0)
-    with pytest.raises(ValueError):
+    with pytest.raises(ValueError, match="drop_clock"):
         run_with_pod_rejoin(pods8, quad8, cfg, T, pod=1, drop_clock=9,
                             rejoin_clock=4)
 
@@ -341,8 +342,8 @@ def test_same_shape_schedules_reuse_compile(quad8, flat8):
 
 def test_churn_structure_guards(quad8, flat8):
     cfg = essp(2)
-    with pytest.raises(ValueError):     # worker-count mismatch
+    with pytest.raises(ValueError, match="workers"):
         flat8.run(quad8, cfg, T, schedule=no_churn(T, 4))
     fn = flat8.run_fn(quad8, cfg, T)    # compiled churn-free
-    with pytest.raises(ValueError):
+    with pytest.raises(ValueError, match="churn"):
         fn(0, cfg, no_churn(T, 8))

@@ -53,7 +53,7 @@ from repro.psrun.validate import TRACE_FIELDS, check_staleness_bound
 
 
 def make_quad(P, d=16):
-    def worker_update(view, local, wid, clock, rng):
+    def worker_update(view, local, _wid, clock, rng):
         g = view + 0.05 * jax.random.normal(rng, view.shape)
         return -(0.3 / jnp.sqrt(1.0 + clock)) * g / P, local
 
@@ -164,7 +164,7 @@ def test_delta_pack_pallas_interpret_matches_ref(quant, shape):
         ops.set_backend("auto")
     delta_np = np.asarray(delta, np.float32)
     sel = np.abs(delta_np) >= np.asarray(thresh)[:, None]
-    for g, w, kind in zip(got, want, ("wire", "res")):
+    for g, w, kind in zip(got, want, ("wire", "res"), strict=True):
         g, w = np.asarray(g), np.asarray(w)
         if quant == "int8":
             # interpret-mode XLA contracts round(x/s)*s differently (FMA):
@@ -265,12 +265,14 @@ def test_default_path_has_substrate_off():
     # traced/batched knobs without an explicit wire flag stay OFF ...
     stacked = stack_configs([podded(essp(2), 2, **POD),
                              podded(essp(3), 2, **POD)])
-    assert stacked.wire is False and not stacked.comm_active
+    assert stacked.wire is False
+    assert not stacked.comm_active
     # ... and a stacked compressed family stays ON
     stacked_c = stack_configs([
         compressed(podded(essp(2), 2, **POD), 2, 0.5),
         compressed(podded(essp(3), 2, **POD), 4, 0.25)])
-    assert stacked_c.wire is True and stacked_c.comm_active
+    assert stacked_c.wire is True
+    assert stacked_c.comm_active
 
 
 def test_neutral_substrate_matches_dense_decisions(quad8):
@@ -357,7 +359,7 @@ def test_comm_knob_changes_reuse_compile(quad8):
     assert trace_count() == n0                   # knob moves: no retrace
     # quant is static: a different wire format is a different family
     assert base.family != base.replace(quant="int8").family
-    with pytest.raises(ValueError):
+    with pytest.raises(ValueError, match="comm_active"):
         fn(0, podded(essp(2), 2, **POD).replace(window=10))  # substrate off
 
 
@@ -379,17 +381,17 @@ def test_comm_sweep_one_compile_matches_oracle(quad8):
 # config surface
 # ---------------------------------------------------------------------------
 def test_config_guards():
-    with pytest.raises(ValueError):
+    with pytest.raises(ValueError, match="does not apply"):
         ConsistencyConfig(model="bsp", n_pods=2, wire=True)    # barrier
-    with pytest.raises(ValueError):
+    with pytest.raises(ValueError, match="does not apply"):
         ConsistencyConfig(model="vap", v0=0.5, n_pods=2, wire=True)
-    with pytest.raises(ValueError):
+    with pytest.raises(ValueError, match="requires n_pods"):
         ConsistencyConfig(model="essp", n_pods=1, wire=True)   # no x-wire
-    with pytest.raises(ValueError):
+    with pytest.raises(ValueError, match="unknown quant"):
         ConsistencyConfig(model="essp", n_pods=2, quant="fp4")
-    with pytest.raises(ValueError):
+    with pytest.raises(ValueError, match="agg_clocks"):
         ConsistencyConfig(model="essp", n_pods=2, wire=True, agg_clocks=0)
-    with pytest.raises(ValueError):
+    with pytest.raises(ValueError, match="topk_frac"):
         ConsistencyConfig(model="essp", n_pods=2, wire=True, topk_frac=0.0)
 
 
@@ -449,7 +451,8 @@ def test_replica_value_divergence_vap_checked(quad8):
     cfg = podded(vap(0.5, staleness=3), 2, t_net_xpod=6.0)
     tr = oracle(quad8, cfg, 25, 1)
     out = replica_value_divergence(tr, cfg)
-    assert out["ok"] is True and out["violations"] == 0
+    assert out["ok"] is True
+    assert out["violations"] == 0
     assert out["bound_final"] == pytest.approx(2 * 0.5 / np.sqrt(25))
     # clock bound stays None for the unbounded models
     assert replica_divergence(tr, cfg)["bound"] is None
@@ -462,11 +465,12 @@ def test_replica_value_divergence_async_measured_only(quad8):
     cfg = podded(ConsistencyConfig(model="async", staleness=2), 2, **POD)
     tr = oracle(quad8, cfg, 20, 0)
     out = replica_value_divergence(tr, cfg)
-    assert out["ok"] is None and out["bound_final"] is None
+    assert out["ok"] is None
+    assert out["bound_final"] is None
     assert np.isfinite(out["max_envelope"])
 
 
-def test_cross_validate_pods_reports_value_bound(quad8):
+def test_cross_validate_pods_reports_value_bound():
     """`cross_validate_pods` wires the value-bound analogue in for the
     unbounded-clock models (and the new wire accounting for all)."""
     from repro.pods import PodsRuntime, cross_validate_pods, \

@@ -14,11 +14,11 @@ def run(app, cfg, T=40, seed=0):
 
 
 def test_config_validation():
-    with pytest.raises(ValueError):
+    with pytest.raises(ValueError, match="unknown consistency model"):
         ConsistencyConfig(model="nope")
-    with pytest.raises(ValueError):
+    with pytest.raises(ValueError, match="staleness"):
         ConsistencyConfig(model="ssp", staleness=-1)
-    with pytest.raises(ValueError):
+    with pytest.raises(ValueError, match="v0"):
         ConsistencyConfig(model="vap", v0=0.0)
     assert bsp().effective_window == 2
     assert ssp(3).effective_window == 5
@@ -113,7 +113,7 @@ def test_read_my_writes():
 
     P, d = 3, 4
 
-    def worker_update(view, local, wid, clock, rng):
+    def worker_update(_view, local, wid, _clock, _rng):
         u = jnp.zeros((d,)).at[wid].set(1.0)
         return u, local
 

@@ -130,7 +130,7 @@ def test_ssd_ref_matches_naive_recurrence():
                                atol=2e-4)
 
 
-@pytest.mark.parametrize("N,M,K", [(256, 256, 16), (128, 384, 32),
+@pytest.mark.parametrize(("N", "M", "K"), [(256, 256, 16), (128, 384, 32),
                                    (128, 128, 8)])
 def test_mf_sgd_kernel_matches_ref(N, M, K):
     ks = jax.random.split(jax.random.PRNGKey(1), 4)

@@ -26,7 +26,8 @@ _HEAVY_SMOKE = {"jamba-1.5-large-398b", "llama-3.2-vision-11b",
              else a for a in ARCHS])
 def test_smoke_forward_and_train_step(arch):
     cfg = get_smoke_config(arch)
-    assert cfg.n_layers <= 10 and cfg.d_model <= 512
+    assert cfg.n_layers <= 10
+    assert cfg.d_model <= 512
     if cfg.moe:
         assert cfg.moe.n_experts <= 4
     model = build_model(cfg)
@@ -83,20 +84,30 @@ def test_full_config_matches_assignment(arch):
 
 def test_assigned_attention_settings():
     c = get_config("qwen3-4b")
-    assert c.attn.n_heads == 32 and c.attn.n_kv_heads == 8 and c.attn.qk_norm
+    assert c.attn.n_heads == 32
+    assert c.attn.n_kv_heads == 8
+    assert c.attn.qk_norm
     c = get_config("deepseek-v2-lite-16b")
-    assert c.attn.mla is not None and c.attn.mla.kv_lora_rank == 512
-    assert c.moe.n_experts == 64 and c.moe.top_k == 6 and c.moe.n_shared == 2
+    assert c.attn.mla is not None
+    assert c.attn.mla.kv_lora_rank == 512
+    assert c.moe.n_experts == 64
+    assert c.moe.top_k == 6
+    assert c.moe.n_shared == 2
     c = get_config("jamba-1.5-large-398b")
-    assert c.attn_every == 8 and c.moe.n_experts == 16 and c.moe.top_k == 2
+    assert c.attn_every == 8
+    assert c.moe.n_experts == 16
+    assert c.moe.top_k == 2
     c = get_config("qwen3-moe-30b-a3b")
-    assert c.moe.n_experts == 128 and c.moe.top_k == 8
+    assert c.moe.n_experts == 128
+    assert c.moe.top_k == 8
     c = get_config("mamba2-130m")
-    assert c.attn is None and c.mamba.d_state == 128
+    assert c.attn is None
+    assert c.mamba.d_state == 128
     c = get_config("llama-3.2-vision-11b")
     assert c.vision.cross_attn_every == 5
     c = get_config("whisper-medium")
-    assert c.encoder.n_layers == 24 and c.encoder.n_ctx == 1500
+    assert c.encoder.n_layers == 24
+    assert c.encoder.n_ctx == 1500
 
 
 def test_param_counts_match_scale():

@@ -71,7 +71,8 @@ def test_moe_drops_at_tight_capacity():
 def test_moe_capacity_formula():
     cfg = MoEConfig(n_experts=128, top_k=8, capacity_factor=1.25)
     C = _capacity(4096, cfg)
-    assert C % 4 == 0 and 256 <= C <= 512
+    assert C % 4 == 0
+    assert 256 <= C <= 512
     assert _capacity(1, cfg) == 1
 
 
@@ -102,4 +103,5 @@ def test_moe_gradients_flow():
     g = jax.grad(loss)(p)
     gn = {k: float(jnp.linalg.norm(v)) for k, v in g.items()}
     assert all(np.isfinite(list(gn.values())))
-    assert gn["wi_gate"] > 0 and gn["router"] > 0
+    assert gn["wi_gate"] > 0
+    assert gn["router"] > 0

@@ -65,7 +65,8 @@ def test_fifo_warmup_and_order():
     out1, fifo, v1 = push_pop(fifo, g1)
     out2, fifo, v2 = push_pop(fifo, g2)
     out3, fifo, v3 = push_pop(fifo, g3)
-    assert float(v1) == 0.0 and float(v2) == 0.0   # warm-up
+    assert float(v1) == 0.0   # warm-up
+    assert float(v2) == 0.0   # warm-up
     assert float(v3) == 1.0
     np.testing.assert_allclose(np.asarray(out3["w"]), 1.0)  # stalest first
 
@@ -84,7 +85,7 @@ def test_bucket_assignment_balanced():
     assign = bucket_assignment(grads, 4)
     loads = [0] * 4
     import numpy as np_
-    for (k, v), b in zip(grads.items(), assign):
+    for (_k, v), b in zip(grads.items(), assign, strict=True):
         loads[b] += v.size
     assert max(loads) <= 2 * min(l for l in loads if l > 0)
     assert len(set(assign)) == 4
@@ -129,7 +130,8 @@ def test_essp_exposure_model():
     from repro.psdist.schedules import ScheduleModel, exposure_table
     rows = exposure_table(compute_s=1.0, collective_s=0.8)
     exposed = [r["exposed_s"] for r in rows]
-    assert all(a >= b - 1e-9 for a, b in zip(exposed, exposed[1:]))
+    assert all(a >= b - 1e-9
+               for a, b in zip(exposed, exposed[1:], strict=False))
     assert exposed[0] == pytest.approx(0.8)          # lazy: fully exposed
     # many buckets: only the last bucket's tail spills past compute
     assert exposed[-1] < 0.25

@@ -59,7 +59,7 @@ def assert_bit_identical(got, want, context=""):
 
 
 def make_quad(P, d=16):
-    def worker_update(view, local, wid, clock, rng):
+    def worker_update(view, local, _wid, clock, rng):
         g = view + 0.05 * jax.random.normal(rng, view.shape)
         return -(0.3 / jnp.sqrt(1.0 + clock)) * g / P, local
 
@@ -236,7 +236,8 @@ def test_replica_divergence_bound_on_runtime(quad8, quad8_rt2):
     cfg = podded(essp(1), 2, s_xpod=4, t_net_xpod=8.0)
     tr = quad8_rt2.run(quad8, cfg, 30, seed=3)
     div = replica_divergence(tr, cfg)
-    assert div["bound"] == 5 and div["ok"], div
+    assert div["bound"] == 5, div
+    assert div["ok"], div
 
 
 # ---------------------------------------------------------------------------
@@ -315,16 +316,16 @@ def test_pods_runtime_rejects_mismatched_n_pods(quad8):
     if n < 4 or n % 2:
         pytest.skip("needs a >=4, even device count for a 2-pod mesh")
     rt = PodsRuntime(default_pods_mesh(8, n_pods=2))
-    with pytest.raises(ValueError):
+    with pytest.raises(ValueError, match="pod axis"):
         rt.run_fn(quad8, essp(2), 5)             # n_pods=1 config on 2 pods
 
 
 def test_pod_partition_guards():
-    with pytest.raises(ValueError):
+    with pytest.raises(ValueError, match="must divide"):
         pod_of(8, 3)                             # 8 workers, 3 pods
-    with pytest.raises(ValueError):
+    with pytest.raises(ValueError, match="n_pods"):
         ConsistencyConfig(model="essp", n_pods=0)
-    with pytest.raises(ValueError):
+    with pytest.raises(ValueError, match="s_xpod"):
         ConsistencyConfig(model="essp", s_xpod=-1)
 
 
@@ -332,7 +333,8 @@ def test_staleness_bound_matrix_tiers():
     cfg = podded(essp(2), 2, s_xpod=3)
     m = np.asarray(staleness_bound_matrix(cfg, jnp.arange(8), 8))
     same = np.asarray(same_pod_mask(8, 2))
-    assert (m[same] == 2).all() and (m[~same] == 5).all()
+    assert (m[same] == 2).all()
+    assert (m[~same] == 5).all()
 
 
 def test_effective_window_covers_xpod():

@@ -191,7 +191,7 @@ def test_knob_changes_reuse_compile(quad_app, quad_runtime):
 
 def test_window_mismatch_raises(quad_app, quad_runtime):
     fn = quad_runtime.run_fn(quad_app, essp(3), 5)
-    with pytest.raises(ValueError):
+    with pytest.raises(ValueError, match="ring window"):
         fn(0, essp(7))                           # different ring window
 
 
@@ -202,5 +202,5 @@ def test_worker_divisibility_guard():
                 local0={"_": jnp.zeros((3, 1))},
                 worker_update=lambda v, l, w, c, r: (v * 0.0, l),
                 loss=lambda x, l: jnp.sum(x))
-    with pytest.raises(ValueError):
+    with pytest.raises(ValueError, match="must divide"):
         make_run_fn(app, bsp(), 3, mesh=make_ps_mesh(data=2, model=1))

@@ -38,7 +38,8 @@ def test_param_rules_profiles():
     fsdp = shd.param_rules("tp_fsdp")
     assert tp["embed"] is None
     assert fsdp["embed"] == shd.DATA_AXES
-    assert tp["heads"] == "model" and tp["experts"] == "model"
+    assert tp["heads"] == "model"
+    assert tp["experts"] == "model"
 
 
 def test_profile_selection():

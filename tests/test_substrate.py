@@ -22,7 +22,7 @@ from repro.utils.tree import tree_bytes, tree_norm, tree_size
 
 # ---------------- params ---------------------------------------------------
 def test_param_spec_validation():
-    with pytest.raises(ValueError):
+    with pytest.raises(ValueError, match="rank mismatch"):
         ParamSpec((2, 3), ("a",))
 
 
@@ -57,13 +57,14 @@ def test_token_batch_deterministic_and_learnable():
     b3 = token_batch(cfg, 4)
     np.testing.assert_array_equal(np.asarray(b1), np.asarray(b2))
     assert float(jnp.abs(b1 - b3).sum()) > 0
-    assert b1.shape == (4, 64) and b1.dtype == jnp.int32
+    assert b1.shape == (4, 64)
+    assert b1.dtype == jnp.int32
     assert int(b1.max()) < 256  # v_eff slice
     # affine rule: consecutive-token pairs repeat within a sequence
     seq = np.asarray(b1[0])
     pairs = {}
     consistent = 0
-    for a, b in zip(seq[:-1], seq[1:]):
+    for a, b in zip(seq[:-1], seq[1:], strict=True):
         if a in pairs and pairs[a] == b:
             consistent += 1
         pairs[a] = b
@@ -73,7 +74,8 @@ def test_token_batch_deterministic_and_learnable():
 def test_token_batches_iterator():
     cfg = TokenGenConfig(vocab_size=128, seq_len=16, batch=2)
     batches = list(token_batches(cfg, 3, extra={"flag": 1}))
-    assert len(batches) == 3 and batches[0]["flag"] == 1
+    assert len(batches) == 3
+    assert batches[0]["flag"] == 1
 
 
 # ---------------- checkpoint ------------------------------------------------
@@ -95,7 +97,7 @@ def test_checkpoint_shape_mismatch_raises():
     with tempfile.TemporaryDirectory() as d:
         path = os.path.join(d, "c.npz")
         save(path, {"w": jnp.zeros((2, 2))})
-        with pytest.raises(ValueError):
+        with pytest.raises(ValueError, match="shape"):
             restore(path, {"w": jnp.zeros((3, 3))})
 
 

@@ -55,7 +55,7 @@ FAMILY_CASES = [
 ]
 
 
-@pytest.mark.parametrize("model,configs",
+@pytest.mark.parametrize(("model", "configs"),
                          FAMILY_CASES, ids=[m for m, _ in FAMILY_CASES])
 def test_sweep_bit_identical_to_simulate(quad_app, model, configs):
     """Each (config, seed) trace of a batched sweep equals a standalone
@@ -66,7 +66,7 @@ def test_sweep_bit_identical_to_simulate(quad_app, model, configs):
     check = (assert_traces_close
              if model == "vap" and len(jax.devices()) > 1
              else assert_traces_identical)
-    for i, cfg in enumerate(configs):
+    for i, _cfg in enumerate(configs):
         assert res.harmonized[i].effective_window == family_window(configs)
         for j, sd in enumerate(seeds):
             want = jax.jit(
@@ -125,13 +125,13 @@ def test_sweep_knobs_are_traced_not_recompiled(quad_app):
 
 
 def test_stack_configs_rejects_cross_family():
-    with pytest.raises(ValueError):
+    with pytest.raises(ValueError, match="across families"):
         stack_configs([bsp(), ssp(3)])
 
 
 def test_config_window_required_when_staleness_traced():
     cfg = ssp(3).replace(staleness=jnp.asarray([1, 2]))
-    with pytest.raises(ValueError):
+    with pytest.raises(ValueError, match="effective_window"):
         _ = cfg.effective_window
     assert cfg.replace(window=9).effective_window == 9
 
@@ -180,7 +180,7 @@ def test_suffix_norms_semantics():
     np.testing.assert_allclose(norms[:, 1], [0, 1, 0.5, 0.25, 0.125])
 
 
-def test_ops_dispatch_ps_view(quad_app):
+def test_ops_dispatch_ps_view():
     """`ops.set_backend("pallas_interpret")` routes the simulator's hot path
     through the Pallas bodies; traces must match the ref backend."""
     base, uring, uclock, cview, c = _ring_inputs()
@@ -204,7 +204,7 @@ def test_simulate_through_pallas_interpret_backend():
     kernel-aligned app (d % 128 == 0)."""
     P, d = 8, 128
 
-    def worker_update(view, local, wid, clock, rng):
+    def worker_update(view, local, _wid, clock, rng):
         g = view + 0.05 * jax.random.normal(rng, view.shape)
         return -(0.3 / jnp.sqrt(1.0 + clock)) * g / P, local
 

@@ -30,7 +30,7 @@ def _run(model, opt, sync, cfg, steps=50, accum=1, seed=0):
     step = jax.jit(step)
     dcfg = TokenGenConfig(vocab_size=cfg.vocab_size, seq_len=48, batch=8)
     losses = []
-    for i, b in enumerate(token_batches(dcfg, steps)):
+    for _i, b in enumerate(token_batches(dcfg, steps)):
         if accum > 1:
             b = {k: v.reshape(accum, -1, *v.shape[1:]) for k, v in b.items()}
         state, m = step(state, b)
@@ -100,7 +100,7 @@ def test_checkpoint_resume(tiny, tmp_path):
     path = str(tmp_path / "state.npz")
     save(path, state.params)
     params_back = restore(path, jax.eval_shape(lambda: state.params))
-    for (n1, l1), (n2, l2) in zip(
+    for (_n1, l1), (_n2, l2) in zip(
             jax.tree_util.tree_leaves_with_path(state.params),
-            jax.tree_util.tree_leaves_with_path(params_back)):
+            jax.tree_util.tree_leaves_with_path(params_back), strict=True):
         np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))

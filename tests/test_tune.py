@@ -62,12 +62,13 @@ def test_traced_matches_numpy_reference(quad_app):
     comp = tm.comp_draws((40, quad_app.n_workers), fold=(3, 7))
     for model in ("ssp", "bsp"):
         want = _np_reference_per_clock(tm, comp, tr.forced, model)
-        got = jax.jit(lambda t: tm.per_clock(t, model, fold=(3, 7)))(tr)
-        for a, b in zip(got, want):
+        got = jax.jit(
+            lambda t: tm.per_clock(t, model, fold=(3, 7)))(tr)  # noqa: B023
+        for a, b in zip(got, want, strict=True):
             np.testing.assert_allclose(np.asarray(a), b, rtol=1e-5)
         # the numpy-facing shims agree with the traced path
         np.testing.assert_allclose(
-            np.asarray(jax.jit(lambda t: tm.wall_time(t, model))(tr)),
+            np.asarray(jax.jit(lambda t: tm.wall_time(t, model))(tr)),  # noqa: B023
             tm.wall_time_np(tr, model), rtol=1e-6)
         np.testing.assert_allclose(tm.wall_time_np(tr, model, fold=(3, 7)),
                                    np.cumsum(want[0]), rtol=1e-5)
@@ -111,7 +112,8 @@ def test_sweep_post_runs_in_single_compile(quad_app):
     n0 = trace_count()
     res = sweep(quad_app, configs, 20, seeds=3,
                 post=tune.metrics_post(tm, tail=5))
-    assert res.n_compiles == 1 and trace_count() - n0 == 1
+    assert res.n_compiles == 1
+    assert trace_count() - n0 == 1
     # post outputs are batched per config like traces, and equal the traced
     # TimeModel applied to the standalone trace with the same fold
     for i in (0, 3):
@@ -131,9 +133,9 @@ def test_sweep_keep_traces_false_drops_traces(quad_app):
     res = sweep(quad_app, [essp(2), essp(4)], 15, seeds=2,
                 post=tune.metrics_post(tm), keep_traces=False)
     assert res.posts[0]["loss"].shape == (2, 15)
-    with pytest.raises(ValueError):
+    with pytest.raises(ValueError, match="keep_traces"):
         res.trace(0)
-    with pytest.raises(ValueError):
+    with pytest.raises(ValueError, match="post callback"):
         sweep(quad_app, [essp(2)], 5, keep_traces=False)
 
 
@@ -161,7 +163,8 @@ def test_frontier_essp_dominates_ssp(mf_app_small):
     assert any(p["config"].model == "essp" for p in fr.frontier)
     xs = [p["final_loss"] for p in fr.frontier]
     ys = [p["wall_to_threshold"] for p in fr.frontier]
-    assert xs == sorted(xs) and ys == sorted(ys, reverse=True)
+    assert xs == sorted(xs)
+    assert ys == sorted(ys, reverse=True)
 
 
 @pytest.mark.slow
@@ -244,7 +247,9 @@ def test_summary_skips_warmup_clocks():
                    np.full((P, P), -1)]).astype(np.int32)
     tr = _fake_trace(st)
     s = staleness.summary(tr)
-    assert s["mean"] == -1.0 and s["min"] == -1 and s["max"] == -1
+    assert s["mean"] == -1.0
+    assert s["min"] == -1
+    assert s["max"] == -1
     # unskipped distribution still includes the -2 warm-up reads
     assert staleness.clock_differentials(tr).min() == -2
 
@@ -253,13 +258,15 @@ def test_summary_all_warmup_falls_back():
     st = np.stack([np.full((3, 3), -(c + 1)) for c in range(4)]).astype(
         np.int32)
     s = staleness.summary(_fake_trace(st))
-    assert np.isfinite(s["mean"]) and s["min"] == -4
+    assert np.isfinite(s["mean"])
+    assert s["min"] == -4
 
 
 def test_histogram_empty_trace_does_not_crash():
     st = np.zeros((0, 3, 3), np.int32)
     bins, probs = staleness.histogram(_fake_trace(st))
-    assert probs.sum() == 0.0 and len(bins) == len(probs)
+    assert probs.sum() == 0.0
+    assert len(bins) == len(probs)
 
 
 def test_warmup_skip_makes_lazy_ssp_less_negative(quad_app):
