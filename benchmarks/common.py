@@ -23,6 +23,35 @@ import numpy as np
 
 RESULTS_DIR = os.environ.get("BENCH_DIR", "experiments/bench")
 
+# BENCH_*.json names written since the last pop — the run.py harness uses
+# this to annotate each suite's records with its wall-time/peak-RSS
+# (meta.timing) without the suites knowing about the harness.
+_WRITTEN: list = []
+
+
+def pop_written() -> list:
+    """Drain the list of BENCH names written since the last call."""
+    out, _WRITTEN[:] = list(_WRITTEN), []
+    return out
+
+
+def annotate_bench_meta(names: list, timing: dict) -> None:
+    """Fold ``meta.timing`` into the named ``BENCH_*.json`` records.
+
+    ``meta.*`` is observability about the harness itself (suite wall
+    seconds, process peak RSS) — `benchmarks.compare` ignores it when
+    diffing metrics and claims."""
+    for name in names:
+        path = os.path.join(RESULTS_DIR, f"BENCH_{name}.json")
+        try:
+            with open(path) as f:
+                payload = json.load(f)
+        except (OSError, ValueError):
+            continue
+        payload.setdefault("meta", {})["timing"] = timing
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=1, default=float)
+
 
 def set_results_dir(path: str) -> None:
     """Point every suite's JSON output at ``path`` (the ``--json-dir``
@@ -64,6 +93,7 @@ def save_bench_json(name: str, metrics: dict, claim: dict | None = None):
     os.makedirs(RESULTS_DIR, exist_ok=True)
     with open(os.path.join(RESULTS_DIR, f"BENCH_{name}.json"), "w") as f:
         json.dump(payload, f, indent=1, default=float)
+    _WRITTEN.append(name)
     return payload
 
 

@@ -13,9 +13,11 @@ Direction is inferred from the metric name: throughput-flavored metrics
 floats-on-wire) regresses upward.  ``None`` metrics (e.g. a threshold
 never reached) and metrics missing from the baseline (new benchmarks) are
 reported but never gate; a current ``None`` where the baseline had a
-value IS a regression (the run stopped reaching its threshold).  A
-missing baseline directory or file passes trivially — the first run of a
-new lane seeds the trajectory.
+value IS a regression (the run stopped reaching its threshold).  The
+``meta.*`` envelope (harness wall-time/peak-RSS stamped by
+``benchmarks.run``) is context, never diffed — harness cost is tracked,
+not gated.  A missing baseline directory or file passes trivially — the
+first run of a new lane seeds the trajectory.
 
 Usage: ``python -m benchmarks.compare BASELINE_DIR CURRENT_DIR
 [--threshold 0.15]``.
@@ -56,6 +58,8 @@ def compare_bench(base: dict, cur: dict, threshold: float) -> dict:
     rows, regressions = [], []
     bm, cm = base.get("metrics", {}), cur.get("metrics", {})
     for name in sorted(cm):
+        if name.startswith("meta."):
+            continue            # harness observability, not a perf metric
         b, c = bm.get(name), cm[name]
         if name not in bm:
             rows.append((name, b, c, None, "new"))

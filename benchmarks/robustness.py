@@ -67,6 +67,7 @@ from repro.core import essp, simulate, ssp, sweep           # noqa: E402
 from repro.core.consistency import (ConsistencyConfig,      # noqa: E402
                                     bsp, compressed, podded, vap)
 from repro.core.delays import make_churn                    # noqa: E402
+from repro.obs.report import churn_grid_table               # noqa: E402
 
 from .common import (clocks_to_threshold, emit, save_bench_json,  # noqa: E402
                      save_json, sweep_meta, us_per_config,
@@ -178,12 +179,12 @@ def run_churn(T: int = 160, seed: int = 0,
         for sname, _ in scenarios:
             rows[sname]["lost_clocks"] = _lost(
                 rows[sname]["clocks_to_thresh"], base_c)
-            emit(f"robustness/churn/{fname}/{sname}", 0.0,
-                 f"clocks={rows[sname]['clocks_to_thresh']};"
-                 f"lost={rows[sname]['lost_clocks']};"
-                 f"div={rows[sname]['diverged']}")
         grid[fname] = rows
     out["grid"] = grid
+    # the family x scenario matrix as one obs.report table (replaces the
+    # seed's hand-rolled per-scenario CSV rows)
+    out["grid_table"] = churn_grid_table(grid, [s for s, _ in scenarios])
+    print("\n" + out["grid_table"] + "\n", flush=True)
 
     churn_names = [s for s, sch in scenarios if sch is not None]
     claim = {
@@ -273,6 +274,11 @@ def run(T: int = 200, seed: int = 0, T_churn: int = 160):
                                ["ssp_high_s_worse"],
                                essp_stable_all_s=out["claim_C3"]
                                ["essp_stable_all_s"]))
+    # obs overhead record (BENCH_obs.json) rides the same claim gate
+    from .obs_bench import bench_obs_record
+    rec = bench_obs_record()
+    out["obs_overhead"] = rec["overhead"]
+    out["claim_C3"] = dict(out["claim_C3"], **rec["claim"])
     return out
 
 

@@ -16,6 +16,7 @@ mesh-independent by the oracle contract).
 from __future__ import annotations
 
 import argparse
+import resource
 import sys
 import time
 import traceback
@@ -56,13 +57,25 @@ def main(argv=None) -> int:
 
     def suite(name, fn):
         """Run one suite; a crash is recorded (and fails the harness) but
-        never silences the remaining suites' rows and artifacts."""
+        never silences the remaining suites' rows and artifacts.  Each
+        BENCH_*.json the suite wrote gets ``meta.timing`` stamped (suite
+        wall seconds + process peak RSS — RSS is monotonic process-wide,
+        so it reads as "peak by the end of this suite")."""
+        common.pop_written()
+        t0 = time.perf_counter()
         try:
             claims[name] = fn()
         except Exception:
             errors[name] = traceback.format_exc()
             print(f"\n!! suite {name} crashed:\n{errors[name]}",
                   file=sys.stderr)
+        finally:
+            common.annotate_bench_meta(common.pop_written(), {
+                "suite": name,
+                "wall_s": round(time.perf_counter() - t0, 3),
+                "peak_rss_mb": round(resource.getrusage(
+                    resource.RUSAGE_SELF).ru_maxrss / 1024.0, 1),
+            })
 
     print("name,us_per_call,derived")
     suite("C1_staleness_profile", lambda: staleness_profile.run()["claim_C1"])

@@ -19,6 +19,10 @@ Rule families (``--list-rules`` for the full catalog):
   ``knob-split``);
 - ``pallas``     — kernel hygiene (``pallas-interpret``,
   ``pallas-blockspec``, ``pallas-ref``);
+- ``callbacks``  — host callbacks (``io_callback``/``pure_callback``/
+  ``debug.print``/``debug.callback``) inside traced contexts; route
+  telemetry through the ``repro.obs`` on-device accumulators instead
+  (``host-callback``);
 - ``staleness``  — the abstract interpreter + model checker over the
   clock-step contract (``staleness-contract``, ``staleness-extract``).
 

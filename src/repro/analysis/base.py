@@ -401,7 +401,8 @@ def analyze_paths(paths, strict: bool = False,
     repo-level suppression file.
     """
     # the rule modules self-register on import
-    from . import collectives, pallas_rules, pytree_rules, recompile, rng  # noqa: F401
+    from . import callbacks, collectives, pallas_rules, pytree_rules, \
+        recompile, rng  # noqa: F401
     modules, findings = load_modules(paths)
     ctx = RepoContext(modules)
     for mod in modules:

@@ -1,0 +1,79 @@
+"""Rule ``host-callback``: host callbacks inside traced contexts.
+
+The telemetry substrate (`repro.obs`) is built on the zero-host-callback
+contract: traced code accumulates metrics *on device* (appended to the
+scan carry, one collective per reduced leaf after the scan) and the host
+drains them once the run returns.  ``io_callback`` / ``pure_callback`` /
+``jax.debug.print`` / ``jax.debug.callback`` inside a jitted or
+shard_mapped body break that contract three ways: they serialize the
+device stream on every firing (the ≤5 % obs overhead budget is gone the
+moment one lands in the scan), they perturb XLA scheduling so the
+obs-on/obs-off bit-identity guarantee no longer holds, and under
+``shard_map`` they fire per shard with no ordering.
+
+The rule flags any such call whose enclosing function is a traced
+context (``base.traced_functions``: jit-decorated, staged by a
+transform, returned by a ``make_*`` factory, or reachable from one).
+Modules under ``repro/obs/`` are exempt — that package *is* the
+sanctioned bridge between device accumulators and the host.  A genuine
+one-off (debugging a kernel, a deliberately-impure probe) takes the
+standard reasoned suppression::
+
+    jax.debug.print("u={}", u)  # analysis: ignore[host-callback] -- why
+"""
+from __future__ import annotations
+
+import ast
+
+from .base import Finding, checker, dotted, enclosing_function, \
+    traced_functions
+
+# bare callable names that are host callbacks wherever they come from
+CALLBACK_NAMES = {"io_callback", "pure_callback"}
+# dotted suffixes (matched against the full dotted callee)
+CALLBACK_SUFFIXES = ("debug.print", "debug.callback",
+                     "host_callback.call", "experimental.io_callback")
+
+_DOCS = {
+    "host-callback": "io_callback/pure_callback/debug.print/debug.callback "
+                     "inside a traced context — route telemetry through "
+                     "the repro.obs on-device accumulators",
+}
+
+
+def _callback_name(call) -> str | None:
+    """The matched callback callee of ``call``, or None."""
+    d = dotted(call.func)
+    if not d:
+        return None
+    if d.split(".")[-1] in CALLBACK_NAMES:
+        return d
+    for suffix in CALLBACK_SUFFIXES:
+        if d == suffix or d.endswith("." + suffix):
+            return d
+    return None
+
+
+@checker(_DOCS)
+def check_callbacks(mod, _ctx):
+    rel = mod.rel.replace("\\", "/")
+    if "/obs/" in rel or rel.startswith("obs/"):
+        return []        # the sanctioned device->host telemetry bridge
+    findings = []
+    for fnode in traced_functions(mod):
+        for node in ast.walk(fnode):
+            if not isinstance(node, ast.Call) \
+                    or enclosing_function(node) is not fnode:
+                continue
+            name = _callback_name(node)
+            if name is None:
+                continue
+            where = getattr(fnode, "name", "<lambda>")
+            findings.append(Finding(
+                "host-callback", mod.rel, node.lineno,
+                f"`{name}` inside traced `{where}` — host callback "
+                f"serializes the device stream and breaks the obs "
+                f"bit-identity contract; accumulate on device via "
+                f"repro.obs.metrics (device_update in the carry, "
+                f"drain_device after the run)"))
+    return findings

@@ -122,6 +122,7 @@ import jax.numpy as jnp
 from ..comm import substrate as comm
 from ..kernels import ops
 from ..kernels.ref import RING_EMPTY, RING_INVALID
+from ..obs import metrics as obsm
 from .consistency import ConsistencyConfig
 from .delays import ChurnSchedule, churn_live, churn_rates, \
     delivery_matrix, pod_of, same_pod_mask, staleness_bound_matrix
@@ -180,6 +181,10 @@ class Trace:
     views0: jax.Array | None   # [T, d] worker-0 views (if record_views)
     x_final: jax.Array         # [d] final reference parameters
     locals_final: Any          # final worker-local state
+    obs: Any = None            # telemetry accumulators (repro.obs) when the
+    #                            run collected them (obs=ObsSpec()); None —
+    #                            an empty pytree — otherwise, so traces
+    #                            stack/compare exactly as before
 
 
 def _delivery(rng, cfg: ConsistencyConfig, P: int, rates=None):
@@ -215,7 +220,8 @@ def enforce_vap(cfg: ConsistencyConfig, c, cview, norms, W: int):
 
 def simulate(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
              seed=0, record_views: bool = False,
-             schedule: ChurnSchedule | None = None) -> Trace:
+             schedule: ChurnSchedule | None = None,
+             obs: obsm.ObsSpec | None = None) -> Trace:
     """Run ``n_clocks`` of the app under the given consistency model.
 
     ``schedule`` (a `core.delays.ChurnSchedule`) makes the fleet churn:
@@ -228,6 +234,12 @@ def simulate(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
     A rejoining worker trips the SSP/ESSP bound on its first read and
     catches up through one forced refresh burst, so the (re-derived)
     staleness contract over *live* readers holds unconditionally.
+
+    ``obs`` (a `repro.obs.ObsSpec`, static) threads a telemetry
+    accumulator pytree through the scan carry — pure arithmetic on values
+    the step already computes, folded on device and returned as
+    ``Trace.obs``.  ``None`` (the default) compiles the exact pre-obs
+    program: every other `Trace` field is bit-identical either way.
     """
     P, d = app.n_workers, app.dim
     W = cfg.effective_window
@@ -242,6 +254,7 @@ def simulate(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
     # pre-substrate simulator.
     wired = cfg.comm_active
     G = cfg.n_pods
+    obs_enabled = obsm.obs_on(obs)
 
     base0 = app.x0.astype(f32)
     uring0 = jnp.zeros((W, P, d), f32)
@@ -258,12 +271,18 @@ def simulate(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
         reader_pods = pod_of(P, G)                    # [P]
         zeros_d = jnp.zeros((d,), f32)
         comm0 = comm.init_state(W, P, d, G)
+    if obs_enabled:
+        # channel-tier mask for the forced-refresh split (all-True when
+        # G == 1: every forced fetch is intra-pod)
+        in_pod_obs = in_pod if wired else same_pod_mask(P, G)
 
     vmapped_update = jax.vmap(app.worker_update,
                               in_axes=(0, 0, 0, None, 0))
     worker_ids = jnp.arange(P, dtype=jnp.int32)
 
     def step(carry, c):
+        if obs_enabled:
+            *carry, oacc = carry
         if wired:
             (base, uring, uclock, cview, local, rng, cst) = carry
         else:
@@ -482,20 +501,35 @@ def simulate(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
                    live=live_now if churned else jnp.ones((P,), bool))
         if record_views:
             out["views0"] = views[0]
-        if wired:
-            return (base, uring, uclock, cview, local, rng, cst), out
-        return (base, uring, uclock, cview, local, rng), out
+        if obs_enabled:
+            # fold this clock's already-computed step values into the
+            # accumulators — the only obs work inside the compiled step
+            oacc = obsm.device_update(
+                oacc, staleness=staleness, forced=forced,
+                delivered=delivered, ship_floats=ship_floats,
+                live=out["live"], live_rows=out["live"],
+                in_pod=in_pod_obs)
+        new_carry = ((base, uring, uclock, cview, local, rng, cst)
+                     if wired else
+                     (base, uring, uclock, cview, local, rng))
+        if obs_enabled:
+            new_carry = (*new_carry, oacc)
+        return new_carry, out
 
+    carry0 = ((base0, uring0, uclock0, cview0, app.local0, rng0, comm0)
+              if wired else
+              (base0, uring0, uclock0, cview0, app.local0, rng0))
+    if obs_enabled:
+        carry0 = (*carry0, obsm.device_init(P, obs.n_buckets))
+    carryT, ys = jax.lax.scan(step, carry0,
+                              jnp.arange(n_clocks, dtype=jnp.int32))
+    base, uring, uclock, _, local = carryT[0], carryT[1], carryT[2], \
+        carryT[3], carryT[4]
     if wired:
-        carry0 = (base0, uring0, uclock0, cview0, app.local0, rng0, comm0)
-        (base, uring, uclock, _, local, _, cst), ys = jax.lax.scan(
-            step, carry0, jnp.arange(n_clocks, dtype=jnp.int32))
+        cst = carryT[6]
         x_final = (base + jnp.sum(cst["base_pod"], axis=0)) + jnp.sum(
             uring * (uclock[:, None, None] > RING_INVALID), axis=(0, 1))
     else:
-        carry0 = (base0, uring0, uclock0, cview0, app.local0, rng0)
-        (base, uring, uclock, _, local, _), ys = jax.lax.scan(
-            step, carry0, jnp.arange(n_clocks, dtype=jnp.int32))
         x_final = base + jnp.sum(
             uring * (uclock[:, None, None] > RING_INVALID), axis=(0, 1))
     return Trace(
@@ -504,20 +538,23 @@ def simulate(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
         delivered=ys["delivered"], u_l2=ys["u_l2"],
         intransit_inf=ys["intransit_inf"], ship_floats=ys["ship_floats"],
         live=ys["live"], views0=ys.get("views0"), x_final=x_final,
-        locals_final=local)
+        locals_final=local, obs=carryT[-1] if obs_enabled else None)
 
 
 def simulate_jit(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
                  seed=0, record_views: bool = False,
-                 schedule: ChurnSchedule | None = None) -> Trace:
+                 schedule: ChurnSchedule | None = None,
+                 obs: obsm.ObsSpec | None = None) -> Trace:
     """jit-compiled run; ``seed`` may be a traced int (vmap over seeds).
 
     The schedule's arrays enter as jit arguments, so re-running with a
     different same-shape schedule reuses the compiled program."""
     if schedule is None:
         fn = jax.jit(
-            lambda sd: simulate(app, cfg, n_clocks, sd, record_views))
+            lambda sd: simulate(app, cfg, n_clocks, sd, record_views,
+                                obs=obs))
         return fn(jnp.asarray(seed, jnp.uint32))
     fn = jax.jit(lambda sd, sch: simulate(app, cfg, n_clocks, sd,
-                                          record_views, schedule=sch))
+                                          record_views, schedule=sch,
+                                          obs=obs))
     return fn(jnp.asarray(seed, jnp.uint32), schedule)

@@ -145,7 +145,7 @@ def _device_mesh(devices):
 
 def _family_runner(app: PSApp, n_clocks: int, record_views: bool, devices,
                    post=None, keep_traces: bool = True, mesh=None,
-                   mesh_axis: str = "batch"):
+                   mesh_axis: str = "batch", obs=None):
     """Build the once-compiled runner for one family: `simulate` vmapped
     over a flat (config × seed) batch, sharded over devices when more than
     one is available.  Returns ``fn(stacked_flat, seeds_flat, idx_flat) ->
@@ -162,7 +162,7 @@ def _family_runner(app: PSApp, n_clocks: int, record_views: bool, devices,
     def one(cfg, seed, cfg_idx):
         _TRACE_COUNTER["count"] += 1          # fires once per trace/compile
         tr = simulate(app, cfg, n_clocks, seed=seed,
-                      record_views=record_views)
+                      record_views=record_views, obs=obs)
         return {
             "trace": tr if (keep_traces or post is None) else None,
             "post": None if post is None else post(tr, cfg, seed, cfg_idx),
@@ -207,7 +207,7 @@ def sweep(app: PSApp, configs: Sequence[ConsistencyConfig], n_clocks: int,
           seeds: int | Sequence[int] = 1, record_views: bool = False,
           devices=None, timeit: bool = False, post=None,
           keep_traces: bool = True, mesh=None,
-          mesh_axis: str = "batch") -> SweepResult:
+          mesh_axis: str = "batch", obs=None) -> SweepResult:
     """Run every (config, seed) pair with one compiled program per family.
 
     Args:
@@ -233,6 +233,10 @@ def sweep(app: PSApp, configs: Sequence[ConsistencyConfig], n_clocks: int,
         ``mesh=make_pods_mesh(), mesh_axis="pod"`` spreads the sweep over
         the pod axis of the multi-pod mesh (replicated over the within-pod
         axes).  ``devices`` is ignored when ``mesh`` is given.
+      obs: optional `repro.obs.ObsSpec` — thread telemetry accumulators
+        through every simulated run; each trace's ``obs`` pytree comes
+        back batched like any other `Trace` leaf.  ``None`` (default)
+        compiles the exact pre-obs program.
     """
     if not keep_traces and post is None:
         raise ValueError("keep_traces=False requires a post callback")
@@ -267,7 +271,7 @@ def sweep(app: PSApp, configs: Sequence[ConsistencyConfig], n_clocks: int,
 
         fn = _family_runner(app, n_clocks, record_views, devices,
                             post=post, keep_traces=keep_traces,
-                            mesh=mesh, mesh_axis=mesh_axis)
+                            mesh=mesh, mesh_axis=mesh_axis, obs=obs)
         t0 = time.perf_counter()
         out = jax.block_until_ready(fn(stacked_flat, seeds_flat, idx_flat))
         t_first += time.perf_counter() - t0

@@ -102,25 +102,17 @@ class TimeModel:
         return self.t_comp * jnp.exp(sig * z - 0.5 * sig * sig)
 
     # ------------------------------------------------------------- traced
-    def per_clock(self, trace: Trace, model: str, fold=(), cfg=None,
-                  schedule=None):
-        """Returns (wall[T], comp[T], comm[T]) per-clock seconds (traced).
-
-        ``cfg`` (a hierarchical `ConsistencyConfig`, ``n_pods > 1``)
-        switches on the bandwidth-faithful cross-pod tier: forced fetches
-        split by tier and the clock is floored by the time the clock's
-        cross-pod shipments (``Trace.ship_floats``) need on
-        ``bandwidth_xpod`` (see module doc).  Without it the accounting
-        is exactly the historical single-tier model.
-
-        Churn-aware: dead workers (``Trace.live``) draw no compute, so
-        they leave the slowest-worker max — the fleet genuinely shrinks —
-        while a rejoiner's catch-up cost is charged automatically through
-        its forced-refresh burst at the tiered rates (the rejoin gap in
-        seconds).  A ``schedule`` with ``bw_scale`` scales
-        ``bandwidth_xpod`` per clock (transient cross-pod crunches): both
-        the wire floor and cross-pod fetches ride the scaled tier.
-        """
+    def _components(self, trace: Trace, fold=(), cfg=None, schedule=None):
+        """Per-worker building blocks of the clock cost (traced):
+        ``comp[T, P]`` straggler compute draws (live-masked),
+        ``sync[T, P]`` blocking-fetch seconds (tier-split under a
+        hierarchical ``cfg``), ``wire[T]`` cross-pod shipment seconds on
+        the thin tier (``None`` untiered), plus the intra-tier ``xfer``
+        constant and the ``tiered`` flag.  This is the decomposition both
+        ``per_clock`` (the wall-clock aggregate) and ``timeline_np`` (the
+        per-worker observability timebase) are assembled from — one set of
+        ops, so the telemetry lanes show exactly the seconds the claims
+        charge."""
         forced = jnp.asarray(trace.forced)           # [T, P, P] sync fetches
         T, P, _ = forced.shape
         comp = self.comp_draws((T, P), fold)         # [T, P]
@@ -152,6 +144,31 @@ class TimeModel:
                     / bw_x)                          # [T]
         else:
             sync = forced.astype(jnp.float32).sum(axis=2) * (self.rtt + xfer)
+            wire = None
+        return comp, sync, wire, xfer, tiered
+
+    def per_clock(self, trace: Trace, model: str, fold=(), cfg=None,
+                  schedule=None):
+        """Returns (wall[T], comp[T], comm[T]) per-clock seconds (traced).
+
+        ``cfg`` (a hierarchical `ConsistencyConfig`, ``n_pods > 1``)
+        switches on the bandwidth-faithful cross-pod tier: forced fetches
+        split by tier and the clock is floored by the time the clock's
+        cross-pod shipments (``Trace.ship_floats``) need on
+        ``bandwidth_xpod`` (see module doc).  Without it the accounting
+        is exactly the historical single-tier model.
+
+        Churn-aware: dead workers (``Trace.live``) draw no compute, so
+        they leave the slowest-worker max — the fleet genuinely shrinks —
+        while a rejoiner's catch-up cost is charged automatically through
+        its forced-refresh burst at the tiered rates (the rejoin gap in
+        seconds).  A ``schedule`` with ``bw_scale`` scales
+        ``bandwidth_xpod`` per clock (transient cross-pod crunches): both
+        the wire floor and cross-pod fetches ride the scaled tier.
+        """
+        comp, sync, wire, xfer, tiered = self._components(
+            trace, fold, cfg=cfg, schedule=schedule)
+        T, P = comp.shape
 
         if model == "bsp":
             # barrier: everyone waits for the slowest, then full sync
@@ -189,6 +206,32 @@ class TimeModel:
         tot = wall.sum()
         return {"total_s": tot, "comp_s": comp.sum(), "comm_s": comm.sum(),
                 "comm_frac": comm.sum() / jnp.maximum(tot, 1e-12)}
+
+    def timeline_np(self, trace: Trace, model: str, fold=(), cfg=None,
+                    schedule=None) -> dict:
+        """The run's common observability timebase (numpy, host-side).
+
+        Everything `repro.obs.events`/`repro.obs.perfetto` render sits on
+        this dict: ``start``/``end``/``wall[T]`` clock windows (exclusive
+        cumsum of the same ``per_clock`` walls the benchmark claims
+        charge), the ``comp_clock``/``comm_clock[T]`` split, and the
+        per-worker components — ``comp[T, P]`` straggler compute seconds,
+        ``sync[T, P]`` blocking-fetch seconds, ``wire[T]`` cross-pod
+        shipment seconds (zeros untiered).
+        """
+        comp, sync, wire, _, _ = self._components(
+            trace, fold, cfg=cfg, schedule=schedule)
+        wall, comp_clock, comm_clock = self.per_clock(
+            trace, model, fold, cfg=cfg, schedule=schedule)
+        wall = np.asarray(wall)
+        end = np.cumsum(wall)
+        return {"start": end - wall, "end": end, "wall": wall,
+                "comp_clock": np.asarray(comp_clock),
+                "comm_clock": np.asarray(comm_clock),
+                "comp": np.asarray(comp), "sync": np.asarray(sync),
+                "wire": (np.zeros_like(wall) if wire is None
+                         else np.broadcast_to(np.asarray(wire),
+                                              wall.shape).copy())}
 
     # -------------------------------------------------- numpy-facing shims
     def per_clock_np(self, trace: Trace, model: str, fold=(), cfg=None):

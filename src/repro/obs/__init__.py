@@ -1,0 +1,31 @@
+"""Telemetry substrate: on-device metrics, event streams, timelines.
+
+The observability layer the ROADMAP's closed-loop controller and
+failure-detection items read from.  Four modules, one boundary:
+
+- ``metrics`` — the device-side accumulator pytree threaded through the
+  engines' scan (zero host callbacks in the hot path) and the host-side
+  ``MetricsRegistry`` it drains into;
+- ``events`` — versioned, schema-checked JSONL event stream of a run
+  (clocks, worker spans, shipments, churn transitions, stale reads) on
+  the modeled timebase from `core.timemodel.TimeModel`;
+- ``perfetto`` — Chrome/Perfetto ``trace_event`` export of that stream
+  (per-worker clock lanes, shipment spans, outage windows, stale-read
+  instants) for ``ui.perfetto.dev``;
+- ``report`` — markdown run reports (staleness / throughput / wire
+  tables per consistency family) for benchmarks and CI artifacts.
+
+Enable collection by passing ``obs=ObsSpec()`` to ``core.ps.simulate``,
+``PSRuntime.run``, ``PodsRuntime.run``, or ``core.sweep.sweep``; the
+accumulators come back as ``Trace.obs``.  Disabled (the default) the
+engines compile the exact pre-obs program — `Trace` is bit-identical.
+"""
+from .metrics import (DEFAULT_LAG_BUCKETS, MetricsRegistry, ObsSpec,
+                      device_init, device_reduce, device_update,
+                      drain_device, obs_on, record_compiles, record_timing)
+
+__all__ = [
+    "DEFAULT_LAG_BUCKETS", "MetricsRegistry", "ObsSpec", "device_init",
+    "device_reduce", "device_update", "drain_device", "obs_on",
+    "record_compiles", "record_timing",
+]

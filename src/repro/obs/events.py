@@ -1,0 +1,209 @@
+"""Versioned, schema-checked JSONL event stream of one PS run.
+
+``collect_events`` turns a `Trace` (any of the three producers — the
+simulator oracle, `PSRuntime`, `PodsRuntime` — emits the same stream for
+the same run, by the Trace-producer contract) into a flat list of event
+dicts on the modeled timebase of `core.timemodel.TimeModel.timeline_np`:
+every timestamp/duration is in *modeled seconds from run start*, so the
+stream, the Perfetto export (`repro.obs.perfetto`), and the benchmark
+wall-second claims all measure the same axis.
+
+Stream layout (one JSON object per line, ``write_jsonl``/``read_jsonl``):
+
+- ``run_start`` — header: schema version (``v``), run/app name, model,
+  config family, fleet shape, clock count;
+- per clock ``t`` (ascending): one ``clock`` summary, a ``worker_span``
+  per live worker (modeled compute + blocking-fetch seconds), a
+  ``shipment`` per producer that put floats on the cross-pod wire
+  (hierarchical runs), a ``stale_read`` per reader whose bound tripped
+  (forced channel count + worst read lag), and a ``churn`` transition per
+  worker that died/rejoined entering this clock;
+- ``metrics`` — one snapshot of a `MetricsRegistry` (when given);
+- ``run_end`` — totals (wall/comp/comm/wire seconds, clocks).
+
+``validate_events`` checks the stream against ``SCHEMA``: known types,
+required fields present with the right shapes, version match, header /
+terminator placement, and non-decreasing clock order — the CI obs lane
+runs it on a fresh churned pods run every push.  Bump ``SCHEMA_VERSION``
+on any field change; consumers (the ROADMAP's controller/failure-detector
+items) key on it.
+"""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from .metrics import MetricsRegistry
+
+SCHEMA_VERSION = 1
+
+# required fields per event type (beyond "type"); values document the
+# expected JSON type and are checked by validate_events.
+SCHEMA = {
+    "run_start": {"v": int, "run": str, "model": str, "family": str,
+                  "n_workers": int, "n_pods": int, "n_clocks": int,
+                  "ts": float},
+    "clock": {"t": int, "ts": float, "dur": float, "loss_ref": float,
+              "forced": int, "delivered": int, "live": int,
+              "ship_floats": float},
+    "worker_span": {"t": int, "worker": int, "ts": float, "dur": float,
+                    "comp_s": float, "sync_s": float},
+    "shipment": {"t": int, "worker": int, "ts": float, "dur": float,
+                 "floats": float},
+    "stale_read": {"t": int, "worker": int, "ts": float, "n_forced": int,
+                   "max_lag": int},
+    "churn": {"t": int, "worker": int, "ts": float, "event": str},
+    "metrics": {"ts": float, "registry": dict},
+    "run_end": {"ts": float, "wall_s": float, "comp_s": float,
+                "comm_s": float, "wire_s": float, "clocks": int},
+}
+
+
+class SchemaError(ValueError):
+    """An event stream violating the versioned schema."""
+
+
+def _r(x) -> float:
+    """Timestamps/durations rounded to ns so streams are byte-stable
+    across platforms (the goldens pin the JSON text)."""
+    return round(float(x), 9)
+
+
+def collect_events(trace, cfg, tm, model: str | None = None, fold=(),
+                   schedule=None, run: str = "run",
+                   registry: MetricsRegistry | None = None) -> list[dict]:
+    """Flatten one run into the event stream (see module doc).
+
+    ``trace`` must be unbatched (one run, clock axis leading); ``cfg`` is
+    the run's `ConsistencyConfig` and ``tm`` the `TimeModel` whose
+    ``timeline_np`` provides the timebase.  ``model`` defaults to
+    ``cfg.model``.
+    """
+    model = cfg.model if model is None else model
+    tl = tm.timeline_np(trace, model, fold=fold, cfg=cfg,
+                        schedule=schedule)
+    staleness = np.asarray(trace.staleness)          # [T, P, P]
+    forced = np.asarray(trace.forced)
+    delivered = np.asarray(trace.delivered)
+    ship = np.asarray(trace.ship_floats)             # [T, P]
+    live = np.asarray(trace.live)                    # [T, P]
+    loss_ref = np.asarray(trace.loss_ref)
+    T, P, _ = staleness.shape
+    tiered = cfg.n_pods > 1
+
+    ev: list[dict] = [{
+        "type": "run_start", "v": SCHEMA_VERSION, "run": run,
+        "model": model, "family": str(cfg.family),
+        "n_workers": P, "n_pods": int(cfg.n_pods), "n_clocks": T,
+        "ts": 0.0,
+    }]
+    prev_live = np.ones((P,), bool)
+    for t in range(T):
+        ts, dur = _r(tl["start"][t]), _r(tl["wall"][t])
+        for p in np.flatnonzero(live[t] != prev_live):
+            ev.append({"type": "churn", "t": t, "worker": int(p), "ts": ts,
+                       "event": "up" if live[t, p] else "down"})
+        prev_live = live[t]
+        ev.append({
+            "type": "clock", "t": t, "ts": ts, "dur": dur,
+            "loss_ref": float(loss_ref[t]),
+            "forced": int(forced[t].sum()), "delivered": int(delivered[t].sum()),
+            "live": int(live[t].sum()), "ship_floats": float(ship[t].sum()),
+        })
+        for p in range(P):
+            if not live[t, p]:
+                continue
+            ev.append({
+                "type": "worker_span", "t": t, "worker": p, "ts": ts,
+                "dur": _r(tl["comp"][t, p] + tl["sync"][t, p]),
+                "comp_s": _r(tl["comp"][t, p]),
+                "sync_s": _r(tl["sync"][t, p]),
+            })
+            n_forced = int(forced[t, p].sum())
+            if n_forced:
+                lag = -1 - staleness[t, p]
+                ev.append({
+                    "type": "stale_read", "t": t, "worker": p, "ts": ts,
+                    "n_forced": n_forced,
+                    "max_lag": int(lag.max()),
+                })
+        if tiered and ship[t].any():
+            # allocate the clock's wire seconds across the shipping
+            # producers in proportion to their floats
+            tot = ship[t].sum()
+            for p in np.flatnonzero(ship[t] > 0):
+                ev.append({
+                    "type": "shipment", "t": t, "worker": int(p), "ts": ts,
+                    "dur": _r(tl["wire"][t] * ship[t, p] / tot),
+                    "floats": float(ship[t, p]),
+                })
+    if registry is not None:
+        ev.append({"type": "metrics", "ts": _r(tl["end"][-1]),
+                   "registry": registry.to_dict()})
+    ev.append({
+        "type": "run_end", "ts": _r(tl["end"][-1]),
+        "wall_s": _r(tl["wall"].sum()), "comp_s": _r(tl["comp_clock"].sum()),
+        "comm_s": _r(tl["comm_clock"].sum()), "wire_s": _r(tl["wire"].sum()),
+        "clocks": T,
+    })
+    return ev
+
+
+def validate_events(events: list[dict]) -> None:
+    """Raise `SchemaError` unless ``events`` is a valid version-1 stream."""
+    if not events:
+        raise SchemaError("empty event stream")
+    if events[0].get("type") != "run_start":
+        raise SchemaError(f"stream must open with run_start, got "
+                          f"{events[0].get('type')!r}")
+    if events[0].get("v") != SCHEMA_VERSION:
+        raise SchemaError(f"schema version {events[0].get('v')!r} != "
+                          f"{SCHEMA_VERSION}")
+    if events[-1].get("type") != "run_end":
+        raise SchemaError(f"stream must close with run_end, got "
+                          f"{events[-1].get('type')!r}")
+    n_clocks = events[0]["n_clocks"]
+    last_t = -1
+    for i, e in enumerate(events):
+        etype = e.get("type")
+        spec = SCHEMA.get(etype)
+        if spec is None:
+            raise SchemaError(f"event {i}: unknown type {etype!r}")
+        for field, ftype in spec.items():
+            if field not in e:
+                raise SchemaError(f"event {i} ({etype}): missing {field!r}")
+            v = e[field]
+            ok = (isinstance(v, (int, float)) and not isinstance(v, bool)
+                  if ftype is float else isinstance(v, ftype))
+            if not ok:
+                raise SchemaError(f"event {i} ({etype}): {field}="
+                                  f"{v!r} is not {ftype.__name__}")
+        if "ts" in e and e["ts"] < 0:
+            raise SchemaError(f"event {i} ({etype}): negative ts")
+        if "t" in e:
+            if not (0 <= e["t"] < n_clocks):
+                raise SchemaError(f"event {i} ({etype}): clock {e['t']} "
+                                  f"outside [0, {n_clocks})")
+            if e["t"] < last_t:
+                raise SchemaError(f"event {i} ({etype}): clock order "
+                                  f"regressed ({e['t']} after {last_t})")
+            last_t = e["t"]
+        if i > 0 and etype == "run_start":
+            raise SchemaError(f"event {i}: duplicate run_start")
+
+
+def write_jsonl(events: list[dict], path) -> None:
+    """One event per line; validates before writing."""
+    validate_events(events)
+    with open(path, "w") as f:
+        for e in events:
+            f.write(json.dumps(e, sort_keys=True) + "\n")
+
+
+def read_jsonl(path) -> list[dict]:
+    """Load and re-validate a stream written by ``write_jsonl``."""
+    with open(path) as f:
+        events = [json.loads(line) for line in f if line.strip()]
+    validate_events(events)
+    return events

@@ -1,0 +1,262 @@
+"""On-device metrics accumulators + the host-side metrics registry.
+
+The telemetry substrate has two halves with one hard boundary between
+them:
+
+- **device half** — a plain pytree of accumulator arrays
+  (:func:`device_init`) threaded through the engines' ``lax.scan`` carry
+  and folded once per clock (:func:`device_update`) from values the clock
+  step already computes (staleness-at-read, forced refreshes, deliveries,
+  wire floats, liveness).  *Zero host callbacks*: nothing crosses the
+  host boundary until the run returns, which is what keeps the hot path
+  hot (and is machine-checked by the ``host-callback`` analysis rule).
+  Inside ``shard_map`` each worker shard accumulates its own reader rows;
+  :func:`device_reduce` folds the shards with one ``psum``/``pmax`` per
+  leaf *after* the scan — one collective per run, not per clock.
+- **host half** — a :class:`MetricsRegistry` of counters / gauges /
+  histograms that :func:`drain_device` fills from the returned
+  accumulator pytree (``Trace.obs``), plus whatever host-side evidence
+  callers fold in (compile counts via :func:`record_compiles`, modeled
+  seconds from `TimeModel`).  ``repro.obs.events`` snapshots the registry
+  into the JSONL event stream and ``repro.obs.report`` renders it.
+
+Everything here is observability-only: with ``obs=None`` (every engine's
+default) no accumulator exists and the compiled programs are unchanged —
+`Trace` output is bit-identical to a build without this module.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Default bucket count of the staleness-at-read lag histogram: lag k lands
+# in bucket k, the last bucket is ">= n_buckets - 1" (open-ended tail).
+DEFAULT_LAG_BUCKETS = 16
+
+
+@dataclass(frozen=True)
+class ObsSpec:
+    """Static observability switch for the engines (``obs=`` argument).
+
+    A plain hashable dataclass, *not* a pytree: whether telemetry is
+    collected selects code structure (an extra accumulator in the scan
+    carry), so it is compile-time static like ``cfg.model``.  ``None`` /
+    ``enabled=False`` is the default everywhere and compiles the exact
+    pre-obs program.
+    """
+
+    enabled: bool = True
+    n_buckets: int = DEFAULT_LAG_BUCKETS
+
+    def __post_init__(self):
+        if self.n_buckets < 2:
+            raise ValueError("n_buckets must be >= 2 (one lag bucket plus "
+                             "the open tail)")
+
+
+def obs_on(obs: ObsSpec | None) -> bool:
+    """The static predicate the engines branch on."""
+    return obs is not None and obs.enabled
+
+
+# --------------------------------------------------------------------------
+# device half: the accumulator pytree threaded through the scan
+# --------------------------------------------------------------------------
+
+# accumulator leaves reduced over the worker axes after the scan (the
+# reader-row quantities each shard accumulates locally) -> reduction op.
+# Every other leaf is derived from globally replicated inputs (full-P
+# liveness, gathered ship_floats) and needs no reduction.
+_REDUCE = {"lag_hist": "sum", "lag_max": "max", "forced_intra": "sum",
+           "forced_xpod": "sum", "delivered": "sum"}
+
+
+def device_init(P: int, n_buckets: int = DEFAULT_LAG_BUCKETS) -> dict:
+    """Zeroed accumulators for a run over ``P`` workers (one pytree)."""
+    i32 = jnp.int32
+    return {
+        "clocks": jnp.zeros((), i32),             # clocks accumulated
+        "lag_hist": jnp.zeros((n_buckets,), i32), # staleness-at-read lags
+        "lag_max": jnp.zeros((), i32),            # worst read lag seen
+        "forced_intra": jnp.zeros((), i32),       # blocking fetches, intra
+        "forced_xpod": jnp.zeros((), i32),        # blocking fetches, xpod
+        "delivered": jnp.zeros((), i32),          # background deliveries
+        "ship_floats": jnp.zeros((P,), jnp.float32),  # per-producer wire
+        "dead_worker_clocks": jnp.zeros((), i32), # worker-clocks lost
+    }
+
+
+def device_update(acc: dict, *, staleness, forced, delivered, ship_floats,
+                  live, live_rows, in_pod) -> dict:
+    """Fold one clock's already-computed step values into ``acc``.
+
+    Pure arithmetic on values the clock step materializes anyway — no new
+    RNG draws, no callbacks, no reductions beyond the shard-local rows:
+
+    - ``staleness``/``forced``/``delivered``: the ``[R, P]`` reader rows
+      this program holds (``R = P`` in the simulator, the shard's ``Pl``
+      rows under ``shard_map``);
+    - ``ship_floats``: the clock's ``[P]`` bits-weighted wire floats
+      (replicated across worker shards in the runtimes);
+    - ``live`` (``[P]``, all producers) and ``live_rows`` (``[R]``, this
+      program's readers): the liveness masks — dead readers perform no
+      read, so their rows are excluded from the read-lag statistics;
+    - ``in_pod``: the ``[R, P]`` channel-tier mask (all-True when
+      ``n_pods == 1``).
+    """
+    i32 = jnp.int32
+    n_buckets = acc["lag_hist"].shape[0]
+    # read lag in clocks: staleness is cview - c in [-(bound+1), -1], so
+    # the number of in-transit clocks at read time is -1 - staleness >= 0.
+    lag = (-1 - staleness).astype(i32)                       # [R, P]
+    w = live_rows[:, None]                                   # live readers
+    lagc = jnp.clip(lag, 0, n_buckets - 1)
+    onehot = (lagc[:, :, None] == jnp.arange(n_buckets, dtype=i32)) \
+        & w[:, :, None]                                      # [R, P, NB]
+    f = forced & w
+    return {
+        "clocks": acc["clocks"] + 1,
+        "lag_hist": acc["lag_hist"] + onehot.sum(axis=(0, 1)).astype(i32),
+        "lag_max": jnp.maximum(acc["lag_max"],
+                               jnp.max(jnp.where(w, lag, 0))),
+        "forced_intra": acc["forced_intra"]
+        + (f & in_pod).sum().astype(i32),
+        "forced_xpod": acc["forced_xpod"]
+        + (f & ~in_pod).sum().astype(i32),
+        "delivered": acc["delivered"]
+        + (delivered & w).sum().astype(i32),
+        "ship_floats": acc["ship_floats"] + ship_floats,
+        "dead_worker_clocks": acc["dead_worker_clocks"]
+        + (live.shape[0] - live.sum()).astype(i32),
+    }
+
+
+def device_reduce(acc: dict, worker_axes) -> dict:
+    """Fold per-shard accumulators over the mesh worker axes (one
+    collective per reduced leaf, after the scan).  The simulator holds
+    the full reader matrix and never calls this."""
+    out = dict(acc)
+    for k, op in _REDUCE.items():
+        out[k] = (jax.lax.psum(acc[k], worker_axes) if op == "sum"
+                  else jax.lax.pmax(acc[k], worker_axes))
+    return out
+
+
+# --------------------------------------------------------------------------
+# host half: the registry
+# --------------------------------------------------------------------------
+
+class MetricsRegistry:
+    """Counters, gauges, and histograms on the host side of the boundary.
+
+    Conventions: metric names are ``/``-separated paths
+    (``ps/forced_xpod``, ``compiles/sweep``); counters accumulate across
+    ``counter_add`` calls (draining two runs sums them), gauges keep the
+    last value, histograms keep integer bucket counts with labeled
+    buckets.  ``flat()`` flattens everything into the
+    ``BENCH_*.json``-style metric dict the perf-trajectory gate diffs.
+    """
+
+    def __init__(self):
+        self.counters: dict = {}
+        self.gauges: dict = {}
+        self.hists: dict = {}
+
+    # -------------------------------------------------------------- write
+    def counter_add(self, name: str, value) -> None:
+        self.counters[name] = self.counters.get(name, 0) + _num(value)
+
+    def gauge_set(self, name: str, value) -> None:
+        self.gauges[name] = _num(value)
+
+    def hist_add(self, name: str, counts, buckets=None) -> None:
+        counts = [int(c) for c in np.asarray(counts).ravel()]
+        h = self.hists.get(name)
+        if h is None:
+            if buckets is None:
+                buckets = [str(i) for i in range(len(counts) - 1)] \
+                    + [f"{len(counts) - 1}+"]
+            self.hists[name] = {"buckets": [str(b) for b in buckets],
+                                "counts": counts}
+            return
+        if len(h["counts"]) != len(counts):
+            raise ValueError(f"histogram {name!r} bucket count changed: "
+                             f"{len(h['counts'])} != {len(counts)}")
+        h["counts"] = [a + b for a, b in zip(h["counts"], counts)]
+
+    # --------------------------------------------------------------- read
+    def to_dict(self) -> dict:
+        return {"counters": dict(self.counters), "gauges": dict(self.gauges),
+                "hists": {k: {"buckets": list(v["buckets"]),
+                              "counts": list(v["counts"])}
+                          for k, v in self.hists.items()}}
+
+    def flat(self) -> dict:
+        """Flat numeric dict (hists summarized as mean/p50/p99/total)."""
+        out = {}
+        out.update(self.counters)
+        out.update(self.gauges)
+        for name, h in self.hists.items():
+            counts = np.asarray(h["counts"], np.float64)
+            total = counts.sum()
+            out[f"{name}/total"] = float(total)
+            if total > 0:
+                centers = np.arange(len(counts), dtype=np.float64)
+                out[f"{name}/mean"] = float((counts * centers).sum() / total)
+                cum = np.cumsum(counts) / total
+                out[f"{name}/p50"] = float(np.searchsorted(cum, 0.5))
+                out[f"{name}/p99"] = float(np.searchsorted(cum, 0.99))
+        return out
+
+
+def _num(v):
+    v = np.asarray(v).item() if np.ndim(v) == 0 else v
+    if isinstance(v, (bool, np.bool_)):
+        return int(v)
+    if isinstance(v, (int, np.integer)):
+        return int(v)
+    return float(v)
+
+
+def drain_device(reg: MetricsRegistry, acc, prefix: str = "ps") -> None:
+    """Fold a returned accumulator pytree (``Trace.obs``) into ``reg``."""
+    if acc is None:
+        raise ValueError("trace carries no obs accumulators — run the "
+                         "engine with obs=ObsSpec() to collect them")
+    get = lambda k: np.asarray(acc[k])
+    reg.gauge_set(f"{prefix}/clocks", get("clocks"))
+    reg.hist_add(f"{prefix}/staleness_lag", get("lag_hist"))
+    reg.gauge_set(f"{prefix}/lag_max", get("lag_max"))
+    reg.counter_add(f"{prefix}/forced_intra", get("forced_intra"))
+    reg.counter_add(f"{prefix}/forced_xpod", get("forced_xpod"))
+    reg.counter_add(f"{prefix}/delivered", get("delivered"))
+    reg.counter_add(f"{prefix}/ship_floats_total",
+                    float(get("ship_floats").sum()))
+    reg.counter_add(f"{prefix}/dead_worker_clocks",
+                    get("dead_worker_clocks"))
+
+
+def record_compiles(reg: MetricsRegistry) -> None:
+    """Snapshot the engines' compile/trace counters into the registry —
+    the sweep/runtime one-compile claims become observable metrics."""
+    from ..core.sweep import trace_count as sweep_traces
+    from ..psrun.runtime import trace_count as runtime_traces
+    reg.gauge_set("compiles/sweep_traces", sweep_traces())
+    reg.gauge_set("compiles/runtime_traces", runtime_traces())
+
+
+def record_timing(reg: MetricsRegistry, trace, model: str, tm, fold=(),
+                  cfg=None, schedule=None, prefix: str = "ps") -> None:
+    """Fold a run's modeled seconds (`TimeModel`) into the registry:
+    total / compute / comm seconds plus per-worker modeled compute and
+    the cross-pod wire seconds of the second tier."""
+    tl = tm.timeline_np(trace, model, fold=fold, cfg=cfg, schedule=schedule)
+    reg.gauge_set(f"{prefix}/modeled_wall_s", tl["wall"].sum())
+    reg.gauge_set(f"{prefix}/modeled_comp_s", tl["comp_clock"].sum())
+    reg.gauge_set(f"{prefix}/modeled_comm_s", tl["comm_clock"].sum())
+    reg.gauge_set(f"{prefix}/modeled_wire_s", tl["wire"].sum())
+    for p, s in enumerate(tl["comp"].sum(axis=0)):
+        reg.gauge_set(f"{prefix}/worker{p:02d}/modeled_comp_s", s)

@@ -78,6 +78,7 @@ from ..core.ps import PSApp, Trace, enforce_vap
 from ..kernels import ops
 from ..kernels.ref import RING_EMPTY, RING_INVALID
 from ..launch.mesh import make_ps_mesh
+from ..obs import metrics as obsm
 
 # Ticks once per (re)trace of the runtime body, i.e. once per compiled
 # program — the same compile-count evidence `core.sweep` keeps.  Numeric
@@ -153,7 +154,8 @@ def _layout(app: PSApp, mesh, worker_axes):
 def make_run_fn(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
                 mesh=None, record_views: bool = False,
                 worker_axes: tuple = ("data",),
-                schedule: ChurnSchedule | None = None):
+                schedule: ChurnSchedule | None = None,
+                obs: obsm.ObsSpec | None = None):
     """Build the jitted runtime for one config *family* on ``mesh``.
 
     Returns a callable ``fn(seed, cfg, schedule=None) -> Trace``.
@@ -176,6 +178,12 @@ def make_run_fn(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
     ``worker_axes`` names the mesh axes that partition the workers
     (``("data",)`` for the flat runtime, ``("pod", "data")`` for
     `repro.pods` — pod-major, matching `core.delays.pod_of`).
+
+    ``obs`` (static, `repro.obs.ObsSpec`) threads telemetry accumulators
+    through the scan — each worker shard folds its own reader rows, one
+    ``psum``/``pmax`` per leaf after the scan merges them, and the result
+    lands in ``Trace.obs``.  ``None`` (default) compiles the exact
+    pre-obs program.
     """
     mesh = make_ps_mesh() if mesh is None else mesh
     worker_axes = tuple(worker_axes)
@@ -190,6 +198,7 @@ def make_run_fn(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
     # the oracle contract covers the compressed path too.
     wired = cfg.comm_active
     quant0, G = cfg.quant, cfg.n_pods
+    obs_enabled = obsm.obs_on(obs)
     churned = schedule is not None
     if churned and schedule.live.shape[1] != P:
         raise ValueError(f"schedule has {schedule.live.shape[1]} workers, "
@@ -219,11 +228,21 @@ def make_run_fn(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
             reader_pods = pods_all[worker_ids]                 # [Pl]
             in_pod = reader_pods[:, None] == pods_all[None, :]  # [Pl, P]
             zeros_dl = jnp.zeros((dl,), f32)
+        if obs_enabled:
+            # channel-tier mask on the local reader rows for the
+            # forced-refresh split (all-True when G == 1)
+            if wired:
+                in_pod_obs = in_pod
+            else:
+                pods_o = pod_of(P, G)
+                in_pod_obs = pods_o[worker_ids][:, None] == pods_o[None, :]
 
         vmapped_update = jax.vmap(app.worker_update,
                                   in_axes=(0, 0, 0, None, 0))
 
         def step(carry, c):
+            if obs_enabled:
+                *carry, oacc = carry
             if wired:
                 base, uring, uclock, cview, local, rng, cst = carry
             else:
@@ -440,28 +459,48 @@ def make_run_fn(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
                        else jnp.ones((P,), bool))
             if record_views:
                 out["views0"] = views_all[0]
-            if wired:
-                return (base, uring, uclock, cview, local, rng, cst), out
-            return (base, uring, uclock, cview, local, rng), out
+            if obs_enabled:
+                # shard-local fold of this clock's step values; shards
+                # merge once after the scan (device_reduce), not per clock
+                oacc = obsm.device_update(
+                    oacc, staleness=staleness, forced=forced,
+                    delivered=delivered, ship_floats=ship_floats,
+                    live=out["live"],
+                    live_rows=live_l if churned
+                    else jnp.ones((Pl,), bool),
+                    in_pod=in_pod_obs)
+            new_carry = ((base, uring, uclock, cview, local, rng, cst)
+                         if wired else
+                         (base, uring, uclock, cview, local, rng))
+            if obs_enabled:
+                new_carry = (*new_carry, oacc)
+            return new_carry, out
 
         clocks = clock0 + jnp.arange(n_clocks, dtype=jnp.int32)
+        carry0 = ((base, uring, uclock, cview, local, rng, cst)
+                  if wired else
+                  (base, uring, uclock, cview, local, rng))
+        if obs_enabled:
+            carry0 = (*carry0, obsm.device_init(P, obs.n_buckets))
+        carryT, ys = jax.lax.scan(step, carry0, clocks)
+        base, uring, uclock, cview, local, rng = carryT[:6]
         if wired:
-            carry0 = (base, uring, uclock, cview, local, rng, cst)
-            (base, uring, uclock, cview, local, rng, cst), ys = jax.lax.scan(
-                step, carry0, clocks)
+            cst = carryT[6]
             x_final = (base + jnp.sum(cst["base_pod"], axis=0)) + jnp.sum(
                 uring * (uclock[:, None, None] > RING_INVALID), axis=(0, 1))
         else:
-            carry0 = (base, uring, uclock, cview, local, rng)
-            (base, uring, uclock, cview, local, rng), ys = jax.lax.scan(
-                step, carry0, clocks)
             x_final = base + jnp.sum(
                 uring * (uclock[:, None, None] > RING_INVALID), axis=(0, 1))
         state = dict(clock=clock0 + n_clocks, base=base,
                      uring=uring, uclock=uclock, cview=cview,
                      local=local, rng=rng,
                      comm=cst if wired else None)
-        return {"ys": ys, "x_final": x_final, "state": state}
+        ret = {"ys": ys, "x_final": x_final, "state": state}
+        if obs_enabled:
+            # merge the per-shard accumulators: one psum/pmax per reduced
+            # leaf for the whole run (replicated leaves pass through)
+            ret["obs"] = obsm.device_reduce(carryT[-1], worker_axes)
+        return ret
 
     local_spec = jax.tree_util.tree_map(lambda _: P_(worker_axes), app.local0)
     ys_specs = {"loss_ref": P_(), "loss_view": P_(),
@@ -490,11 +529,16 @@ def make_run_fn(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
         # the schedule is replicated: every shard reads the full per-clock
         # liveness rows (it needs producer liveness for all P)
         in_specs.append(jax.tree_util.tree_map(lambda _: P_(), schedule))
+    out_specs = {"ys": ys_specs, "x_final": P_("model"),
+                 "state": state_specs}
+    if obs_enabled:
+        # post-reduce the accumulators are replicated on every shard
+        out_specs["obs"] = jax.tree_util.tree_map(
+            lambda _: P_(), obsm.device_init(P, obs.n_buckets))
     sharded = shard_map(
         body, mesh=mesh,
         in_specs=tuple(in_specs),
-        out_specs={"ys": ys_specs, "x_final": P_("model"),
-                   "state": state_specs},
+        out_specs=out_specs,
         check_rep=False)
 
     def run(state: PSState, cfg, sched):
@@ -513,7 +557,8 @@ def make_run_fn(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
                       ship_floats=ys["ship_floats"], live=ys["live"],
                       views0=ys.get("views0"),
                       x_final=out["x_final"][:d],
-                      locals_final=out["state"]["local"])
+                      locals_final=out["state"]["local"],
+                      obs=out.get("obs"))
         return trace, PSState(**out["state"])
 
     jitted = jax.jit(run)
@@ -614,25 +659,28 @@ class PSRuntime:
 
     def run_fn(self, app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
                record_views: bool = False,
-               schedule: ChurnSchedule | None = None):
+               schedule: ChurnSchedule | None = None,
+               obs: obsm.ObsSpec | None = None):
         """The cached jitted ``fn(seed, cfg) -> Trace`` for this family."""
+        obs = obs if obsm.obs_on(obs) else None   # one cache entry for off
         key = (id(app), cfg.family, cfg.effective_window, n_clocks,
-               record_views, _churn_key(schedule))
+               record_views, _churn_key(schedule), obs)
         fn = self._cache.get(key)
         if fn is None:
             fn = make_run_fn(app, cfg, n_clocks, mesh=self.mesh,
                              record_views=record_views,
                              worker_axes=self.worker_axes,
-                             schedule=schedule)
+                             schedule=schedule, obs=obs)
             self._cache[key] = fn
         return fn
 
     def run(self, app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
             seed=0, record_views: bool = False,
-            schedule: ChurnSchedule | None = None) -> Trace:
+            schedule: ChurnSchedule | None = None,
+            obs: obsm.ObsSpec | None = None) -> Trace:
         """Run ``n_clocks`` of the app under ``cfg`` on the mesh."""
         return self.run_fn(app, cfg, n_clocks, record_views,
-                           schedule)(seed, cfg, schedule)
+                           schedule, obs)(seed, cfg, schedule)
 
     def init_state(self, app: PSApp, cfg: ConsistencyConfig, seed=0,
                    n_clocks: int = 1) -> PSState:
@@ -641,7 +689,8 @@ class PSRuntime:
 
     def run_from(self, app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
                  state: PSState, record_views: bool = False,
-                 schedule: ChurnSchedule | None = None):
+                 schedule: ChurnSchedule | None = None,
+                 obs: obsm.ObsSpec | None = None):
         """Advance ``state`` by ``n_clocks`` -> ``(Trace, PSState)``."""
         return self.run_fn(app, cfg, n_clocks, record_views,
-                           schedule).run_from(state, cfg, schedule)
+                           schedule, obs).run_from(state, cfg, schedule)

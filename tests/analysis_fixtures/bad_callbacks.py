@@ -1,0 +1,22 @@
+"""Fixture: host callbacks landed inside traced contexts."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import io_callback
+
+
+@jax.jit
+def step(x):
+    jax.debug.print("x = {}", x)  # VIOLATION: host-callback
+    io_callback(lambda v: v, jax.ShapeDtypeStruct((), x.dtype), x)  # VIOLATION: host-callback
+    return x * 2
+
+
+def body(carry, t):
+    jax.debug.callback(lambda v: None, carry)  # VIOLATION: host-callback
+    probe = jax.pure_callback(  # VIOLATION: host-callback
+        lambda v: v, jax.ShapeDtypeStruct((), jnp.float32.dtype), carry)
+    return carry + t + probe, t
+
+
+def run(xs):
+    return jax.lax.scan(body, 0.0, xs)

@@ -1,0 +1,22 @@
+"""Fixture: telemetry accumulated on device; host callbacks stay host-side."""
+import jax
+import jax.numpy as jnp
+
+
+def device_update(acc, lag):
+    # the sanctioned route: accumulate in the carry, drain after the run
+    return {"lag_max": jnp.maximum(acc["lag_max"], lag.max())}
+
+
+@jax.jit
+def step(acc, x):
+    lag = jnp.abs(x)
+    acc = device_update(acc, lag)
+    jax.debug.print("lag={}", lag)  # analysis: ignore[host-callback] -- one-off kernel debugging probe
+    return acc, x * 2
+
+
+def report(acc):
+    # host side, never traced: printing here is fine
+    jax.debug.print("final lag_max = {}", acc["lag_max"])
+    print("report done")

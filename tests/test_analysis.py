@@ -22,7 +22,8 @@ REPO = os.path.dirname(HERE)
 FIXTURES = os.path.join(HERE, "analysis_fixtures")
 SRC = os.path.join(REPO, "src", "repro")
 
-FAMILIES = ("recompile", "rng", "collectives", "pytree", "pallas")
+FAMILIES = ("recompile", "rng", "collectives", "pytree", "pallas",
+            "callbacks")
 
 
 def _expected_violations(path):
@@ -102,7 +103,8 @@ def test_cli_exit_codes():
         capture_output=True, text=True, env=env, cwd=REPO)
     assert rules.returncode == 0
     for rule_id in ("traced-branch", "rng-reuse", "unmasked-gather",
-                    "pytree-frozen", "pallas-ref", "staleness-contract"):
+                    "pytree-frozen", "pallas-ref", "host-callback",
+                    "staleness-contract"):
         assert rule_id in rules.stdout
 
 

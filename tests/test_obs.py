@@ -1,0 +1,353 @@
+"""The telemetry substrate (`repro.obs`): the contracts this PR pins.
+
+- **Bit-identity**: every Trace producer (simulator, `PSRuntime`,
+  `PodsRuntime`) emits a bit-identical `Trace` (including the RNG-driven
+  fields — same stream) with obs on vs off, across dense, compressed
+  hierarchical, and churned runs.  Disabled obs compiles the exact
+  pre-obs program; enabled obs must not perturb it either.
+- **Accumulator correctness**: the on-device accumulators equal an
+  independent host-side recomputation from the Trace arrays, and agree
+  across producers.
+- **Stream/The exporters**: JSONL schema round-trip, validator
+  rejections, a byte-pinned Perfetto golden
+  (``REPRO_REGEN_GOLDEN=1`` regenerates), report rendering.
+- **Overhead budget**: obs-on sweep within 5% of obs-off — asserted on
+  the forced-device CI lanes (``REPRO_FORCE_HOST_DEVICES``), where the
+  topology is deliberate.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import essp, simulate, ssp
+from repro.core.consistency import compressed, podded
+from repro.core.delays import make_churn, same_pod_mask
+from repro.core.sweep import sweep
+from repro.core.timemodel import TimeModel
+from repro.obs import (DEFAULT_LAG_BUCKETS, MetricsRegistry, ObsSpec,
+                       drain_device, record_compiles, record_timing)
+from repro.obs import events as obs_events
+from repro.obs import perfetto as obs_perfetto
+from repro.obs import report as obs_report
+from repro.obs.events import SchemaError
+from repro.pods import PodsRuntime, default_pods_mesh
+from repro.psrun import PSRuntime
+from repro.psrun.runtime import default_mesh as flat_mesh_for
+from repro.psrun.validate import TRACE_FIELDS
+
+from conftest import PSApp
+
+HERE = os.path.dirname(__file__)
+GOLDEN = os.path.join(HERE, "golden", "perfetto_small.json")
+
+T = 12
+
+
+def make_quad(P, d=16, noisy=True):
+    def worker_update(view, local, _wid, clock, rng):
+        g = view + (0.05 * jax.random.normal(rng, view.shape)
+                    if noisy else 0.0)
+        return -(0.3 / jnp.sqrt(1.0 + clock)) * g / P, local
+
+    return PSApp(name=f"quad{P}{'n' if noisy else 'd'}", dim=d,
+                 n_workers=P, x0=jnp.ones((d,)) * 2.0,
+                 local0={"_": jnp.zeros((P, 1))},
+                 worker_update=worker_update,
+                 loss=lambda x, l: jnp.sum(jnp.square(x)))
+
+
+# (name, cfg for P workers, schedule for P workers): flat dense, dense
+# hierarchical push, the compressed wire (the wired scan-carry branch),
+# and churn.  The pods runtime requires a hierarchical config, so the
+# flat scenario runs on the other two producers only.
+SCENARIOS = {
+    "flat": (lambda P: essp(2), lambda P: None),
+    "dense": (lambda P: podded(essp(2), 2, s_xpod=2), lambda P: None),
+    "compressed": (lambda P: compressed(
+        podded(essp(2), 2, s_xpod=2), agg_clocks=2, topk_frac=0.5,
+        quant="int8"), lambda P: None),
+    "churn": (lambda P: podded(ssp(1), 2, s_xpod=2),
+              lambda P: make_churn(T, P, worker_outages=((1, 3, 8),
+                                                         (P - 1, 5, 10)))),
+}
+
+
+def pods_runtime_for(P, n_pods=2):
+    n = len(jax.devices())
+    if n >= 2 * n_pods and n % n_pods == 0:
+        return PodsRuntime(default_pods_mesh(P, n_pods=n_pods))
+    return PSRuntime(flat_mesh_for(P))
+
+
+def _run(producer, app, cfg, sched, obs):
+    if producer == "sim":
+        return simulate(app, cfg, T, seed=0, schedule=sched, obs=obs)
+    if producer == "pods" and cfg.n_pods == 1:
+        pytest.skip("the pods runtime requires a hierarchical config")
+    rt = (PSRuntime(flat_mesh_for(app.n_workers)) if producer == "psrun"
+          else pods_runtime_for(app.n_workers))
+    return rt.run(app, cfg, T, seed=0, schedule=sched, obs=obs)
+
+
+def assert_traces_equal(a, b, context=""):
+    for name in TRACE_FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, name)), np.asarray(getattr(b, name)),
+            err_msg=f"{context}:{name}")
+
+
+@pytest.mark.parametrize("producer", ["sim", "psrun", "pods"])
+@pytest.mark.parametrize("scenario", sorted(SCENARIOS))
+def test_bit_identity_obs_on_off(producer, scenario):
+    """Obs on vs off: bit-identical Trace (and RNG stream — the noisy
+    gradient draws land in loss/x_final) for every producer x scenario."""
+    P = 8
+    mk_cfg, mk_sched = SCENARIOS[scenario]
+    app = make_quad(P)
+    cfg, sched = mk_cfg(P), mk_sched(P)
+    tr_off = _run(producer, app, cfg, sched, None)
+    tr_on = _run(producer, app, cfg, sched, ObsSpec())
+    assert tr_off.obs is None
+    assert tr_on.obs is not None
+    assert_traces_equal(tr_on, tr_off, f"{producer}/{scenario}")
+
+
+@pytest.mark.parametrize("scenario", sorted(SCENARIOS))
+def test_accumulators_agree_across_producers(scenario):
+    """All three producers return identical accumulator pytrees."""
+    P = 8
+    mk_cfg, mk_sched = SCENARIOS[scenario]
+    app = make_quad(P)
+    cfg, sched = mk_cfg(P), mk_sched(P)
+    producers = ("sim", "psrun") if cfg.n_pods == 1 \
+        else ("sim", "psrun", "pods")
+    accs = {prod: _run(prod, app, cfg, sched, ObsSpec()).obs
+            for prod in producers}
+    ref = accs["sim"]
+    for prod in producers[1:]:
+        for k in ref:
+            np.testing.assert_array_equal(
+                np.asarray(ref[k]), np.asarray(accs[prod][k]),
+                err_msg=f"{prod}:{k}")
+
+
+def test_accumulators_match_trace_recomputation():
+    """The on-device accumulators equal an independent numpy recomputation
+    from the Trace arrays (churned hierarchical run: exercises the
+    live-reader masking and the intra/xpod forced split)."""
+    P = 8
+    cfg = podded(ssp(1), 2, s_xpod=2)
+    sched = make_churn(T, P, worker_outages=((1, 3, 8), (6, 5, 10)))
+    app = make_quad(P)
+    tr = simulate(app, cfg, T, seed=0, schedule=sched, obs=ObsSpec())
+    acc = {k: np.asarray(v) for k, v in tr.obs.items()}
+
+    stal = np.asarray(tr.staleness)
+    forced = np.asarray(tr.forced)
+    delivered = np.asarray(tr.delivered)
+    live = np.asarray(tr.live)
+    ship = np.asarray(tr.ship_floats)
+    lag = -1 - stal
+    w = live[:, :, None]                       # live reader rows
+    in_pod = np.broadcast_to(
+        np.asarray(same_pod_mask(P, cfg.n_pods))[None], forced.shape)
+    NB = DEFAULT_LAG_BUCKETS
+    hist = np.bincount(np.clip(lag, 0, NB - 1)[np.broadcast_to(
+        w, lag.shape)], minlength=NB)
+    f = forced & np.broadcast_to(w, forced.shape)
+
+    assert acc["clocks"] == T
+    np.testing.assert_array_equal(acc["lag_hist"], hist)
+    assert acc["lag_max"] == np.where(np.broadcast_to(w, lag.shape),
+                                      lag, 0).max()
+    assert acc["forced_intra"] == (f & in_pod).sum()
+    assert acc["forced_xpod"] == (f & ~in_pod).sum()
+    assert acc["delivered"] == (delivered
+                                & np.broadcast_to(w, forced.shape)).sum()
+    np.testing.assert_allclose(acc["ship_floats"], ship.sum(axis=0),
+                               rtol=1e-6)
+    assert acc["dead_worker_clocks"] == (~live).sum()
+
+
+def test_sweep_threads_obs_bit_identically():
+    """`core.sweep` with obs on returns the same traces as off, and each
+    point's Trace carries its accumulators."""
+    app = make_quad(4)
+    cfgs = [essp(2), ssp(3)]
+    off = sweep(app, cfgs, T, seeds=[0, 1])
+    on = sweep(app, cfgs, T, seeds=[0, 1], obs=ObsSpec())
+    for i in range(len(cfgs)):
+        assert_traces_equal(on.trace(i), off.trace(i), f"sweep:{i}")
+        assert on.trace(i).obs is not None and off.trace(i).obs is None
+
+
+# ------------------------------------------------------------- registry
+
+
+def test_registry_counters_gauges_hists():
+    reg = MetricsRegistry()
+    reg.counter_add("a/n", 2)
+    reg.counter_add("a/n", np.int64(3))
+    reg.gauge_set("a/g", jnp.float32(1.5))
+    reg.hist_add("a/h", [1, 0, 2])
+    reg.hist_add("a/h", [0, 1, 0])
+    d = reg.to_dict()
+    assert d["counters"]["a/n"] == 5
+    assert d["gauges"]["a/g"] == 1.5
+    assert d["hists"]["a/h"]["counts"] == [1, 1, 2]
+    assert d["hists"]["a/h"]["buckets"] == ["0", "1", "2+"]
+    flat = reg.flat()
+    assert flat["a/h/total"] == 4.0
+    assert flat["a/h/mean"] == pytest.approx((0 * 1 + 1 * 1 + 2 * 2) / 4)
+    with pytest.raises(ValueError):
+        reg.hist_add("a/h", [1, 2])            # bucket count changed
+
+
+def test_drain_device_and_compile_gauges():
+    app = make_quad(4)
+    tr = simulate(app, essp(2), T, seed=0, obs=ObsSpec())
+    reg = MetricsRegistry()
+    with pytest.raises(ValueError):
+        drain_device(reg, None)
+    drain_device(reg, tr.obs)
+    record_compiles(reg)
+    record_timing(reg, tr, "essp", TimeModel(), fold=(0, 0))
+    flat = reg.flat()
+    assert flat["ps/clocks"] == T
+    assert flat["ps/staleness_lag/total"] == T * 4 * 4
+    assert isinstance(flat["compiles/sweep_traces"], int)
+    assert isinstance(flat["compiles/runtime_traces"], int)
+    assert flat["ps/modeled_wall_s"] > 0
+    assert "ps/worker00/modeled_comp_s" in flat
+
+
+# ------------------------------------------------------- events / stream
+
+
+def _small_stream(registry=None):
+    """A tiny deterministic churned hierarchical run -> event stream."""
+    app = make_quad(4, noisy=False)
+    cfg = podded(essp(1), 2, s_xpod=1)
+    sched = make_churn(6, 4, worker_outages=((2, 2, 5),))
+    tr = simulate(app, cfg, 6, seed=0, schedule=sched, obs=ObsSpec())
+    tm = TimeModel(straggler_sigma=0.0)        # degenerate draws: exact
+    ev = obs_events.collect_events(tr, cfg, tm, schedule=sched,
+                                   run="golden", registry=registry)
+    return ev
+
+
+def test_jsonl_roundtrip(tmp_path):
+    reg = MetricsRegistry()
+    reg.counter_add("ps/forced_intra", 3)
+    reg.hist_add("ps/staleness_lag", [4, 2, 0, 1])
+    ev = _small_stream(registry=reg)
+    obs_events.validate_events(ev)
+    path = tmp_path / "events.jsonl"
+    obs_events.write_jsonl(ev, path)
+    assert obs_events.read_jsonl(path) == ev
+    types = {e["type"] for e in ev}
+    assert {"run_start", "clock", "worker_span", "churn", "shipment",
+            "metrics", "run_end"} <= types
+
+
+def test_validator_rejections():
+    ev = _small_stream()
+    with pytest.raises(SchemaError):
+        obs_events.validate_events([])
+    with pytest.raises(SchemaError):
+        obs_events.validate_events(ev[1:])              # no run_start
+    with pytest.raises(SchemaError):
+        obs_events.validate_events(ev[:-1])             # no run_end
+    with pytest.raises(SchemaError):
+        obs_events.validate_events(
+            [dict(ev[0], v=99)] + ev[1:])               # version mismatch
+    with pytest.raises(SchemaError):
+        obs_events.validate_events(
+            ev[:-1] + [{"type": "mystery"}, ev[-1]])    # unknown type
+    clock = next(i for i, e in enumerate(ev) if e["type"] == "clock")
+    broken = dict(ev[clock])
+    del broken["loss_ref"]
+    with pytest.raises(SchemaError):
+        obs_events.validate_events(
+            ev[:clock] + [broken] + ev[clock + 1:])     # missing field
+    last = next(i for i in range(len(ev) - 1, -1, -1)
+                if ev[i].get("t", None) not in (None, 0))
+    with pytest.raises(SchemaError):
+        obs_events.validate_events(
+            ev[:last] + [dict(ev[last], t=0)] + ev[last + 1:])  # t order
+
+
+def test_perfetto_golden(tmp_path):
+    """Byte-pinned Perfetto export of the small deterministic stream.
+    Regenerate after an intentional schema/export change with
+    ``REPRO_REGEN_GOLDEN=1 pytest tests/test_obs.py -k golden``."""
+    ev = _small_stream()
+    path = tmp_path / "trace.perfetto.json"
+    obs_perfetto.write_trace(ev, path)
+    got = path.read_text()
+    if os.environ.get("REPRO_REGEN_GOLDEN"):
+        os.makedirs(os.path.dirname(GOLDEN), exist_ok=True)
+        with open(GOLDEN, "w") as f:
+            f.write(got)
+    with open(GOLDEN) as f:
+        want = f.read()
+    assert got == want, "Perfetto export drifted from the golden " \
+                        "(REPRO_REGEN_GOLDEN=1 to re-pin intentionally)"
+    # structural spot checks so the golden itself stays honest
+    trace = json.loads(got)
+    lanes = {e["args"]["name"] for e in trace["traceEvents"]
+             if e["ph"] == "M" and e["name"] == "thread_name"}
+    assert {"clocks", "worker 0", "worker 3", "producer 0"} <= lanes
+    cats = {e.get("cat") for e in trace["traceEvents"]}
+    assert {"clock", "worker", "wire", "churn"} <= cats
+    outages = [e for e in trace["traceEvents"] if e.get("cat") == "churn"]
+    assert len(outages) == 1 and outages[0]["tid"] == 2 + 1
+
+
+def test_report_renders():
+    app = make_quad(4)
+    cfg = podded(essp(1), 2, s_xpod=1)
+    tr = simulate(app, cfg, T, seed=0, obs=ObsSpec())
+    tm = TimeModel()
+    s = obs_report.trace_summary(tr, cfg, tm, label="essp", fold=(0, 0))
+    reg = MetricsRegistry()
+    drain_device(reg, tr.obs)
+    md = obs_report.render_report("unit report", [s], registry=reg,
+                                  notes=("one run",))
+    for token in ("# unit report", "## Staleness", "## Throughput",
+                  "## Wire", "## Metrics", "| essp |", "> one run"):
+        assert token in md, token
+    grid = {"essp": {"baseline": {"clocks_to_thresh": 9, "lost_clocks": 0},
+                     "churn": {"clocks_to_thresh": None,
+                               "lost_clocks": None, "diverged": True}}}
+    table = obs_report.churn_grid_table(grid)
+    assert "| essp | 9 | ∞ DIV |" in table
+
+
+# ------------------------------------------------------------- overhead
+
+
+def test_overhead_budget():
+    """Obs-on within 5% of obs-off (+ absolute timer-jitter slack).
+    Asserted only where the topology is deliberate (the CI forced-device
+    lanes) — on shared dev hosts the timing is reported, not gated.
+    Delegates to the bench's interleaved min-of-N measurement: min of
+    alternating executions isolates the accumulators' deterministic
+    device work from host scheduling noise, which a tiny test app timed
+    back-to-back cannot (the budget is a *ratio*, so the smaller the
+    denominator the louder the jitter)."""
+    if not os.environ.get("REPRO_FORCE_HOST_DEVICES"):
+        pytest.skip("overhead budget gated on the forced-device CI lanes")
+    from benchmarks.obs_bench import measure_overhead
+    rec = measure_overhead(reps=7)
+    if not rec["ok"]:                           # one retry absorbs a GC
+        rec = measure_overhead(reps=7, seed=1)  # pause / noisy neighbor
+    assert rec["ok"], \
+        f"obs overhead {rec['overhead_ratio'] - 1:+.1%} exceeds the 5% " \
+        f"budget (off={rec['t_obs_off_s']:.4f}s on={rec['t_obs_on_s']:.4f}s)"
