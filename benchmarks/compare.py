@@ -19,6 +19,14 @@ value IS a regression (the run stopped reaching its threshold).  The
 not gated.  A missing baseline directory or file passes trivially — the
 first run of a new lane seeds the trajectory.
 
+A regressed record is also *explained*, not just flagged: each pair with
+regressions runs through `repro.obs.diff.diff_bench`, which attributes
+the movement across staleness / straggler / wire / churn components by
+metric name and prints the likely component with its driver metric (a
+flipped claim pins its component outright).  Attribution is advisory —
+it never changes the exit code — and degrades to nothing if the
+``repro`` package is not importable.
+
 Usage: ``python -m benchmarks.compare BASELINE_DIR CURRENT_DIR
 [--threshold 0.15]``.
 """
@@ -95,6 +103,19 @@ def compare_bench(base: dict, cur: dict, threshold: float) -> dict:
     return {"rows": rows, "regressions": regressions}
 
 
+def _attribute(base: dict, cur: dict) -> list:
+    """Component attribution lines for a regressed record pair
+    (`repro.obs.diff.diff_bench`); empty when ``repro`` is unavailable
+    (the comparator itself stays stdlib-only)."""
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                    "src"))
+    try:
+        from repro.obs.diff import diff_bench, explain
+    except ImportError:
+        return []
+    return explain(diff_bench(base, cur))
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("baseline", help="directory with the previous run's "
@@ -122,10 +143,14 @@ def main(argv=None) -> int:
         if not os.path.exists(base_path):
             print("   (no baseline record — seeding)")
             continue
-        res = compare_bench(_load(base_path), cur, args.threshold)
+        base = _load(base_path)
+        res = compare_bench(base, cur, args.threshold)
         for mname, b, c, rel, status in res["rows"]:
             delta = "" if rel is None else f" {rel:+.1%}"
             print(f"   {mname}: {b} -> {c}{delta}  [{status}]")
+        if res["regressions"]:
+            for line in _attribute(base, cur):
+                print(f"   ~ {line}")
         all_regressions += [f"{name}: {r}" for r in res["regressions"]]
 
     if all_regressions:

@@ -1,0 +1,176 @@
+"""Detection-quality bench: the failure detector + SLO monitors, scored.
+
+`repro.obs.monitor` turns telemetry into verdicts; this suite turns the
+verdicts into measured claims (``BENCH_detect.json``, the harness claim
+gate, and the perf-trajectory tracker).  The eager families (dense
+``eager`` and compressed ``xeager`` — the families whose consistency
+claims the churn matrix gates) run the full `benchmarks.robustness`
+failure-scenario grid on the 16-worker / 2-pod topology; every run's
+event stream is monitored blind (the detector never sees the stream's
+``churn`` events) and then graded against the oracle `ChurnSchedule`
+(`core.delays.score_detections`):
+
+1. ``all_outages_detected_in_budget`` — every oracle outage is detected
+   within ``s + agg_clocks`` clocks of its start (the staleness budget a
+   dead worker can hide inside), with zero false alarms anywhere on the
+   grid;
+2. ``zero_false_alarms_neutral`` — the liveness-neutral scenarios
+   (baseline / regime_shift / bw_crunch: stragglers and bandwidth
+   crunches, but nobody dies) raise zero alarms at *every* timeout
+   setting swept (1, 2, 4) — cadence noise must not look like death;
+3. ``slo_verdicts_match_ground_truth`` — the staleness SLO verdicts
+   (windowed p99 read-lag vs the declared ``s + s_xpod + agg_clocks - 1``
+   contract) agree exactly, per window, with a Trace-derived ground
+   truth recomputation, both under the declared bound (no violations —
+   the contract holds) and under a deliberately tight ``bound=0``
+   (violations fire, and fire in exactly the ground-truth windows);
+   ``slo_tight_fires`` pins the tight pass non-vacuous.
+
+Phi separation (weakest true-death phi vs noisiest healthy phi) is
+reported as metrics — evidence, not a gate: the verdict trigger is the
+missed-clock timeout, and the bw_crunch scenario shows why (a stretched
+clock wall stretches healthy silences too).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.apps.matfact import MFConfig, make_mf_app, mf_time_model
+from repro.core import simulate
+from repro.core.delays import score_detections
+from repro.obs import ObsSpec
+from repro.obs import events as obs_events
+from repro.obs.monitor import DetectorParams, SLOParams, monitor_stream
+
+from .common import emit, save_bench_json, save_json, \
+    wire_bound_time_model
+from .robustness import CHURN_PODS, CHURN_WORKERS, churn_families, \
+    churn_scenarios
+
+# Liveness-neutral scenarios: stress without death — any alarm is false.
+NEUTRAL = ("baseline", "regime_shift", "bw_crunch")
+TIMEOUT_SWEEP = (1, 2, 4)
+SLO_WINDOW = 8
+
+
+def _budget(cfg) -> int:
+    """Clocks a dead worker can hide inside the staleness budget."""
+    return int(cfg.staleness) + int(getattr(cfg, "agg_clocks", 1))
+
+
+def _gt_staleness_windows(trace, bound: int, window: int) -> list:
+    """Trace-derived ground truth: window-closing clocks whose worst
+    per-clock p99 read lag exceeds ``bound`` — recomputed from the raw
+    ``Trace.staleness`` / ``Trace.live`` arrays with the same
+    `events.clock_lag_stats` reduction the stream producer uses, chunked
+    exactly like `SLOMonitor` (tumbling, final partial window counts)."""
+    staleness = np.asarray(trace.staleness)
+    live = np.asarray(trace.live)
+    T = staleness.shape[0]
+    p99 = []
+    for t in range(T):
+        st = obs_events.clock_lag_stats(staleness[t], live[t])
+        p99.append(None if st is None else st[0])
+    out = []
+    for w0 in range(0, T, window):
+        chunk = [v for v in p99[w0:w0 + window] if v is not None]
+        if chunk and max(chunk) > bound:
+            out.append(min(w0 + window, T) - 1)
+    return out
+
+
+def run(T: int = 120, seed: int = 0) -> dict:
+    families = [(n, c) for n, c in churn_families()
+                if n in ("eager", "xeager")]
+    scenarios = churn_scenarios(T)
+    app = make_mf_app(MFConfig(n_rows=64, n_cols=64, rank=8, true_rank=8,
+                               n_workers=CHURN_WORKERS, batch=64, lr=0.5))
+    tm = wire_bound_time_model(app, mf_time_model().t_comp, CHURN_PODS)
+
+    out: dict = {"T": T, "workers": CHURN_WORKERS, "n_pods": CHURN_PODS,
+                 "grid": {}}
+    metrics: dict = {}
+    in_budget, neutral_clean, slo_match, tight_fired = [], [], [], 0
+
+    for fname, cfg in families:
+        budget = _budget(cfg)
+        bound = obs_events.declared_bound(cfg)
+        for sname, sched in scenarios:
+            tr = simulate(app, cfg, T, seed=seed, schedule=sched,
+                          obs=ObsSpec())
+            ev = obs_events.collect_events(tr, cfg, tm, schedule=sched,
+                                           run=f"{fname}/{sname}")
+            live = (np.asarray(sched.live) if sched is not None
+                    else np.ones((T, CHURN_WORKERS), bool))
+
+            res = monitor_stream(ev, DetectorParams(timeout_clocks=2),
+                                 SLOParams(window=SLO_WINDOW))
+            score = score_detections(live, res.verdicts, budget)
+            in_budget.append(score["all_detected_in_budget"])
+
+            if sname in NEUTRAL:
+                clean = all(
+                    monitor_stream(
+                        ev, DetectorParams(timeout_clocks=to)
+                    ).health["n_worker_down"] == 0
+                    for to in TIMEOUT_SWEEP)
+                neutral_clean.append(clean)
+
+            # SLO agreement, declared contract + deliberately tight
+            got = [v["t"] for v in res.violations
+                   if v["slo"] == "staleness"]
+            want = _gt_staleness_windows(tr, bound, SLO_WINDOW)
+            tight = monitor_stream(
+                ev, DetectorParams(timeout_clocks=2),
+                SLOParams(window=SLO_WINDOW, staleness_bound=0))
+            got_tight = [v["t"] for v in tight.violations
+                         if v["slo"] == "staleness"]
+            want_tight = _gt_staleness_windows(tr, 0, SLO_WINDOW)
+            slo_match.append(got == want and got_tight == want_tight)
+            tight_fired += len(got_tight)
+
+            row = {
+                "budget_clocks": budget, "declared_bound": bound,
+                "n_outages": score["n_outages"],
+                "n_alarms": score["n_alarms"],
+                "n_false_alarms": score["n_false_alarms"],
+                "max_latency": score["max_latency"],
+                "all_detected_in_budget":
+                    score["all_detected_in_budget"],
+                "max_healthy_phi": res.health["max_healthy_phi"],
+                "min_alarm_phi": res.health["min_alarm_phi"],
+                "slo_declared_violations": len(got),
+                "slo_tight_violations": len(got_tight),
+                "slo_match": got == want and got_tight == want_tight,
+            }
+            out["grid"][f"{fname}/{sname}"] = row
+            key = f"{fname}/{sname}"
+            metrics[f"{key}/detect_latency_clocks"] = score["max_latency"]
+            metrics[f"{key}/false_alarms"] = score["n_false_alarms"]
+            metrics[f"{key}/max_healthy_phi"] = \
+                res.health["max_healthy_phi"]
+            if res.health["min_alarm_phi"] is not None:
+                metrics[f"{key}/min_alarm_phi"] = \
+                    res.health["min_alarm_phi"]
+            emit(f"detect/{key}", 0.0,
+                 f"outages={score['n_outages']};"
+                 f"latency={score['max_latency']};"
+                 f"false={score['n_false_alarms']};"
+                 f"slo_match={row['slo_match']}")
+
+    claim = {
+        "all_outages_detected_in_budget": bool(all(in_budget)),
+        "zero_false_alarms_neutral": bool(all(neutral_clean)),
+        "slo_verdicts_match_ground_truth": bool(all(slo_match)),
+        "slo_tight_fires": bool(tight_fired > 0),
+    }
+    out["claim"] = claim
+    save_json("detect", out)
+    save_bench_json("detect", metrics, claim=claim)
+    emit("detect/claims", 0.0,
+         ";".join(f"{k}={v}" for k, v in claim.items()))
+    return out
+
+
+if __name__ == "__main__":
+    print(run()["claim"])

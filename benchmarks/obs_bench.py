@@ -52,6 +52,7 @@ from repro.obs import (MetricsRegistry, ObsSpec,            # noqa: E402
                        drain_device, record_compiles, record_timing)
 from repro.obs import events as obs_events                  # noqa: E402
 from repro.obs import perfetto as obs_perfetto              # noqa: E402
+from repro.obs import promtext as obs_promtext              # noqa: E402
 from repro.obs import report as obs_report                  # noqa: E402
 
 from . import common                                        # noqa: E402
@@ -161,6 +162,22 @@ def smoke(T: int = 24, seed: int = 0) -> dict:
     assert outage_ok, f"expected {WORKERS // PODS} outage windows, " \
                       f"got {len(outages)}"
 
+    # the neutral twin of the churned stream: same family/topology, no
+    # schedule — the CI obs lane monitors it with --fail-on-alarm (any
+    # verdict on a healthy fleet is a false alarm) and diffs churned vs
+    # baseline through repro.obs.diff for the attribution artifact
+    tr_base = rt.run(app, cfg, T, seed=seed, obs=ObsSpec())
+    ev_base = obs_events.collect_events(tr_base, cfg, tm,
+                                        run="obs-smoke-baseline")
+    obs_events.validate_events(ev_base)
+    jsonl_base = os.path.join(common.RESULTS_DIR,
+                              "obs_events_baseline.jsonl")
+    obs_events.write_jsonl(ev_base, jsonl_base)
+
+    # OpenMetrics text artifact next to the JSONL (the scrape-side view)
+    prom_path = os.path.join(common.RESULTS_DIR, "obs_metrics.prom")
+    obs_promtext.write(prom_path, reg)
+
     report_path = os.path.join(common.RESULTS_DIR, "obs_report.md")
     summary = obs_report.trace_summary(tr_on, cfg, tm, label="obs-smoke",
                                        fold=(0, seed), schedule=sched)
@@ -175,7 +192,8 @@ def smoke(T: int = 24, seed: int = 0) -> dict:
              "outage_windows_ok": bool(outage_ok)}
     emit("obs/smoke", 0.0, ";".join(f"{k}={v}" for k, v in claim.items()))
     return {"mesh": dict(rt.mesh.shape), "n_events": len(ev),
-            "artifacts": [jsonl, trace_path, report_path],
+            "artifacts": [jsonl, jsonl_base, prom_path, trace_path,
+                          report_path],
             "metrics": reg.flat(), "claim": claim}
 
 

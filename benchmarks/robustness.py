@@ -332,6 +332,33 @@ def smoke(T: int = 60, seed: int = 0) -> dict:
     out["claim"] = res["claim_churn"]
     assert out["claim"]["eager_recovers_before_gated"], res["grid"]
     assert out["claim"]["all_families_survive"], res["grid"]
+
+    # (c) the failure detector sees the same outage the oracle seeded:
+    # monitor the churned stream blind, grade against the schedule
+    from repro.core.delays import score_detections
+    from repro.obs import ObsSpec
+    from repro.obs import events as obs_events
+    from repro.obs.monitor import DetectorParams, monitor_stream
+    cfg_dense = dict(churn_families())["eager"]
+    tr = simulate(app_small, cfg_dense, 12, seed=seed, schedule=sched,
+                  obs=ObsSpec())
+    tm = wire_bound_time_model(app_small, mf_time_model().t_comp,
+                               CHURN_PODS)
+    ev = obs_events.collect_events(tr, cfg_dense, tm, schedule=sched,
+                                   run="churn-smoke")
+    mon = monitor_stream(ev, DetectorParams(timeout_clocks=2))
+    budget = int(cfg_dense.staleness) + 1
+    score = score_detections(np.asarray(sched.live), mon.verdicts,
+                             budget)
+    out["detector_score"] = {k: score[k] for k in
+                             ("n_outages", "n_false_alarms",
+                              "max_latency", "all_detected_in_budget")}
+    emit("robustness/smoke/detector", 0.0,
+         ";".join(f"{k}={v}" for k, v in out["detector_score"].items()))
+    assert score["all_detected_in_budget"], score
+    out["claim"] = dict(out["claim"],
+                        detector_in_budget=score[
+                            "all_detected_in_budget"])
     return out
 
 

@@ -46,10 +46,11 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
     t0 = time.time()
     from . import (analysis_bench, autotune_bench, comm_bench,
-                   comm_comp, common, kernels_bench, lda_convergence,
-                   lm_consistency, mf_convergence, pods_bench,
-                   psrun_bench, robustness, staleness_profile,
-                   stragglers, sweep_bench, theory_validation)
+                   comm_comp, common, detect_bench, kernels_bench,
+                   lda_convergence, lm_consistency, mf_convergence,
+                   pods_bench, psrun_bench, robustness,
+                   staleness_profile, stragglers, sweep_bench,
+                   theory_validation)
     if args.json_dir:
         common.set_results_dir(args.json_dir)
 
@@ -104,6 +105,7 @@ def main(argv=None) -> int:
     suite("comm_substrate", lambda: comm_bench.run()["claim"])
     suite("kernels", lambda: kernels_bench.run())
     suite("analysis", lambda: analysis_bench.run()["claim"])
+    suite("detect_quality", lambda: detect_bench.run()["claim"])
 
     print("\n=== paper-fidelity claim summary ===")
     for k, v in claims.items():

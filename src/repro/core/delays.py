@@ -172,6 +172,88 @@ def churn_rates(_cfg: ConsistencyConfig, schedule: ChurnSchedule | None,
     return jnp.where(ids < n, rate, 1.0)
 
 
+def outage_windows(live) -> "list[tuple[int, int, int]]":
+    """Oracle outages as ``(worker, t0, t1)`` — dead on ``[t0, t1)``.
+
+    ``live`` is any ``[T, P]`` bool mask (a `ChurnSchedule.live`, or the
+    reconstruction `repro.obs.monitor.live_from_events` builds from a
+    stream's churn transitions).  An outage still open at the horizon
+    closes at ``t1 = T``.
+    """
+    live = np.asarray(live, bool)
+    T, P = live.shape
+    out = []
+    for w in range(P):
+        t0 = None
+        for t in range(T):
+            if not live[t, w] and t0 is None:
+                t0 = t
+            elif live[t, w] and t0 is not None:
+                out.append((w, t0, t))
+                t0 = None
+        if t0 is not None:
+            out.append((w, t0, T))
+    return out
+
+
+def score_detections(live, verdicts, budget_clocks: int) -> dict:
+    """Score failure-detector verdicts against the oracle ``live`` mask.
+
+    ``verdicts`` is `repro.obs.monitor.FailureDetector` output; only the
+    ``worker_down`` alarms are scored.  An alarm at clock ``t`` claiming
+    ``missed`` silent clocks asserts the worker was dead somewhere in the
+    silence window ``[t - missed, t)`` — a **false alarm** is an alarm
+    whose window contains no oracle-dead clock for that worker.  A true
+    alarm's **latency** is ``t - t0`` clocks past the outage start; an
+    outage is **detected in budget** when some alarm lands within
+    ``budget_clocks`` of its start (the claim `benchmarks.detect_bench`
+    gates on is ``budget <= s + agg_clocks``).  Outages too short or too
+    late to be detectable at all (shorter than the detector could ever
+    see: over before ``timeout_clocks`` silent clocks accrue, or open at
+    the horizon with fewer than ``budget_clocks`` remaining) still count
+    — scenario grids should seed detectable outages.
+    """
+    live = np.asarray(live, bool)
+    T = live.shape[0]
+    alarms = [v for v in verdicts if v.get("kind") == "worker_down"]
+    windows = outage_windows(live)
+    false_alarms, latencies = [], {}
+    for v in alarms:
+        w, t = v["worker"], v["t"]
+        silence0 = t - v.get("missed", 1)
+        hit = None
+        for (ow, t0, t1) in windows:
+            if ow == w and t0 < t and silence0 < t1:
+                hit = (ow, t0, t1)
+                break
+        if hit is None:
+            false_alarms.append(v)
+        else:
+            lat = t - hit[1]
+            prev = latencies.get(hit)
+            latencies[hit] = lat if prev is None else min(prev, lat)
+    missed = [wd for wd in windows if wd not in latencies]
+    in_budget = [wd for wd, lat in latencies.items()
+                 if lat <= budget_clocks]
+    return {
+        "n_outages": len(windows),
+        "n_alarms": len(alarms),
+        "n_false_alarms": len(false_alarms),
+        "false_alarms": false_alarms,
+        "n_detected": len(latencies),
+        "n_missed": len(missed),
+        "missed": missed,
+        "n_in_budget": len(in_budget),
+        "budget_clocks": budget_clocks,
+        "latencies": {f"w{w}@{t0}": lat
+                      for (w, t0, _t1), lat in sorted(latencies.items())},
+        "max_latency": (max(latencies.values()) if latencies else None),
+        "all_detected_in_budget": (len(in_budget) == len(windows)
+                                   and not false_alarms),
+        "horizon": T,
+    }
+
+
 def pod_of(P: int, n_pods: int) -> jax.Array:
     """Pod id of each worker: ``n_pods`` contiguous equal blocks ([P] i32).
 

@@ -22,11 +22,32 @@ Stream layout (one JSON object per line, ``write_jsonl``/``read_jsonl``):
 - ``run_end`` — totals (wall/comp/comm/wire seconds, clocks).
 
 ``validate_events`` checks the stream against ``SCHEMA``: known types,
-required fields present with the right shapes, version match, header /
-terminator placement, and non-decreasing clock order — the CI obs lane
-runs it on a fresh churned pods run every push.  Bump ``SCHEMA_VERSION``
-on any field change; consumers (the ROADMAP's controller/failure-detector
-items) key on it.
+required fields present with the right shapes, version compatibility,
+header / terminator placement, and non-decreasing clock order — the CI
+obs lane runs it on a fresh churned pods run every push.
+
+Versioning & forward compatibility
+----------------------------------
+The schema version is **major.minor** (``SCHEMA_VERSION`` /
+``SCHEMA_MINOR``, stamped on ``run_start`` as ``v`` / ``vm``) so
+producers and consumers can evolve independently:
+
+- a **major** bump breaks consumers: the validator rejects any stream
+  whose ``v`` differs from its own (pinned by ``tests/test_obs.py``);
+- a **minor** bump is additive only — new *optional* fields on existing
+  events (``SCHEMA_OPTIONAL``) or new event types.  The validator
+  accepts unknown keys on any event unconditionally (they are optional
+  fields from a newer producer), type-checks the optional fields it
+  *does* know, and tolerates unknown event **types** only when the
+  stream's minor version is newer than its own — a same-or-older stream
+  using a type we don't know is corrupt, not future.
+
+Minor history: ``1.0`` the PR 8 substrate; ``1.1`` adds per-clock
+read-lag stats (``clock.lag_p99`` / ``clock.lag_max``), the declared
+staleness contract on the header (``run_start.bound``), and the
+``slo_violation`` event `repro.obs.monitor` folds back into the stream.
+Consumers (`repro.obs.monitor`, the ROADMAP's adaptive controller) key
+on the pair via :func:`check_version`.
 """
 from __future__ import annotations
 
@@ -36,7 +57,8 @@ import numpy as np
 
 from .metrics import MetricsRegistry
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 1          # major: compatibility-breaking changes
+SCHEMA_MINOR = 1            # minor: additive fields / event types
 
 # required fields per event type (beyond "type"); values document the
 # expected JSON type and are checked by validate_events.
@@ -55,13 +77,61 @@ SCHEMA = {
                    "max_lag": int},
     "churn": {"t": int, "worker": int, "ts": float, "event": str},
     "metrics": {"ts": float, "registry": dict},
+    "slo_violation": {"t": int, "ts": float, "slo": str, "window": int,
+                      "value": float, "limit": float},
     "run_end": {"ts": float, "wall_s": float, "comp_s": float,
                 "comm_s": float, "wire_s": float, "clocks": int},
+}
+
+# optional fields per event type (type-checked when present, never
+# required): the minor-version extension surface.  Anything *not* listed
+# here is still accepted — a newer minor may carry fields this build has
+# never heard of — but what we do know about must have the right type.
+SCHEMA_OPTIONAL = {
+    "run_start": {"vm": int, "bound": int},
+    "clock": {"lag_p99": float, "lag_max": int},
 }
 
 
 class SchemaError(ValueError):
     """An event stream violating the versioned schema."""
+
+
+def declared_bound(cfg) -> int | None:
+    """The run's declared worst-case read lag in clocks, or ``None`` for
+    families without a clock bound (async; VAP is value-bounded).
+
+    The two-tier contract of `core.delays.staleness_bound_matrix`:
+    ``s`` intra-pod, widened to ``s + s_xpod + agg_clocks - 1`` on
+    cross-pod channels.  Stamped on ``run_start`` so stream consumers
+    (the SLO monitor) check the contract the producer actually declared
+    rather than re-deriving it from a config they don't have.
+    """
+    if cfg.model not in ("bsp", "ssp", "essp"):
+        return None
+    bound = int(np.asarray(cfg.staleness))
+    if int(cfg.n_pods) > 1:
+        bound += int(np.asarray(cfg.s_xpod))
+        if cfg.comm_active:
+            bound += int(np.asarray(cfg.agg_clocks)) - 1
+    return bound
+
+
+def clock_lag_stats(staleness_t, live_t) -> tuple[float, int] | None:
+    """One clock's live-reader read-lag stats ``(lag_p99, lag_max)``.
+
+    ``staleness_t`` is the clock's ``[P, P]`` staleness rows, ``live_t``
+    its ``[P]`` liveness mask; dead readers perform no read and are
+    excluded.  Shared by the producer (``collect_events``) and the
+    consumer-side ground truth (`benchmarks.detect_bench`), so "SLO
+    verdicts agree with the Trace" is a real pipeline check, not two
+    codepaths that happen to match.  ``None`` when no reader is live.
+    """
+    lag = -1 - np.asarray(staleness_t)
+    rows = lag[np.asarray(live_t, bool)]
+    if rows.size == 0:
+        return None
+    return _r(np.percentile(rows, 99)), int(rows.max())
 
 
 def _r(x) -> float:
@@ -92,12 +162,16 @@ def collect_events(trace, cfg, tm, model: str | None = None, fold=(),
     T, P, _ = staleness.shape
     tiered = cfg.n_pods > 1
 
-    ev: list[dict] = [{
-        "type": "run_start", "v": SCHEMA_VERSION, "run": run,
-        "model": model, "family": str(cfg.family),
+    head = {
+        "type": "run_start", "v": SCHEMA_VERSION, "vm": SCHEMA_MINOR,
+        "run": run, "model": model, "family": str(cfg.family),
         "n_workers": P, "n_pods": int(cfg.n_pods), "n_clocks": T,
         "ts": 0.0,
-    }]
+    }
+    bound = declared_bound(cfg)
+    if bound is not None:
+        head["bound"] = bound
+    ev: list[dict] = [head]
     prev_live = np.ones((P,), bool)
     for t in range(T):
         ts, dur = _r(tl["start"][t]), _r(tl["wall"][t])
@@ -105,12 +179,16 @@ def collect_events(trace, cfg, tm, model: str | None = None, fold=(),
             ev.append({"type": "churn", "t": t, "worker": int(p), "ts": ts,
                        "event": "up" if live[t, p] else "down"})
         prev_live = live[t]
-        ev.append({
+        clock = {
             "type": "clock", "t": t, "ts": ts, "dur": dur,
             "loss_ref": float(loss_ref[t]),
             "forced": int(forced[t].sum()), "delivered": int(delivered[t].sum()),
             "live": int(live[t].sum()), "ship_floats": float(ship[t].sum()),
-        })
+        }
+        stats = clock_lag_stats(staleness[t], live[t])
+        if stats is not None:
+            clock["lag_p99"], clock["lag_max"] = stats
+        ev.append(clock)
         for p in range(P):
             if not live[t, p]:
                 continue
@@ -150,16 +228,45 @@ def collect_events(trace, cfg, tm, model: str | None = None, fold=(),
     return ev
 
 
-def validate_events(events: list[dict]) -> None:
-    """Raise `SchemaError` unless ``events`` is a valid version-1 stream."""
+def check_version(events: list[dict]) -> tuple[int, int]:
+    """The stream's ``(major, minor)``; `SchemaError` on major mismatch.
+
+    Consumers (`repro.obs.monitor`, `repro.obs.diff`) call this before
+    reading anything else: same major means every event type and field
+    they know keeps its meaning; a newer minor only ever *adds*.
+    """
     if not events:
         raise SchemaError("empty event stream")
     if events[0].get("type") != "run_start":
         raise SchemaError(f"stream must open with run_start, got "
                           f"{events[0].get('type')!r}")
-    if events[0].get("v") != SCHEMA_VERSION:
-        raise SchemaError(f"schema version {events[0].get('v')!r} != "
-                          f"{SCHEMA_VERSION}")
+    v = events[0].get("v")
+    if v != SCHEMA_VERSION:
+        raise SchemaError(f"major schema version {v!r} != {SCHEMA_VERSION} "
+                          f"— incompatible stream")
+    return v, events[0].get("vm", 0)
+
+
+def _check_fields(e: dict, spec: dict, optional: dict, i: int,
+                  etype: str) -> None:
+    for field in spec:
+        if field not in e:
+            raise SchemaError(f"event {i} ({etype}): missing {field!r}")
+    for field, ftype in [*spec.items(), *optional.items()]:
+        if field not in e:
+            continue                      # optional and absent
+        v = e[field]
+        ok = (isinstance(v, (int, float)) and not isinstance(v, bool)
+              if ftype is float else isinstance(v, ftype))
+        if not ok:
+            raise SchemaError(f"event {i} ({etype}): {field}="
+                              f"{v!r} is not {ftype.__name__}")
+
+
+def validate_events(events: list[dict]) -> None:
+    """Raise `SchemaError` unless ``events`` is a valid major-version-1
+    stream (any minor — see the module's forward-compatibility policy)."""
+    _, minor = check_version(events)
     if events[-1].get("type") != "run_end":
         raise SchemaError(f"stream must close with run_end, got "
                           f"{events[-1].get('type')!r}")
@@ -169,16 +276,12 @@ def validate_events(events: list[dict]) -> None:
         etype = e.get("type")
         spec = SCHEMA.get(etype)
         if spec is None:
-            raise SchemaError(f"event {i}: unknown type {etype!r}")
-        for field, ftype in spec.items():
-            if field not in e:
-                raise SchemaError(f"event {i} ({etype}): missing {field!r}")
-            v = e[field]
-            ok = (isinstance(v, (int, float)) and not isinstance(v, bool)
-                  if ftype is float else isinstance(v, ftype))
-            if not ok:
-                raise SchemaError(f"event {i} ({etype}): {field}="
-                                  f"{v!r} is not {ftype.__name__}")
+            if minor > SCHEMA_MINOR:
+                continue    # a newer producer's additive event type
+            raise SchemaError(f"event {i}: unknown type {etype!r} in a "
+                              f"v{SCHEMA_VERSION}.{minor} stream (ours is "
+                              f".{SCHEMA_MINOR})")
+        _check_fields(e, spec, SCHEMA_OPTIONAL.get(etype, {}), i, etype)
         if "ts" in e and e["ts"] < 0:
             raise SchemaError(f"event {i} ({etype}): negative ts")
         if "t" in e:

@@ -117,6 +117,48 @@ def render_report(title: str, summaries: list[dict],
     return "\n".join(parts)
 
 
+def attribution_table(diff: dict) -> str:
+    """One `repro.obs.diff` result -> markdown attribution section.
+
+    Stream diffs render the component share table plus the exact wall
+    split; BENCH diffs render the ranked component/driver table.  Either
+    way the table answers "which subsystem moved" — `benchmarks.compare`
+    prints the same content as plain lines (`repro.obs.diff.explain`).
+    """
+    if diff["kind"] == "streams":
+        head = [f"## Attribution: {diff['base_run']} -> "
+                f"{diff['cur_run']}", ""]
+        d = diff["target_delta"]
+        if d is not None:
+            head += [f"> {diff['target']}: {fmt(diff['target_base'])} -> "
+                     f"{fmt(diff['target_cur'])} ({d:+g})", ""]
+        comp_tbl = md_table(
+            ["component", "indicator", "base", "cur", "share"],
+            [[name, c["indicator"], c["base"], c["cur"],
+              f"{c['share']:.0%}"]
+             for name in diff["ranked"]
+             for c in [diff["components"][name]]])
+        wall_tbl = md_table(
+            ["seconds", "base", "cur", "delta"],
+            [[k, w["base"], w["cur"], w["delta"]]
+             for k, w in diff["wall"].items()])
+        return "\n".join([*head, comp_tbl, "", "### Wall split (exact)",
+                          "", wall_tbl])
+    rows = []
+    for name, comp in diff["flipped_claims"]:
+        rows.append([comp, f"claim {name}", "True", "False", "flipped"])
+    for name in diff["ranked"]:
+        c = diff["components"][name]
+        if c["driver"] is not None:
+            rows.append([name, c["driver"], None, None,
+                         f"{c['driver_rel']:+.1%}"])
+    return "\n".join([
+        f"## Attribution: BENCH_{diff.get('bench')}", "",
+        md_table(["component", "driver", "base", "cur", "moved"],
+                 rows or [["—", "no attributable movement", None, None,
+                           "—"]])])
+
+
 def churn_cell(row: dict) -> str:
     """One grid cell: ``clocks (+lost)``, ∞ for never-recovered, ``DIV``
     appended on divergence."""

@@ -1,0 +1,454 @@
+"""The streaming health layer (`repro.obs.monitor` / `repro.obs.diff`):
+the contracts this PR pins.
+
+- **Detector soundness**: neutral (no-churn) streams raise ZERO alarms
+  at *any* timeout setting (hypothesis-swept) — in the lockstep model a
+  live worker spans every clock, so healthy ``missed`` is identically 0.
+- **Detector completeness**: seeded outages are detected within the
+  claimed clock budget (``timeout_clocks``, inside ``s + agg_clocks``),
+  workers/pods recover with ``worker_up``/``pod_up``, and the oracle
+  scorer (`core.delays.score_detections`) grades it all with zero false
+  alarms.
+- **SLO agreement**: staleness verdicts match a Trace-derived ground
+  truth recomputation window for window; throughput/wire monitors fire
+  at exactly the configured thresholds; ``slo_violation`` events splice
+  back into a stream that still validates and round-trips through JSONL.
+- **Attribution**: `diff` profiles rank the component that actually
+  changed; the wall-second split is exact; BENCH diffs pin flipped
+  claims to their component.
+- **Exporter/CLI**: byte-pinned OpenMetrics golden
+  (``REPRO_REGEN_GOLDEN=1`` re-pins), and every ``python -m repro.obs``
+  subcommand exercised in-process, including the false-alarm exit gate
+  the CI obs lane relies on.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import essp, simulate
+from repro.core.consistency import podded
+from repro.core.delays import (make_churn, outage_windows,
+                               score_detections)
+from repro.core.timemodel import TimeModel
+from repro.obs import MetricsRegistry, ObsSpec, drain_device, promtext
+from repro.obs import events as obs_events
+from repro.obs import report as obs_report
+from repro.obs.__main__ import main as obs_cli
+from repro.obs.diff import diff_bench, diff_streams, explain, run_profile
+from repro.obs.monitor import (DetectorParams, SLOParams,
+                               live_from_events, monitor_stream,
+                               stream_summary)
+
+from test_obs import make_quad
+
+HERE = os.path.dirname(__file__)
+PROM_GOLDEN = os.path.join(HERE, "golden", "promtext_small.txt")
+
+T, P = 12, 4
+# pod 1 = workers {2, 3}; both dead on [5, 9) -> pod_down, then pod_up
+OUTAGES = ((2, 3, 9), (3, 5, 9))
+BUDGET = 2          # s + agg_clocks for podded essp(1), dense (agg = 1)
+
+
+def _stream(schedule=None, with_registry=False, run="mon"):
+    app = make_quad(P, noisy=False)
+    cfg = podded(essp(1), 2, s_xpod=1)
+    tr = simulate(app, cfg, T, seed=0, schedule=schedule, obs=ObsSpec())
+    tm = TimeModel(straggler_sigma=0.0)
+    registry = None
+    if with_registry:
+        registry = MetricsRegistry()
+        drain_device(registry, tr.obs)
+    return obs_events.collect_events(tr, cfg, tm, schedule=schedule,
+                                     run=run, registry=registry), tr, cfg
+
+
+@pytest.fixture(scope="module")
+def neutral():
+    return _stream(with_registry=True, run="neutral")
+
+
+@pytest.fixture(scope="module")
+def churned():
+    sched = make_churn(T, P, worker_outages=OUTAGES)
+    ev, tr, cfg = _stream(schedule=sched, run="churned")
+    return ev, tr, cfg, sched
+
+
+# ------------------------------------------------------------ detector
+
+
+@settings(max_examples=20, deadline=None)
+@given(timeout=st.integers(min_value=1, max_value=8),
+       window=st.integers(min_value=1, max_value=16))
+def test_neutral_stream_zero_alarms_any_timeout(neutral, timeout,
+                                                window):
+    """The soundness property: a healthy fleet spans every clock, so no
+    timeout setting — however aggressive — may raise an alarm."""
+    ev, _, _ = neutral
+    res = monitor_stream(ev, DetectorParams(timeout_clocks=timeout),
+                         SLOParams(window=window))
+    assert res.health["n_worker_down"] == 0
+    assert res.health["n_pod_down"] == 0
+    assert res.health["suspected_at_end"] == []
+
+
+def test_seeded_outages_detected_in_budget(churned):
+    ev, _, _, sched = churned
+    res = monitor_stream(ev, DetectorParams(timeout_clocks=2))
+    downs = [v for v in res.verdicts if v["kind"] == "worker_down"]
+    ups = [v for v in res.verdicts if v["kind"] == "worker_up"]
+    assert {v["worker"] for v in downs} == {2, 3}
+    assert {v["worker"] for v in ups} == {2, 3}
+    # latency: outage at t0 is alarmed at the clock where missed hits 2
+    for w, t0, _t1 in OUTAGES:
+        alarm = next(v for v in downs if v["worker"] == w)
+        assert alarm["t"] - t0 == 2 <= BUDGET
+
+    score = score_detections(np.asarray(sched.live), res.verdicts,
+                             BUDGET)
+    assert score["n_outages"] == 2
+    assert score["n_false_alarms"] == 0
+    assert score["n_missed"] == 0
+    assert score["max_latency"] == 2
+    assert score["all_detected_in_budget"]
+
+
+def test_pod_verdicts(churned):
+    ev, _, _, _ = churned
+    res = monitor_stream(ev, DetectorParams(timeout_clocks=2))
+    kinds = [(v["kind"], v.get("pod")) for v in res.verdicts
+             if "pod" in v]
+    assert ("pod_down", 1) in kinds
+    assert ("pod_up", 1) in kinds
+    assert res.health["suspected_at_end"] == []
+
+
+def test_outage_windows_and_false_alarm_scoring():
+    live = np.ones((20, 4), bool)
+    live[5:12, 2] = False
+    live[16:, 0] = False                        # open at the horizon
+    assert outage_windows(live) == [(0, 16, 20), (2, 5, 12)]
+
+    verdicts = [
+        {"kind": "worker_down", "worker": 2, "t": 7, "missed": 2},
+        {"kind": "worker_down", "worker": 0, "t": 18, "missed": 2},
+        # worker 1 never dies: the silence window holds no dead clock
+        {"kind": "worker_down", "worker": 1, "t": 9, "missed": 2},
+    ]
+    score = score_detections(live, verdicts, budget_clocks=2)
+    assert score["n_false_alarms"] == 1
+    assert score["false_alarms"][0]["worker"] == 1
+    assert score["n_detected"] == 2 and score["n_missed"] == 0
+    assert not score["all_detected_in_budget"]  # the false alarm spoils it
+    clean = score_detections(live, verdicts[:2], budget_clocks=2)
+    assert clean["all_detected_in_budget"]
+    assert clean["latencies"] == {"w0@16": 2, "w2@5": 2}
+
+
+def test_detector_rejects_headless_stream(churned):
+    ev, _, _, _ = churned
+    with pytest.raises(ValueError, match="run_start"):
+        monitor_stream(ev[1:])
+
+
+def test_live_from_events(churned):
+    ev, _, _, sched = churned
+    live = live_from_events(ev)
+    assert np.array_equal(np.asarray(live), np.asarray(sched.live))
+
+
+# ----------------------------------------------------------------- SLO
+
+
+def _gt_windows(trace, bound, window):
+    """Trace-side ground truth (mirrors benchmarks.detect_bench)."""
+    staleness = np.asarray(trace.staleness)
+    live = np.asarray(trace.live)
+    p99 = []
+    for t in range(staleness.shape[0]):
+        stats = obs_events.clock_lag_stats(staleness[t], live[t])
+        p99.append(None if stats is None else stats[0])
+    out = []
+    for w0 in range(0, len(p99), window):
+        chunk = [v for v in p99[w0:w0 + window] if v is not None]
+        if chunk and max(chunk) > bound:
+            out.append(min(w0 + window, len(p99)) - 1)
+    return out
+
+
+@pytest.mark.parametrize("bound", [None, 0])
+def test_slo_staleness_matches_trace_ground_truth(churned, bound):
+    """Verdicts under the declared contract AND under a deliberately
+    tight bound both agree, window for window, with the Trace."""
+    ev, tr, cfg, _ = churned
+    window = 4
+    res = monitor_stream(ev, slo=SLOParams(window=window,
+                                           staleness_bound=bound))
+    got = [v["t"] for v in res.violations if v["slo"] == "staleness"]
+    eff = obs_events.declared_bound(cfg) if bound is None else bound
+    assert got == _gt_windows(tr, eff, window)
+    if bound == 0:
+        assert got, "tight bound must fire (non-vacuous agreement)"
+
+
+def test_slo_throughput_and_wire_thresholds():
+    """Synthetic stream with exact numbers: both monitors trip at their
+    configured limits, with window-closing clocks and rounded values."""
+    head = {"type": "run_start", "v": 1, "vm": 1, "run": "slo",
+            "model": "essp", "family": "f", "n_workers": 2, "n_pods": 1,
+            "n_clocks": 4, "ts": 0.0}
+    clocks = [{"type": "clock", "t": t, "ts": float(t), "dur": 1.0,
+               "loss_ref": 1.0, "forced": 0, "delivered": 0, "live": 2,
+               "ship_floats": 100.0 * (t + 1)} for t in range(4)]
+    end = {"type": "run_end", "ts": 4.0, "wall_s": 4.0, "comp_s": 2.0,
+           "comm_s": 2.0, "wire_s": 0.0, "clocks": 4}
+    ev = [head, *clocks, end]
+    obs_events.validate_events(ev)
+
+    res = monitor_stream(ev, slo=SLOParams(
+        window=2, min_clocks_per_s=2.0, max_floats_per_clock=250.0))
+    by_slo = {}
+    for v in res.violations:
+        by_slo.setdefault(v["slo"], []).append(v)
+    # throughput: both windows run at 1 clock/s < 2
+    assert [v["t"] for v in by_slo["throughput"]] == [1, 3]
+    assert by_slo["throughput"][0]["value"] == 1.0
+    assert by_slo["throughput"][0]["limit"] == 2.0
+    # wire: only the second window (mean 350 floats/clock) exceeds 250
+    assert [v["t"] for v in by_slo["wire"]] == [3]
+    assert by_slo["wire"][0]["value"] == 350.0
+    assert by_slo["wire"][0]["window"] == 2
+
+
+def test_slo_violation_splice_and_roundtrip(churned, tmp_path):
+    ev, _, _, _ = churned
+    res = monitor_stream(ev, slo=SLOParams(window=4, staleness_bound=0))
+    assert res.violations
+    obs_events.validate_events(res.events)      # spliced stream is valid
+    spliced = [e for e in res.events if e["type"] == "slo_violation"]
+    assert spliced == res.violations
+    # each violation sits directly after its window-closing clock event
+    for v in res.violations:
+        i = res.events.index(v)
+        prior = [e for e in res.events[:i] if e["type"] == "clock"]
+        assert prior[-1]["t"] == v["t"]
+    path = tmp_path / "spliced.jsonl"
+    obs_events.write_jsonl(res.events, path)
+    assert obs_events.read_jsonl(path) == res.events
+
+
+def test_stream_summary_agrees_with_stream(neutral):
+    ev, tr, _ = neutral
+    s = stream_summary(ev)
+    assert s["clocks"] == T
+    assert s["loss_final"] == pytest.approx(
+        float(np.asarray(tr.loss_ref)[-1]))
+    assert s["dead_worker_clocks"] == 0
+    assert s["forced_intra"] is not None        # registry rode along
+    assert s["wall_s"] == pytest.approx(s["comp_s"] + s["comm_s"])
+
+
+# --------------------------------------------------------- attribution
+
+
+def test_diff_streams_ranks_churn(neutral, churned):
+    ev0, _, _ = neutral
+    ev1, _, _, _ = churned
+    d = diff_streams(ev0, ev1)
+    assert d["target"] == "wall_s"
+    churn = d["components"]["churn"]
+    assert churn["indicator"] == "dead_frac"
+    assert churn["base"] == 0.0 and churn["cur"] > 0
+    assert churn["share"] > 0
+    # the wall split is exact: delta wall == delta comp + delta comm
+    w = d["wall"]
+    assert w["wall_s"]["delta"] == pytest.approx(
+        w["comp_s"]["delta"] + w["comm_s"]["delta"], abs=1e-6)
+    shares = [c["share"] for c in d["components"].values()]
+    assert sum(shares) == pytest.approx(1.0)
+    assert explain(d)
+
+
+def test_run_profile_clocks_to_loss(neutral):
+    ev, tr, _ = neutral
+    loss = np.asarray(tr.loss_ref)
+    thresh = float(loss[T // 2])
+    prof = run_profile(ev, loss_thresh=thresh)
+    assert prof["clocks_to_loss"] == int(np.argmax(loss <= thresh)) + 1
+    assert run_profile(ev)["clocks_to_loss"] is None
+
+
+def test_diff_bench_flipped_claim_pins_component():
+    base = {"bench": "detect",
+            "metrics": {"eager/pod_outage/detect_latency_clocks": 2,
+                        "eager/worker_churn/max_healthy_phi": 0.2},
+            "claim": {"zero_false_alarms_neutral": True}}
+    cur = {"bench": "detect",
+           "metrics": {"eager/pod_outage/detect_latency_clocks": 5,
+                       "eager/worker_churn/max_healthy_phi": 0.2},
+           "claim": {"zero_false_alarms_neutral": False}}
+    d = diff_bench(base, cur)
+    assert d["flipped_claims"] == [("zero_false_alarms_neutral",
+                                    "churn")]
+    assert d["ranked"][0] == "churn"
+    lines = explain(d)
+    assert any("flipped" in line for line in lines)
+    md = obs_report.attribution_table(d)
+    assert "| churn |" in md and "flipped" in md
+
+
+def test_attribution_table_streams(neutral, churned):
+    ev0, _, _ = neutral
+    ev1, _, _, _ = churned
+    md = obs_report.attribution_table(diff_streams(ev0, ev1))
+    assert "## Attribution: neutral -> churned" in md
+    assert "### Wall split (exact)" in md
+    assert "| churn | dead_frac |" in md
+
+
+# ------------------------------------------------------ promtext / CLI
+
+
+def _prom_registry() -> MetricsRegistry:
+    reg = MetricsRegistry()
+    reg.counter_add("ps/forced_intra", 3)
+    reg.counter_add("ps/ship_floats_total", 2.5)
+    reg.gauge_set("ps/clocks", 6)
+    reg.hist_add("ps/staleness_lag", [4, 2, 0, 1])
+    return reg
+
+
+def test_promtext_golden():
+    """Byte-pinned OpenMetrics export.  Regenerate intentionally with
+    ``REPRO_REGEN_GOLDEN=1 pytest tests/test_monitor.py -k golden``."""
+    got = promtext.render(_prom_registry())
+    if os.environ.get("REPRO_REGEN_GOLDEN"):
+        os.makedirs(os.path.dirname(PROM_GOLDEN), exist_ok=True)
+        with open(PROM_GOLDEN, "w") as f:
+            f.write(got)
+    with open(PROM_GOLDEN) as f:
+        want = f.read()
+    assert got == want, "OpenMetrics export drifted from the golden " \
+                        "(REPRO_REGEN_GOLDEN=1 to re-pin intentionally)"
+    # structural honesty checks on the golden itself
+    assert got.endswith("# EOF\n")
+    assert "ps_forced_intra_total 3" in got
+    # counter family name must not double the _total suffix
+    assert "ps_ship_floats_total 2.5" in got
+    assert "_total_total" not in got
+    assert 'ps_staleness_lag_bucket{le="+Inf"} 7' in got
+    assert "ps_staleness_lag_count 7" in got
+    assert "ps_staleness_lag_sum 5" in got      # 0*4 + 1*2 + 3*1
+
+
+def test_promtext_accepts_registry_snapshot():
+    reg = _prom_registry()
+    assert promtext.render(reg) == promtext.render(reg.to_dict())
+
+
+def test_promtext_from_drained_device(neutral):
+    ev, tr, _ = neutral
+    reg = MetricsRegistry()
+    drain_device(reg, tr.obs)
+    text = promtext.render(reg)
+    assert "# TYPE ps_forced_intra counter" in text
+    assert "# TYPE ps_staleness_lag histogram" in text
+    assert text.endswith("# EOF\n")
+
+
+@pytest.fixture(scope="module")
+def stream_files(neutral, churned, tmp_path_factory):
+    d = tmp_path_factory.mktemp("streams")
+    paths = {"neutral": d / "neutral.jsonl",
+             "churned": d / "churned.jsonl"}
+    obs_events.write_jsonl(neutral[0], paths["neutral"])
+    obs_events.write_jsonl(churned[0], paths["churned"])
+    return paths
+
+
+def test_cli_validate_tail_report(stream_files, capsys):
+    assert obs_cli(["validate", str(stream_files["churned"])]) == 0
+    assert "OK" in capsys.readouterr().out
+    assert obs_cli(["tail", str(stream_files["churned"]),
+                    "--type", "churn"]) == 0
+    out = capsys.readouterr().out
+    assert out.count("churn") == 4              # 2 downs + 2 ups
+    assert obs_cli(["report", str(stream_files["neutral"])]) == 0
+    assert "## Staleness" in capsys.readouterr().out
+
+
+def test_cli_validate_rejects(tmp_path, capsys):
+    bad = tmp_path / "bad.jsonl"
+    bad.write_text('{"type": "run_start", "v": 99}\n')
+    assert obs_cli(["validate", str(bad)]) == 1
+    assert "INVALID" in capsys.readouterr().err
+
+
+def test_cli_monitor_gates(stream_files, capsys):
+    # churned stream, scored against its own churn events: all detected,
+    # no false alarms -> exit 0 even with the gate on
+    assert obs_cli(["monitor", str(stream_files["churned"]), "--score",
+                    "--fail-on-false-alarm", "--budget",
+                    str(BUDGET)]) == 0
+    out = capsys.readouterr().out
+    assert '"all_detected_in_budget": true' in out
+    # neutral stream: any alarm fails, none fire -> exit 0
+    assert obs_cli(["monitor", str(stream_files["neutral"]),
+                    "--fail-on-alarm"]) == 0
+    capsys.readouterr()
+
+
+def test_cli_monitor_false_alarm_exit(stream_files, tmp_path, capsys):
+    """Strip the churn events from the churned stream: the detector's
+    (correct) verdicts become false alarms against the now-all-live
+    oracle, and the CI gate must exit nonzero."""
+    ev = obs_events.read_jsonl(stream_files["churned"])
+    stripped = [e for e in ev if e["type"] != "churn"]
+    path = tmp_path / "stripped.jsonl"
+    obs_events.write_jsonl(stripped, path)
+    assert obs_cli(["monitor", str(path), "--score",
+                    "--fail-on-false-alarm"]) == 1
+    capsys.readouterr()
+
+
+def test_cli_monitor_emits_spliced_stream(stream_files, tmp_path,
+                                          capsys):
+    out_path = tmp_path / "spliced.jsonl"
+    assert obs_cli(["monitor", str(stream_files["churned"]),
+                    "--staleness-bound", "0", "--window", "4",
+                    "--emit", str(out_path)]) == 0
+    capsys.readouterr()
+    ev = obs_events.read_jsonl(out_path)
+    assert any(e["type"] == "slo_violation" for e in ev)
+
+
+def test_cli_diff_and_prom(stream_files, capsys):
+    assert obs_cli(["diff", str(stream_files["neutral"]),
+                    str(stream_files["churned"])]) == 0
+    assert "churn" in capsys.readouterr().out
+    assert obs_cli(["prom", str(stream_files["neutral"])]) == 0
+    out = capsys.readouterr().out
+    assert out.endswith("# EOF\n")
+    assert "# TYPE ps_forced_intra counter" in out
+
+
+def test_cli_diff_bench_records(tmp_path, capsys):
+    for name, lat, claim in (("base", 2, True), ("cur", 5, False)):
+        with open(tmp_path / f"{name}.json", "w") as f:
+            json.dump({"bench": "detect",
+                       "metrics": {"pod_outage/detect_latency_clocks":
+                                   lat},
+                       "claim": {"all_outages_detected_in_budget":
+                                 claim}}, f)
+    assert obs_cli(["diff", str(tmp_path / "base.json"),
+                    str(tmp_path / "cur.json"), "--markdown"]) == 0
+    out = capsys.readouterr().out
+    assert "## Attribution: BENCH_detect" in out
+    assert "flipped" in out

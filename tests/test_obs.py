@@ -283,6 +283,62 @@ def test_validator_rejections():
             ev[:last] + [dict(ev[last], t=0)] + ev[last + 1:])  # t order
 
 
+def test_version_check():
+    """Major mismatch is rejected outright; the pair comes back for
+    consumers to key on."""
+    ev = _small_stream()
+    assert obs_events.check_version(ev) == (obs_events.SCHEMA_VERSION,
+                                            obs_events.SCHEMA_MINOR)
+    with pytest.raises(SchemaError, match="major"):
+        obs_events.check_version([dict(ev[0],
+                                       v=obs_events.SCHEMA_VERSION + 1)]
+                                 + ev[1:])
+    with pytest.raises(SchemaError, match="empty"):
+        obs_events.check_version([])
+
+
+def test_forward_compat_unknown_fields():
+    """Unknown keys on known events are a newer producer's optional
+    fields: accepted under the same major.  Known optional fields are
+    still type-checked when present."""
+    ev = _small_stream()
+    ci = next(i for i, e in enumerate(ev) if e["type"] == "clock")
+    obs_events.validate_events(
+        ev[:ci] + [dict(ev[ci], from_the_future=1.5)] + ev[ci + 1:])
+    obs_events.validate_events(
+        [dict(ev[0], adaptive_budget=3)] + ev[1:])
+    with pytest.raises(SchemaError, match="lag_p99"):
+        obs_events.validate_events(
+            ev[:ci] + [dict(ev[ci], lag_p99="high")] + ev[ci + 1:])
+
+
+def test_forward_compat_newer_minor_event_types():
+    """Unknown event *types* pass only when the stream's minor version
+    is newer than ours — same-or-older minors using one are corrupt."""
+    ev = _small_stream()
+    alien = {"type": "adaptive_hint", "t": 0, "ts": 0.0}
+    newer = [dict(ev[0], vm=obs_events.SCHEMA_MINOR + 1), alien,
+             *ev[1:]]
+    obs_events.validate_events(newer)
+    with pytest.raises(SchemaError, match="unknown type"):
+        obs_events.validate_events([ev[0], alien, *ev[1:]])
+
+
+def test_declared_bound_on_header():
+    """The minor-1 header carries the staleness contract the SLO monitor
+    checks against; unbounded families carry none."""
+    ev = _small_stream()
+    cfg = podded(essp(1), 2, s_xpod=1)
+    assert ev[0]["vm"] == obs_events.SCHEMA_MINOR
+    assert ev[0]["bound"] == obs_events.declared_bound(cfg)
+    from repro.core.consistency import ConsistencyConfig
+    assert obs_events.declared_bound(
+        ConsistencyConfig(model="async")) is None
+    clocks = [e for e in ev if e["type"] == "clock"]
+    assert all("lag_p99" in c and "lag_max" in c for c in clocks
+               if c["live"] > 0)
+
+
 def test_perfetto_golden(tmp_path):
     """Byte-pinned Perfetto export of the small deterministic stream.
     Regenerate after an intentional schema/export change with
