@@ -46,9 +46,9 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
     t0 = time.time()
     from . import (analysis_bench, autotune_bench, comm_bench,
-                   comm_comp, common, detect_bench, kernels_bench,
-                   lda_convergence, lm_consistency, mf_convergence,
-                   pods_bench, psrun_bench, robustness,
+                   comm_comp, common, detect_bench, faults_bench,
+                   kernels_bench, lda_convergence, lm_consistency,
+                   mf_convergence, pods_bench, psrun_bench, robustness,
                    staleness_profile, stragglers, sweep_bench,
                    theory_validation)
     if args.json_dir:
@@ -106,6 +106,7 @@ def main(argv=None) -> int:
     suite("kernels", lambda: kernels_bench.run())
     suite("analysis", lambda: analysis_bench.run()["claim"])
     suite("detect_quality", lambda: detect_bench.run()["claim"])
+    suite("wire_faults", lambda: faults_bench.run()["claim"])
 
     print("\n=== paper-fidelity claim summary ===")
     for k, v in claims.items():

@@ -27,7 +27,13 @@ seeds they happen to run; this module instead
        c - 1 - v  <=  bound(channel)
 
    with ``bound = s`` intra-pod, ``s + s_xpod`` cross-pod, widened by
-   ``+ agg_clocks - 1`` when the comm substrate aggregates shipments.
+   ``+ agg_clocks - 1`` when the comm substrate aggregates shipments and
+   by ``+ retry_budget`` (= two conforming flight windows,
+   `comm.wire.WireFaults.retry_budget`) on the lossy-wire channel: there
+   the adversary also schedules each shipment's arrival anywhere inside
+   the flight window (stop-and-wait — a busy producer skips boundaries),
+   and both refresh and delivery targets are capped by ``wire_tip``, the
+   highest *arrived* boundary.
 
 Channels are independent in the clock algebra (``cview`` updates are
 elementwise), so checking one reader x producer channel per channel type
@@ -110,11 +116,14 @@ class BoundModel:
     xpod_expr: ast.AST            # without the comm widening
     xpod_wired_expr: ast.AST      # with the comm widening applied
 
-    def bound(self, channel: str, s: int, s_xpod: int, agg: int) -> int:
-        env = {"staleness": s, "s_xpod": s_xpod, "agg_clocks": agg}
+    def bound(self, channel: str, s: int, s_xpod: int, agg: int,
+              retry_budget: int = 0) -> int:
+        env = {"staleness": s, "s_xpod": s_xpod, "agg_clocks": agg,
+               "retry_budget": retry_budget}
         expr = {"intra": self.intra_expr,
                 "xpod": self.xpod_expr,
-                "xpod-wired": self.xpod_wired_expr}[channel]
+                "xpod-wired": self.xpod_wired_expr,
+                "xpod-faulted": self.xpod_wired_expr}[channel]
         return _sym_eval(expr, env)
 
 
@@ -196,6 +205,8 @@ class EnforcementModel:
     refresh_lag: int          # intra/unwired refresh target = c - LAG
     xpod_refresh_shipped: bool  # wired refresh -> shipped_through(c, agg)
     delivery_shipped: bool      # wired delivery -> shipped_end(c, agg)
+    xpod_refresh_capped: bool = False  # faulted refresh min()s wire_tip
+    delivery_capped: bool = False      # faulted delivery min()s wire_tip
     delegate: str | None = None
 
 
@@ -225,6 +236,17 @@ def _calls_named(node, name: str) -> bool:
         if isinstance(n, ast.Call):
             d = dotted(n.func)
             if d and d.split(".")[-1] == name:
+                return True
+    return False
+
+
+def _caps_wire_tip(node) -> bool:
+    """True when the expression reads ``...["wire_tip"]`` — the faulted
+    target's arrived-boundary cap."""
+    for n in ast.walk(node):
+        if isinstance(n, ast.Subscript):
+            sl = n.slice
+            if isinstance(sl, ast.Constant) and sl.value == "wire_tip":
                 return True
     return False
 
@@ -260,6 +282,7 @@ def extract_enforcement_from_source(source: str,
             return EnforcementModel(
                 producer=producer, trigger_offset=1, refresh_lag=1,
                 xpod_refresh_shipped=True, delivery_shipped=True,
+                xpod_refresh_capped=True, delivery_capped=True,
                 delegate="psrun/runtime.py")
 
     trigger = None
@@ -290,6 +313,8 @@ def extract_enforcement_from_source(source: str,
     refresh_lag = None
     xpod_refresh_shipped = False
     delivery_shipped = False
+    xpod_refresh_capped = False
+    delivery_capped = False
     for node in ast.walk(tree):
         if not (isinstance(node, ast.Assign)
                 and isinstance(node.value, ast.Call)):
@@ -306,10 +331,14 @@ def extract_enforcement_from_source(source: str,
             refresh_lag = _refresh_lag(then)
         if _calls_named(node.value, "shipped_through"):
             xpod_refresh_shipped = True
+            if _caps_wire_tip(node.value):
+                xpod_refresh_capped = True   # the faulted branch's tgt
             if refresh_lag is None and _refresh_lag(then) is not None:
                 refresh_lag = _refresh_lag(then)   # the intra arm of tgt
         if _calls_named(node.value, "shipped_end"):
             delivery_shipped = True
+            if _caps_wire_tip(node.value):
+                delivery_capped = True
     if refresh_lag is None:
         raise ExtractionError(
             f"{producer}: no forced-refresh target "
@@ -323,11 +352,22 @@ def extract_enforcement_from_source(source: str,
         raise ExtractionError(
             f"{producer}: wired delivery does not route through "
             f"comm.shipped_end")
+    if not xpod_refresh_capped:
+        raise ExtractionError(
+            f"{producer}: no faulted cross-pod refresh caps the shipped "
+            f"boundary on cst[\"wire_tip\"] — a lossy-wire refresh could "
+            f"observe unarrived clocks")
+    if not delivery_capped:
+        raise ExtractionError(
+            f"{producer}: no faulted delivery caps comm.shipped_end on "
+            f"cst[\"wire_tip\"]")
     return EnforcementModel(
         producer=producer, trigger_offset=trigger,
         refresh_lag=refresh_lag,
         xpod_refresh_shipped=xpod_refresh_shipped,
-        delivery_shipped=delivery_shipped)
+        delivery_shipped=delivery_shipped,
+        xpod_refresh_capped=xpod_refresh_capped,
+        delivery_capped=delivery_capped)
 
 
 def extract_enforcement(path: str, producer: str) -> EnforcementModel:
@@ -356,15 +396,18 @@ class Counterexample:
     cview: int
     bound: int
     outage: tuple | None
+    flight: int = 0            # conforming flight window (faulted channel)
 
     def __str__(self) -> str:
         T, P, s, s_xpod, agg = self.config
         churn = (f", reader dead on [{self.outage[0]},{self.outage[1]})"
                  if self.outage else "")
+        faulted = (f", flight_budget={self.flight}"
+                   if self.channel == "xpod-faulted" else "")
         return (f"{self.producer} {self.channel} channel, "
                 f"(T={T}, P={P}, s={s}, s_xpod={s_xpod}, "
-                f"agg_clocks={agg}){churn}: read at clock {self.clock} "
-                f"observes cview={self.cview} — lag "
+                f"agg_clocks={agg}){churn}{faulted}: read at clock "
+                f"{self.clock} observes cview={self.cview} — lag "
                 f"{self.clock - 1 - self.cview} > bound {self.bound}")
 
 
@@ -412,10 +455,72 @@ def check_channel(bound_model: BoundModel, enf: EnforcementModel,
     return None
 
 
+def check_channel_faulted(bound_model: BoundModel, enf: EnforcementModel,
+                          config: tuple, flight: int,
+                          outage: tuple | None = None
+                          ) -> Counterexample | None:
+    """Exhaustive DFS of the lossy-wire cross-pod channel.
+
+    State is ``(v, tip, pend)``: the reader's visibility clock, the
+    highest *arrived* shipment boundary (``wire_tip``), and the in-flight
+    shipment as ``(boundary, arrival_clock)`` or None.  Per clock:
+    (1) enforcement fires iff ``v < c - b - trigger_offset`` and
+    refreshes to ``min(shipped_through(c, agg), tip)`` — the wire_tip
+    cap; (2) the widened contract ``c - 1 - v <= b`` (``b`` includes
+    ``retry_budget = 2 * flight``) is checked at the read; (3) a due
+    arrival acks (``tip`` advances to its boundary); an idle-at-start
+    producer ships at an aggregation boundary and the *conforming*
+    adversary schedules its arrival anywhere in ``[c, c + flight]``
+    (stop-and-wait: a busy producer skips the boundary — this is why two
+    flight windows stack); (4) the adversary picks end-of-clock delivery
+    or not, advancing ``v`` to ``min(shipped_end(c, agg), tip)``.
+    Give-up is out of scope: a given-up shipment voids any finite bound
+    (there the contract is mass conservation — `comm.wire`).
+    """
+    T, _, s, s_xpod, agg = config
+    b = bound_model.bound("xpod-faulted", s, s_xpod, agg,
+                          retry_budget=2 * flight)
+    states = {(-1, -1, None)}
+    for c in range(T):
+        dead = outage is not None and outage[0] <= c < outage[1]
+        nxt = set()
+        for v, tip, pend in states:
+            if not dead:
+                if v < c - b - enf.trigger_offset:
+                    if enf.xpod_refresh_capped:
+                        v = max(v, min(_shipped_through(c, agg), tip))
+                    else:  # uncapped mutant: sees unarrived clocks
+                        v = max(v, _shipped_through(c, agg))
+                if c - 1 - v > b:
+                    return Counterexample(
+                        producer=enf.producer, channel="xpod-faulted",
+                        config=config, clock=c, cview=v, bound=b,
+                        outage=outage, flight=flight)
+            busy0 = pend is not None           # start-of-clock idleness
+            if pend is not None and pend[1] == c:
+                tip = max(tip, pend[0])        # due arrival acks
+                pend = None
+            if not busy0 and (c + 1) % agg == 0:
+                wires = [(max(tip, c), None) if a == c else (tip, (c, a))
+                         for a in range(c, c + flight + 1)]
+            else:
+                wires = [(tip, pend)]
+            for tip2, pend2 in wires:
+                nxt.add((v, tip2, pend2))      # adversary withholds
+                if not dead:
+                    tgt = (min(_shipped_end(c, agg), tip2)
+                           if enf.delivery_capped
+                           else _shipped_end(c, agg))
+                    nxt.add((max(v, tgt), tip2, pend2))
+        states = nxt
+    return None
+
+
 def model_check(bound_model: BoundModel, enf: EnforcementModel,
                 Ts=(6, 9), Ps=((4, 1), (4, 2), (6, 3)),
                 svals=(0, 1, 2), xvals=(0, 1, 2), aggs=(1, 2, 3),
-                churn: bool = True) -> list:
+                churn: bool = True, flights=(0, 1, 2),
+                faulted_T: int = 12) -> list:
     """Exhaustively model-check the producer over the small-config grid.
 
     ``Ps`` pairs are (P, n_pods): n_pods == 1 exercises only the intra
@@ -423,6 +528,13 @@ def model_check(bound_model: BoundModel, enf: EnforcementModel,
     (the wired variant only when ``agg_clocks`` matters, i.e. always —
     agg=1 must reduce to the unwired algebra).  With ``churn`` every
     single reader-outage window [t0, t1) x each config is also explored.
+
+    The lossy-wire channel runs per ``flights`` value at ``faulted_T``
+    clocks (long enough for two stacked flight windows to bite on every
+    agg; ``flight=0`` must reduce exactly to the wired algebra) without
+    outage windows — the reader-outage interplay is already covered on
+    the other channels, and a producer-side outage voids the conforming
+    premise (churn drain gates retransmission).
     """
     ces = []
     for T, (P, n_pods), s, s_xpod, agg in itertools.product(
@@ -442,6 +554,16 @@ def model_check(bound_model: BoundModel, enf: EnforcementModel,
                 if ce is not None:
                     ces.append(ce)
                     break          # one trace per (channel, config) row
+    for (P, n_pods), s, s_xpod, agg in itertools.product(
+            Ps, svals, xvals, aggs):
+        if n_pods == 1:
+            continue
+        config = (faulted_T, P, s, s_xpod, agg)
+        for flight in flights:
+            ce = check_channel_faulted(bound_model, enf, config, flight)
+            if ce is not None:
+                ces.append(ce)
+                break              # one trace per (config, flights) row
     return ces
 
 

@@ -2,12 +2,16 @@
 
 Besides generic pytrees, this round-trips mid-run PS runtime state
 (`psrun.runtime.PSState` — params/base, update ring, per-channel cview
-clocks, worker locals, RNG key, clock counter) for both the flat
-(`repro.psrun`) and hierarchical (`repro.pods`) runtimes:
+clocks, worker locals, RNG key, clock counter, and the comm-substrate
+leaf: aggregation/residual buffers plus, under a lossy wire, the full
+ARQ state of `comm.wire` — sequence counters, unacked in-flight
+shipments, backoff deadlines, arrival/echo lanes, ``wire_tip``) for
+both the flat (`repro.psrun`) and hierarchical (`repro.pods`) runtimes:
 ``save_runtime`` / ``restore_runtime``.  Restoring and continuing with
 ``run_from`` reproduces the uninterrupted run bit for bit
-(`tests/test_pods.py` pins it), because the state carries the *entire*
-scan carry — including the PRNG key stream position.
+(`tests/test_pods.py` pins it; `tests/test_wire.py` pins a resume
+*mid-retransmit*), because the state carries the *entire* scan carry —
+including the PRNG key stream position.
 """
 from __future__ import annotations
 

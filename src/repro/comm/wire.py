@@ -1,0 +1,451 @@
+"""Lossy-wire fault injection + ack/retransmit ARQ for the comm substrate.
+
+PR 5 made the cross-pod wire *cost* real (bits -> seconds); this module
+makes its *delivery* real: shipments can be dropped, duplicated, or
+delayed per a seeded :class:`WireFaults` schedule (the wire analogue of
+`core.delays.ChurnSchedule`), and the substrate answers with a
+stop-and-wait ARQ — sequence numbers, idempotent dedup-on-fold, and
+ack-driven retransmission with exponential backoff.  Both engines
+(``core.ps.simulate`` and the ``psrun``/``pods`` runtimes) call the same
+:func:`wire_step` on the same ``[P, ·]`` state leaves, so a seeded faulted
+run is bit-identical across all three Trace producers — and a *neutral*
+schedule (:func:`no_faults`) is bit-identical to running with no schedule
+at all.
+
+Protocol (per producer, evaluated inside the per-clock scan step):
+
+- **ship**: at an aggregation boundary an *idle* producer packs its
+  delta (`substrate.pack` semantics unchanged) into a pending shipment
+  ``pend`` tagged with the next sequence number, and transmits.  A *busy*
+  producer (previous shipment unacked) skips the boundary — stop-and-wait
+  — and its accumulator simply keeps accumulating; the skipped content
+  rides the next shipment.
+- **transmit**: attempt at clock ``t`` is dropped iff ``drop[t, p]``;
+  otherwise it lands in the single in-flight lane with arrival clock
+  ``t + delay[t, p]`` (``delay == 0`` arrives the same clock — the
+  lossless wire's timing), superseding any older in-flight copy (a lossy
+  wire may reorder; the newest copy wins).  ``dup[t, p]`` tags the copy
+  so its arrival schedules a duplicate *echo* one clock later.
+- **fold (ack)**: an arrival folds into the wire ring iff its sequence
+  number matches the pending shipment and exceeds the receiver's
+  ``recv_seq`` — the idempotence guard.  Folding acks the shipment
+  (clears ``pend``) and advances ``wire_tip``, the highest producer
+  clock whose content has actually arrived; duplicate echoes fail the
+  guard and only tick ``n_duprej``.
+- **retransmit**: an unacked shipment retransmits when ``c >= retry_at``
+  with exponential backoff (``rto0 * 2^(attempts-1)``), at most
+  ``max_retries`` retries; every attempt charges the shipment's
+  bits-on-wire into ``Trace.ship_floats`` again, so retries cost real
+  seconds through `core.timemodel.TimeModel` / ``bandwidth_xpod``.
+- **give-up (self-healing)**: after the last retry's backoff expires with
+  nothing in flight — which can only mean *every* attempt was dropped —
+  the pending mass folds back into the error-feedback residual ``res``
+  and re-ships with the next delta.  ``res`` and ``pend`` come from the
+  same pack with disjoint coordinate supports, so the fold is *exact* in
+  f32: ``acc + res + pend + arrived == accumulated`` holds bitwise under
+  arbitrary fault masks (the mass-conservation invariant,
+  ``tests/test_wire.py``).  ``heal=False`` discards the mass instead —
+  the "no self-healing" contrast arm of ``benchmarks/faults_bench.py``.
+
+Staleness contract: cross-pod visibility is capped by ``wire_tip`` (a
+reader may only see what has arrived), and under *conforming* fault
+traces — every shipment acked within ``flight_budget = rto0 *
+(2^max_retries - 1) + max_delay`` clocks — the two-tier bound widens by
+:func:`retry_budget` ``= 2 * flight_budget`` (two flight windows stack:
+one holding the tip back, one holding the *next* shipment's content
+back, because stop-and-wait skips boundaries while busy).  The widened
+bound is exactly tight and model-checked by
+``analysis/staleness_check.py`` (which refutes an off-by-one widening).
+Non-conforming traces (any shipment given up) may exceed any finite
+bound — there the guarantee is mass conservation, not staleness.
+
+Ring-lifetime constraint: a pending shipment of boundary ``b`` resolves
+(ack or give-up) within :func:`max_lifetime` clocks, which must be
+``<= W - 1`` so arrivals always land before their wire-ring slot
+recycles; and the ring window must keep content visible until every
+reader's ``cview`` passes it, so faulted runs need ``W >=
+s + s_xpod + (agg_clocks - 1) + retry_budget + 2``
+(:func:`required_window`).  Both are checked at trace time
+(:func:`validate_faults`) — the static fields make them Python-level.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# retry_at sentinel for "no retry scheduled" (idle / just acked): far
+# enough that `c >= retry_at` never fires within any run.
+_NEVER = np.int32(2**30)
+
+
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class WireFaults:
+    """Per-clock, per-producer wire faults, indexed by absolute clock.
+
+    ``drop[t, p]`` drops any transmission producer ``p`` makes at clock
+    ``t``; ``dup[t, p]`` duplicates it (the copy echoes one clock after
+    arrival and is deduped on fold); ``delay[t, p]`` clocks of delivery
+    delay (0 = the lossless wire's same-clock arrival).  Clocks past the
+    schedule's horizon clamp to the last row (like `ChurnSchedule`).
+    The mask arrays are traced jit arguments — same-shape schedules share
+    one compiled program; the ARQ knobs (``rto0``, ``max_retries``,
+    ``max_delay``, ``heal``) are static: they shape the staleness
+    contract and the give-up condition.
+    """
+
+    drop: jax.Array                 # [T, P] bool: transmission dropped
+    dup: jax.Array                  # [T, P] bool: transmission duplicated
+    delay: jax.Array                # [T, P] i32 delivery delay in clocks
+    rto0: int = field(default=1, metadata=dict(static=True))
+    max_retries: int = field(default=0, metadata=dict(static=True))
+    max_delay: int = field(default=0, metadata=dict(static=True))
+    heal: bool = field(default=True, metadata=dict(static=True))
+
+    @property
+    def n_clocks(self) -> int:
+        return self.drop.shape[0]
+
+    @property
+    def n_workers(self) -> int:
+        return self.drop.shape[1]
+
+    @property
+    def flight_budget(self) -> int:
+        """Max clocks a *conforming* shipment stays unacked: last retry at
+        ``rto0 * (2^max_retries - 1)`` past the ship clock, plus its
+        delivery delay."""
+        return self.rto0 * (2 ** self.max_retries - 1) + self.max_delay
+
+    @property
+    def retry_budget(self) -> int:
+        """Clocks the cross-pod staleness bound widens by (see module
+        doc): two conforming flight windows stack under stop-and-wait.
+        0 for a neutral schedule — the widened bound collapses to the
+        lossless one, which is what keeps :func:`no_faults` bit-identical
+        to no schedule at all."""
+        return 2 * self.flight_budget
+
+    @property
+    def max_lifetime(self) -> int:
+        """Max clocks from ship to resolution (ack *or* give-up): give-up
+        waits out the full backoff ladder ``rto0 * (2^(max_retries+1) -
+        1)``; a conforming ack lands within ``flight_budget``."""
+        return max(self.rto0 * (2 ** (self.max_retries + 1) - 1),
+                   self.flight_budget)
+
+
+def no_faults(n_clocks: int, P: int) -> WireFaults:
+    """The neutral schedule: nothing drops, duplicates, or delays, and a
+    zero retry budget.  Running with it is bit-identical to running with
+    no ``faults`` at all (pinned by ``tests/test_wire.py``)."""
+    z = jnp.zeros((n_clocks, P), bool)
+    return WireFaults(drop=z, dup=z, delay=jnp.zeros((n_clocks, P),
+                                                     jnp.int32))
+
+
+def make_faults(n_clocks: int, P: int, *, seed: int = 0,
+                drop_rate: float = 0.0, dup_rate: float = 0.0,
+                delay_rate: float = 0.0, max_delay: int = 0,
+                bursts=(), rto0: int = 1, max_retries: int = 3,
+                heal: bool = True) -> WireFaults:
+    """Build a seeded `WireFaults` from scenario primitives.
+
+    - ``drop_rate`` / ``dup_rate``: i.i.d. per-(clock, producer) fault
+      probabilities;
+    - ``delay_rate`` + ``max_delay``: with probability ``delay_rate`` a
+      transmission is delayed uniformly in ``[1, max_delay]`` clocks
+      (``max_delay`` also bounds the conforming-arrival contract);
+    - ``bursts``: ``(t0, t1, rate)`` burst-loss regimes — the drop
+      probability is overridden by ``rate`` on clocks ``[t0, t1)``
+      (correlated loss, the regime the residual + retransmit must ride
+      out);
+    - ``rto0`` / ``max_retries``: the backoff ladder (first retry after
+      ``rto0`` clocks, doubling);
+    - ``heal=False`` disables give-up-to-residual (dropped-beyond-retry
+      mass is *discarded*) — the contrast arm proving the residual is
+      what makes unretransmitted drops self-healing.
+    """
+    rng = np.random.default_rng(seed)
+    p_drop = np.full((n_clocks, P), float(drop_rate))
+    for t0, t1, rate in bursts:
+        p_drop[t0:t1, :] = float(rate)
+    drop = rng.random((n_clocks, P)) < p_drop
+    dup = rng.random((n_clocks, P)) < float(dup_rate)
+    delay = np.zeros((n_clocks, P), np.int32)
+    if max_delay > 0 and delay_rate > 0.0:
+        delayed = rng.random((n_clocks, P)) < float(delay_rate)
+        delay = np.where(delayed,
+                         rng.integers(1, max_delay + 1, (n_clocks, P)),
+                         0).astype(np.int32)
+    return WireFaults(drop=jnp.asarray(drop), dup=jnp.asarray(dup),
+                      delay=jnp.asarray(delay), rto0=int(rto0),
+                      max_retries=int(max_retries),
+                      max_delay=int(max_delay), heal=bool(heal))
+
+
+def faults_key(faults: WireFaults | None):
+    """The fault *structure* a compiled program is specialized on (the
+    `_churn_key` analogue): presence plus the static ARQ knobs.  Mask
+    values stay jit-traced."""
+    if faults is None:
+        return None
+    return (faults.rto0, faults.max_retries, faults.max_delay, faults.heal)
+
+
+def required_window(cfg, faults: WireFaults) -> int:
+    """Minimum ring window for a faulted run: the lossless requirement
+    ``s + s_xpod + (agg_clocks - 1) + 2`` plus the retry budget (content
+    must stay visible in the ring until every conforming reader's bound
+    catches up), and at least ``max_lifetime + 1`` (arrivals must land
+    before their slot recycles)."""
+    base = (int(cfg.staleness) + int(cfg.s_xpod) + (int(cfg.agg_clocks) - 1)
+            + faults.retry_budget + 2)
+    return max(base, faults.max_lifetime + 1)
+
+
+def validate_faults(faults: WireFaults, cfg, P: int, W: int):
+    """Raise unless ``faults`` is well-formed for this (cfg, P, W).
+
+    Faults ride the comm substrate's shipment machinery, so they require
+    ``cfg.comm_active``; the static checks (window, lifetime) run at
+    trace time because the ARQ knobs are static fields.
+    """
+    if not cfg.comm_active:
+        raise ValueError(
+            "WireFaults model the compressed cross-pod wire; they require "
+            "cfg.comm_active (ssp/essp/async with n_pods >= 2 — see "
+            "consistency.compressed)")
+    if faults.drop.shape != faults.dup.shape or \
+            faults.drop.shape != faults.delay.shape:
+        raise ValueError(
+            f"fault masks disagree: drop {faults.drop.shape}, dup "
+            f"{faults.dup.shape}, delay {faults.delay.shape}")
+    if faults.n_workers != P:
+        raise ValueError(f"faults cover {faults.n_workers} producers, "
+                         f"app has {P}")
+    if faults.rto0 < 1 or faults.max_retries < 0 or faults.max_delay < 0:
+        raise ValueError(
+            f"need rto0 >= 1, max_retries >= 0, max_delay >= 0; got "
+            f"({faults.rto0}, {faults.max_retries}, {faults.max_delay})")
+    if faults.max_lifetime > W - 1:
+        raise ValueError(
+            f"a pending shipment can outlive its ring slot: max_lifetime="
+            f"{faults.max_lifetime} > window - 1 = {W - 1}; set "
+            f"cfg.window >= wire.required_window(cfg, faults)")
+    try:
+        req = required_window(cfg, faults)
+    except TypeError:
+        return  # traced staleness knobs: sweeps validate per-config
+    if W < req:
+        raise ValueError(
+            f"ring window {W} too small for the faulted staleness "
+            f"contract (retry_budget={faults.retry_budget}): need "
+            f"W >= {req}; set cfg.window = wire.required_window(cfg, "
+            f"faults)")
+
+
+# ----------------------------------------------------------- wire state
+
+
+def init_wire_state(P: int, dcols: int) -> dict:
+    """Zero ARQ state leaves, merged into the substrate's comm dict.
+
+    ``dcols`` is the payload width this engine sees (``d`` in the
+    simulator, the local model shard ``dl`` in the runtimes — the ARQ is
+    elementwise on the payload axis, so the leaves shard like ``acc``).
+    Layout (all leading-``P``, one lane per producer — stop-and-wait):
+
+    - ``pend [P, dcols]`` pending (unacked) shipment payload;
+      ``pend_clock``/``pend_seq``/``pend_floats`` its boundary clock,
+      sequence number, and bits-weighted wire floats (re-charged per
+      retransmission); ``attempts`` transmissions so far; ``retry_at``
+      next backoff expiry;
+    - ``arr_at``/``arr_seq``/``arr_dup`` the single in-flight lane:
+      scheduled arrival clock (-1 = empty), copy's sequence number, and
+      whether arrival schedules a duplicate echo;
+    - ``echo_at``/``echo_seq`` the pending duplicate echo (arrives one
+      clock after the original, rejected by the seq guard);
+    - ``recv_seq`` highest folded sequence number (the dedup guard);
+      ``wire_tip`` highest arrived producer clock (caps cross-pod
+      visibility); ``seq_next`` next sequence number to assign;
+    - counters ``n_retx``/``n_giveup``/``n_duprej``.
+    """
+    i32, f32 = jnp.int32, jnp.float32
+    zi = jnp.zeros((P,), i32)
+    return dict(
+        pend=jnp.zeros((P, dcols), f32),
+        pend_clock=jnp.full((P,), -1, i32),
+        pend_seq=zi, pend_floats=jnp.zeros((P,), f32),
+        attempts=zi, retry_at=jnp.full((P,), _NEVER, i32),
+        arr_at=jnp.full((P,), -1, i32), arr_seq=zi,
+        arr_dup=jnp.zeros((P,), bool),
+        echo_at=jnp.full((P,), -1, i32), echo_seq=zi,
+        recv_seq=zi, wire_tip=jnp.full((P,), -1, i32),
+        seq_next=jnp.full((P,), 1, i32),
+        n_retx=zi, n_giveup=zi, n_duprej=zi)
+
+
+WIRE_KEYS = tuple(init_wire_state(1, 1).keys())
+
+
+def idle(cst: dict) -> jax.Array:
+    """[P] bool: producers with no unacked shipment (free to ship)."""
+    return cst["pend_clock"] < 0
+
+
+def drop_pending(cst: dict, keep) -> dict:
+    """Drop-in-flight churn policy for the wire: a dying producer's
+    pending shipment, in-flight copy, and echo vanish with it (its
+    ``res``/``acc`` rows are zeroed by the caller).  Receiver-side state
+    (``recv_seq``/``wire_tip``/``seq_next``) survives — already-arrived
+    content stays arrived."""
+    kb = keep[:, None]
+    return dict(cst,
+                pend=jnp.where(kb, cst["pend"], 0.0),
+                pend_clock=jnp.where(keep, cst["pend_clock"], -1),
+                pend_seq=jnp.where(keep, cst["pend_seq"], 0),
+                pend_floats=jnp.where(keep, cst["pend_floats"], 0.0),
+                attempts=jnp.where(keep, cst["attempts"], 0),
+                retry_at=jnp.where(keep, cst["retry_at"], _NEVER),
+                arr_at=jnp.where(keep, cst["arr_at"], -1),
+                arr_seq=jnp.where(keep, cst["arr_seq"], 0),
+                arr_dup=jnp.where(keep, cst["arr_dup"], False),
+                echo_at=jnp.where(keep, cst["echo_at"], -1),
+                echo_seq=jnp.where(keep, cst["echo_seq"], 0))
+
+
+# ------------------------------------------------------------- wire step
+
+
+def _arrive(cst: dict, c) -> dict:
+    """Process due arrivals (in-flight copies with ``arr_at <= c`` and
+    duplicate echoes) through the fold guard; ack what folds."""
+    pend, pclk = cst["pend"], cst["pend_clock"]
+    pseq, recv = cst["pend_seq"], cst["recv_seq"]
+    lane = cst["arr_at"]
+    due = (lane >= 0) & (lane <= c)
+    # fold guard: the copy's seq must match the pending shipment (payload
+    # binding) and exceed recv_seq (idempotence) — a stale or duplicate
+    # copy is rejected here, never re-folded
+    fresh = due & (cst["arr_seq"] == pseq) & (pseq > recv) & (pclk >= 0)
+    W = cst["xring"].shape[0]
+    P = pend.shape[0]
+    rows = jnp.arange(P)
+    slots = jnp.where(fresh, jnp.mod(pclk, W), 0)
+    vals = jnp.where(fresh[:, None], pend, cst["xring"][slots, rows])
+    xring = cst["xring"].at[slots, rows].set(vals)
+    # duplicate copies echo one clock after the original arrival; the
+    # echo re-runs the guard above (seq <= recv_seq by then: rejected)
+    dup_new = fresh & cst["arr_dup"]
+    echo_due = (cst["echo_at"] >= 0) & (cst["echo_at"] <= c)
+    echo_rej = echo_due & ~((cst["echo_seq"] == pseq)
+                            & (cst["echo_seq"] > recv))
+    echo_at = jnp.where(echo_due, -1, cst["echo_at"])
+    echo_at = jnp.where(dup_new, c + 1, echo_at)
+    echo_seq = jnp.where(dup_new, pseq, cst["echo_seq"])
+    return dict(
+        cst, xring=xring,
+        recv_seq=jnp.where(fresh, pseq, recv),
+        wire_tip=jnp.where(fresh, pclk, cst["wire_tip"]),
+        pend=jnp.where(fresh[:, None], 0.0, pend),
+        pend_clock=jnp.where(fresh, -1, pclk),
+        pend_seq=jnp.where(fresh, 0, pseq),
+        pend_floats=jnp.where(fresh, 0.0, cst["pend_floats"]),
+        attempts=jnp.where(fresh, 0, cst["attempts"]),
+        retry_at=jnp.where(fresh, _NEVER, cst["retry_at"]),
+        arr_at=jnp.where(due, -1, lane),
+        echo_at=echo_at, echo_seq=echo_seq,
+        n_duprej=cst["n_duprej"] + echo_rej.astype(jnp.int32))
+
+
+def wire_step(cst: dict, wire_u, floats, ship, c, faults: WireFaults,
+              live=None):
+    """One clock of the faulted wire (both engines' section 4b tail).
+
+    ``cst`` is the comm dict with the :func:`init_wire_state` leaves and
+    this clock's acc/res/xring already updated by the caller under the
+    ``ship`` mask (``ship`` must already include boundary x liveness x
+    :func:`idle` — stop-and-wait gates shipping on start-of-clock
+    idleness, so a producer acked *this* clock ships next boundary).
+    ``wire_u [P, dcols]`` / ``floats [P]`` are this clock's packed
+    shipment and its bits-on-wire; ``live`` (``[P]`` bool or None) gates
+    transmissions under churn — a dead producer neither retransmits nor
+    gives up (drain policy: its pending mass waits for rejoin; an
+    already in-flight copy still arrives).
+
+    Returns ``(cst', ship_floats)`` where ``ship_floats [P]`` charges
+    every transmission (first attempt and retries) made this clock.
+    """
+    P = wire_u.shape[0]
+    i32 = jnp.int32
+    T = faults.drop.shape[0]
+    t = jnp.clip(c, 0, T - 1)
+    drop_r, dup_r, delay_r = faults.drop[t], faults.dup[t], faults.delay[t]
+    tx_ok = jnp.ones((P,), bool) if live is None else live
+
+    # (a) arrivals due from earlier clocks (delayed copies, echoes)
+    st = _arrive(cst, c)
+
+    # (b) give-up: the backoff ladder ran out with nothing in flight —
+    # every attempt was dropped (any surviving copy would have acked or
+    # still sit in the lane).  Self-heal: the mass folds back into the
+    # error-feedback residual (disjoint support from res — exact in f32)
+    # and rides the next shipment; heal=False discards it instead.
+    busy = st["pend_clock"] >= 0
+    gup = (busy & tx_ok & (c >= st["retry_at"])
+           & (st["attempts"] > faults.max_retries) & (st["arr_at"] < 0))
+    res = st["res"]
+    if faults.heal:
+        res = res + jnp.where(gup[:, None], st["pend"], 0.0)
+    pend = jnp.where(gup[:, None], 0.0, st["pend"])
+    pclk = jnp.where(gup, -1, st["pend_clock"])
+    pseq = jnp.where(gup, 0, st["pend_seq"])
+    pfl = jnp.where(gup, 0.0, st["pend_floats"])
+    att = jnp.where(gup, 0, st["attempts"])
+    rat = jnp.where(gup, _NEVER, st["retry_at"])
+
+    # (c) retransmission due (backoff expired, retries left)
+    rtx = ((pclk >= 0) & tx_ok & (c >= rat)
+           & (att <= faults.max_retries))
+
+    # (d) new shipments (ship mask decided by the caller off
+    # start-of-clock idleness)
+    new = ship
+    pend = jnp.where(new[:, None], wire_u, pend)
+    pclk = jnp.where(new, c, pclk)
+    pseq = jnp.where(new, st["seq_next"], pseq)
+    seq_next = jnp.where(new, st["seq_next"] + 1, st["seq_next"])
+    pfl = jnp.where(new, floats, pfl)
+    att = jnp.where(new, 0, att)
+
+    # (e) transmit (first attempts + retries) through this clock's fault
+    # row: dropped copies vanish; surviving copies take the in-flight
+    # lane (superseding older copies — newest wins) with arrival
+    # c + delay; dup-tagged copies will echo.
+    tx = new | rtx
+    att = att + tx.astype(i32)
+    backoff = faults.rto0 * jnp.left_shift(
+        jnp.ones((), i32), jnp.maximum(att - 1, 0))
+    rat = jnp.where(tx, c + backoff, rat)
+    sent = tx & ~drop_r
+    arr_at = jnp.where(sent, c + delay_r, st["arr_at"])
+    arr_seq = jnp.where(sent, pseq, st["arr_seq"])
+    arr_dup = jnp.where(sent, dup_r, st["arr_dup"])
+    ship_floats = jnp.where(tx, pfl, jnp.zeros((P,), jnp.float32))
+
+    st = dict(st, res=res, pend=pend, pend_clock=pclk, pend_seq=pseq,
+              pend_floats=pfl, attempts=att, retry_at=rat,
+              seq_next=seq_next, arr_at=arr_at, arr_seq=arr_seq,
+              arr_dup=arr_dup,
+              n_retx=st["n_retx"] + rtx.astype(i32),
+              n_giveup=st["n_giveup"] + gup.astype(i32))
+
+    # (f) instant (delay-0) arrivals land this clock — end-of-clock
+    # delivery, exactly the lossless wire's timing (what makes a neutral
+    # schedule bit-identical to no faults).
+    st = _arrive(st, c)
+    return st, ship_floats

@@ -272,7 +272,7 @@ def same_pod_mask(P: int, n_pods: int) -> jax.Array:
 
 
 def staleness_bound_matrix(cfg: ConsistencyConfig, reader_ids,
-                           P: int) -> jax.Array:
+                           P: int, retry_budget: int = 0) -> jax.Array:
     """Per-channel SSP/ESSP staleness bound [readers, P(producer)].
 
     ``cfg.staleness`` on intra-pod channels, ``+ s_xpod`` across pods — the
@@ -280,17 +280,24 @@ def staleness_bound_matrix(cfg: ConsistencyConfig, reader_ids,
     (``cfg.comm_active``) k-clock delta aggregation holds cross-pod content
     back up to ``agg_clocks - 1`` extra clocks, so the cross-pod bound
     widens to ``s + s_xpod + agg_clocks - 1`` (asserted by
-    ``psrun.validate.check_staleness_bound``).  ``reader_ids`` selects the
-    reader rows (all of them in the simulator, the shard-local rows in the
-    runtimes), so the same helper drives both engines.  Integer ops only:
-    bit-identical to the flat bound when ``n_pods == 1`` (and to the PR 4
-    two-tier bound when the substrate is off or ``agg_clocks == 1``).
+    ``psrun.validate.check_staleness_bound``).  Under a lossy wire
+    (``comm.wire.WireFaults``) the ack/retransmit protocol can hold a
+    shipment in flight for up to ``retry_budget`` further clocks
+    (``WireFaults.retry_budget`` — two flight windows: one for the
+    in-flight shipment, one for the boundary skipped while it was
+    unacked), widening the cross-pod bound again.  ``retry_budget`` is 0
+    on a perfect wire, keeping the matrix bit-identical to the lossless
+    contract.  ``reader_ids`` selects the reader rows (all of them in the
+    simulator, the shard-local rows in the runtimes), so the same helper
+    drives both engines.  Integer ops only: bit-identical to the flat
+    bound when ``n_pods == 1`` (and to the PR 4 two-tier bound when the
+    substrate is off or ``agg_clocks == 1``).
     """
     pods = pod_of(P, cfg.n_pods)
     same = pods[reader_ids][:, None] == pods[None, :]
     xpod_bound = cfg.staleness + cfg.s_xpod
     if cfg.comm_active:
-        xpod_bound = xpod_bound + (cfg.agg_clocks - 1)
+        xpod_bound = xpod_bound + (cfg.agg_clocks - 1) + retry_budget
     return jnp.where(same, cfg.staleness, xpod_bound)
 
 

@@ -120,6 +120,7 @@ import jax
 import jax.numpy as jnp
 
 from ..comm import substrate as comm
+from ..comm import wire
 from ..kernels import ops
 from ..kernels.ref import RING_EMPTY, RING_INVALID
 from ..obs import metrics as obsm
@@ -221,7 +222,8 @@ def enforce_vap(cfg: ConsistencyConfig, c, cview, norms, W: int):
 def simulate(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
              seed=0, record_views: bool = False,
              schedule: ChurnSchedule | None = None,
-             obs: obsm.ObsSpec | None = None) -> Trace:
+             obs: obsm.ObsSpec | None = None,
+             faults: wire.WireFaults | None = None) -> Trace:
     """Run ``n_clocks`` of the app under the given consistency model.
 
     ``schedule`` (a `core.delays.ChurnSchedule`) makes the fleet churn:
@@ -240,6 +242,17 @@ def simulate(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
     the step already computes, folded on device and returned as
     ``Trace.obs``.  ``None`` (the default) compiles the exact pre-obs
     program: every other `Trace` field is bit-identical either way.
+
+    ``faults`` (a `repro.comm.wire.WireFaults`, comm substrate only)
+    makes the cross-pod wire lossy: shipments drop/duplicate/delay per
+    the seeded masks and the substrate answers with the stop-and-wait
+    ack/retransmit protocol of `comm.wire` — sequence-guarded
+    dedup-on-fold, exponential backoff (retries re-charged into
+    ``Trace.ship_floats``), give-up mass self-healing through the
+    error-feedback residual, and cross-pod visibility capped by what has
+    actually *arrived* (``wire_tip``).  The staleness contract widens by
+    ``faults.retry_budget`` clocks.  A neutral schedule
+    (`wire.no_faults`) is bit-identical to ``faults=None``.
     """
     P, d = app.n_workers, app.dim
     W = cfg.effective_window
@@ -255,6 +268,9 @@ def simulate(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
     wired = cfg.comm_active
     G = cfg.n_pods
     obs_enabled = obsm.obs_on(obs)
+    faulted = faults is not None
+    if faulted:
+        wire.validate_faults(faults, cfg, P, W)
 
     base0 = app.x0.astype(f32)
     uring0 = jnp.zeros((W, P, d), f32)
@@ -264,13 +280,21 @@ def simulate(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
     # Two-tier staleness bound (hierarchical mode): `s` on intra-pod
     # channels, `s + s_xpod` across pods (+ `agg_clocks - 1` under the
     # substrate).  With n_pods=1 every channel is intra-pod and this is
-    # exactly `s` (integer ops — bit-identical).
+    # exactly `s` (integer ops — bit-identical).  Under a lossy wire the
+    # *trigger* deliberately stays at the unwidened bound: the refresh
+    # target is capped on `wire_tip`, so firing eagerly is always safe
+    # and keeps views as fresh as arrivals allow; only the *declared*
+    # contract (events / validate / model checker) carries the
+    # `+ retry_budget` widening for the lag an in-flight shipment can
+    # still impose.
     s_eff = staleness_bound_matrix(cfg, jnp.arange(P), P)
     if wired:
         in_pod = same_pod_mask(P, G)                  # [P(r), P(q)]
         reader_pods = pod_of(P, G)                    # [P]
         zeros_d = jnp.zeros((d,), f32)
         comm0 = comm.init_state(W, P, d, G)
+        if faulted:
+            comm0 = {**comm0, **wire.init_wire_state(P, d)}
     if obs_enabled:
         # channel-tier mask for the forced-refresh split (all-True when
         # G == 1: every forced fetch is intra-pod)
@@ -304,6 +328,10 @@ def simulate(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
                                res=jnp.where(keep[:, None], cst["res"], 0.0),
                                xring=jnp.where(keep[None, :, None],
                                                cst["xring"], 0.0))
+                    if faulted:
+                        # the dying producer's pending shipment and
+                        # in-flight copy vanish with it too
+                        cst = wire.drop_pending(cst, keep)
             cview_pre = cview
         else:
             rates = None
@@ -328,7 +356,15 @@ def simulate(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
             # the substrate a cross-pod refresh can only fetch what has
             # *shipped* (through the last aggregation boundary).
             forced = cview < (c - s_eff - 1)
-            if wired:
+            if wired and faulted:
+                # a faulted cross-pod refresh can only fetch what has
+                # actually *arrived*: wire_tip caps the shipped boundary
+                tgt = jnp.where(in_pod, c - 1,
+                                jnp.minimum(
+                                    comm.shipped_through(c, cfg.agg_clocks),
+                                    cst["wire_tip"][None, :]))
+                cview = jnp.where(forced, tgt, cview)
+            elif wired:
                 tgt = jnp.where(in_pod, c - 1,
                                 comm.shipped_through(c, cfg.agg_clocks))
                 cview = jnp.where(forced, tgt, cview)
@@ -438,17 +474,36 @@ def simulate(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
                 # first boundary after rejoin — catching up through the
                 # wire ring.
                 ship = ship & live_now                  # [P]
-                ship_b = ship[:, None]
-            else:
-                ship_b = ship
+            if faulted:
+                # stop-and-wait ARQ: a busy producer (previous shipment
+                # unacked) skips the boundary — acc keeps accumulating
+                # and the skipped content rides the next shipment.
+                ship = ship & wire.idle(cst)            # [P]
+            ship_b = ship[:, None] if (churned or faulted) else ship
             wire_u = jnp.where(ship_b, wire_u, jnp.zeros_like(wire_u))
-            cst = dict(cst,
-                       acc=jnp.where(ship_b, jnp.zeros_like(acc), acc),
-                       res=jnp.where(ship_b, resid, cst["res"]),
-                       xring=cst["xring"].at[slot].set(wire_u))
-            ship_floats = jnp.where(
-                ship, comm.wire_floats(nnz, d, cfg.quant),
-                jnp.zeros((P,), f32))
+            floats = comm.wire_floats(nnz, d, cfg.quant)
+            if faulted:
+                # the recycled ring slot clears; shipments enter the
+                # wire ring only when they *arrive*, via the
+                # seq-guarded fold inside wire_step (which also runs
+                # retransmits, give-up healing, and this clock's
+                # instant arrivals, and charges every transmission —
+                # retries included — into ship_floats).
+                cst = dict(cst,
+                           acc=jnp.where(ship_b, jnp.zeros_like(acc), acc),
+                           res=jnp.where(ship_b, resid, cst["res"]),
+                           xring=cst["xring"].at[slot].set(
+                               jnp.zeros_like(wire_u)))
+                cst, ship_floats = wire.wire_step(
+                    cst, wire_u, floats, ship, c, faults,
+                    live=live_now if churned else None)
+            else:
+                cst = dict(cst,
+                           acc=jnp.where(ship_b, jnp.zeros_like(acc), acc),
+                           res=jnp.where(ship_b, resid, cst["res"]),
+                           xring=cst["xring"].at[slot].set(wire_u))
+                ship_floats = jnp.where(
+                    ship, floats, jnp.zeros((P,), f32))
         else:
             ship_floats = comm.dense_ship_floats(cfg.model, P, d)
             if churned:
@@ -474,7 +529,17 @@ def simulate(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
                 # the sampling itself is unmasked so survivor channels see
                 # the identical RNG draws with or without churn.
                 delivered = delivered & live_now[:, None]
-            if wired:
+            if wired and faulted:
+                # a cross-pod delivery carries the latest *arrived*
+                # shipment: the boundary target capped by wire_tip
+                # (updated by this clock's arrivals in wire_step above)
+                tgt = jnp.where(in_pod, c,
+                                jnp.minimum(
+                                    comm.shipped_end(c, cfg.agg_clocks),
+                                    cst["wire_tip"][None, :]))
+                cview = jnp.where(delivered, jnp.maximum(cview, tgt),
+                                  cview)
+            elif wired:
                 # a cross-pod delivery carries the latest *shipment*, so
                 # visibility advances only to the aggregation boundary
                 # (== c when agg_clocks == 1).
@@ -544,17 +609,15 @@ def simulate(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
 def simulate_jit(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
                  seed=0, record_views: bool = False,
                  schedule: ChurnSchedule | None = None,
-                 obs: obsm.ObsSpec | None = None) -> Trace:
+                 obs: obsm.ObsSpec | None = None,
+                 faults: wire.WireFaults | None = None) -> Trace:
     """jit-compiled run; ``seed`` may be a traced int (vmap over seeds).
 
-    The schedule's arrays enter as jit arguments, so re-running with a
-    different same-shape schedule reuses the compiled program."""
-    if schedule is None:
-        fn = jax.jit(
-            lambda sd: simulate(app, cfg, n_clocks, sd, record_views,
-                                obs=obs))
-        return fn(jnp.asarray(seed, jnp.uint32))
-    fn = jax.jit(lambda sd, sch: simulate(app, cfg, n_clocks, sd,
-                                          record_views, schedule=sch,
-                                          obs=obs))
-    return fn(jnp.asarray(seed, jnp.uint32), schedule)
+    The schedule's (and fault schedule's) arrays enter as jit arguments,
+    so re-running with a different same-shape schedule reuses the
+    compiled program (``None`` is an empty pytree — presence is part of
+    the trace structure)."""
+    fn = jax.jit(lambda sd, sch, flt: simulate(
+        app, cfg, n_clocks, sd, record_views, schedule=sch, obs=obs,
+        faults=flt))
+    return fn(jnp.asarray(seed, jnp.uint32), schedule, faults)

@@ -51,7 +51,12 @@ clock charges **seconds per float over the per-tier bandwidth** —
   which is exactly the effect PR 4's free-delivery model hid;
 - forced fetches split by tier: intra-pod refreshes pay
   ``rtt + bytes_per_channel/bandwidth`` as before, cross-pod clock-gated
-  pulls pay ``rtt + bytes_per_channel/bandwidth_xpod``.
+  pulls pay ``rtt + bytes_per_channel/bandwidth_xpod``;
+- under a lossy wire (`repro.comm.wire.WireFaults`) the ARQ charges every
+  *transmission* — first attempts and each backoff retransmission —
+  into ``Trace.ship_floats`` at the shipment's packed size, so retries
+  cost real seconds here with no extra accounting: a 30%-drop run is
+  automatically slower in modeled wall time, not just staler.
 
 Without ``cfg`` (or with ``n_pods == 1``) the accounting is unchanged —
 every pre-existing caller gets identical numbers.

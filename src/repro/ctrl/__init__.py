@@ -1,0 +1,13 @@
+"""Closed-loop control: consumers of the obs stream that act on it.
+
+`repro.ctrl.recover` is the detect→act half of the ROADMAP's adaptive
+controller: it turns `repro.obs.monitor` verdicts and SLO violations
+into typed recovery actions, emitted back into the stream as schema-v1.2
+events.  Everything here is numpy/stdlib only — controllers consume
+streams, they never grow hooks inside the engines.
+"""
+from .recover import (RecoveryPolicy, apply_actions, attach_actions,
+                      plan_recovery, unrecovered_violations)
+
+__all__ = ["RecoveryPolicy", "plan_recovery", "apply_actions",
+           "attach_actions", "unrecovered_violations"]

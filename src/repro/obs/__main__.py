@@ -15,11 +15,16 @@ anywhere the CI artifacts land):
                      (`monitor.monitor_stream`); ``--score`` grades the
                      verdicts against the stream's own churn events as
                      oracle (`core.delays.score_detections` over
-                     `monitor.live_from_events`); ``--emit OUT`` writes
-                     the stream with ``slo_violation`` events spliced
+                     `monitor.live_from_events`); ``--actions`` runs the
+                     recovery controller (`ctrl.recover.plan_recovery`)
+                     and prints its decisions; ``--emit OUT`` writes
+                     the stream with ``slo_violation`` (and, under
+                     ``--actions``, ``recovery_action``) events spliced
                      in.  Exit 1 on ``--fail-on-false-alarm`` (scored
-                     false alarm or missed outage) or ``--fail-on-alarm``
-                     (any worker_down — the neutral-artifact CI gate).
+                     false alarm or missed outage), ``--fail-on-alarm``
+                     (any worker_down — the neutral-artifact CI gate),
+                     or, under ``--actions``, on any SLO violation the
+                     controller left unrecovered.
 - ``diff BASE CUR``  regression attribution (`repro.obs.diff`):
                      ``BENCH_*.json`` pairs via ``diff_bench``, JSONL
                      pairs via ``diff_streams``; ``--markdown`` renders
@@ -114,6 +119,24 @@ def cmd_monitor(args) -> int:
     print(json.dumps({"health": res.health}, indent=2, default=str))
 
     failed = False
+    actions = None
+    if args.actions:
+        from ..ctrl.recover import (attach_actions, plan_from_result,
+                                    unrecovered_violations)
+
+        actions = plan_from_result(res)
+        for a in actions:
+            print(f"t={a['t']:4d}  act:{a['action']:13s} "
+                  + " ".join(f"{k}={a[k]}" for k in ("worker", "pod",
+                                                     "quant", "agg_clocks",
+                                                     "clocks", "reason")
+                             if k in a))
+        unrec = unrecovered_violations(res.violations, actions)
+        if unrec:
+            print(f"UNRECOVERED: {len(unrec)} slo_violation(s) after the "
+                  f"last recovery action", file=sys.stderr)
+            failed = True
+        res.events = attach_actions(res.events, actions)
     if args.score:
         live = live_from_events(ev)
         score = score_detections(live, res.verdicts, args.budget)
@@ -209,6 +232,9 @@ def build_parser() -> argparse.ArgumentParser:
                    help="exit 1 on a scored false alarm or missed outage")
     p.add_argument("--fail-on-alarm", action="store_true",
                    help="exit 1 on any worker_down (neutral artifacts)")
+    p.add_argument("--actions", action="store_true",
+                   help="run the recovery controller, print its "
+                        "decisions; exit 1 on unrecovered violations")
     p.add_argument("--emit", help="write stream + slo_violation events")
     p.set_defaults(fn=cmd_monitor)
 

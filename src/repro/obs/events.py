@@ -45,9 +45,13 @@ producers and consumers can evolve independently:
 Minor history: ``1.0`` the PR 8 substrate; ``1.1`` adds per-clock
 read-lag stats (``clock.lag_p99`` / ``clock.lag_max``), the declared
 staleness contract on the header (``run_start.bound``), and the
-``slo_violation`` event `repro.obs.monitor` folds back into the stream.
-Consumers (`repro.obs.monitor`, the ROADMAP's adaptive controller) key
-on the pair via :func:`check_version`.
+``slo_violation`` event `repro.obs.monitor` folds back into the stream;
+``1.2`` adds the ``recovery_action`` event (`repro.ctrl.recover` folds
+the controller's typed decisions back into the stream it consumed) and
+``run_start.retry_budget``, the lossy-wire widening already included in
+``run_start.bound`` (`comm.wire.WireFaults.retry_budget`).  Consumers
+(`repro.obs.monitor`, `repro.ctrl.recover`) key on the pair via
+:func:`check_version`.
 """
 from __future__ import annotations
 
@@ -58,7 +62,7 @@ import numpy as np
 from .metrics import MetricsRegistry
 
 SCHEMA_VERSION = 1          # major: compatibility-breaking changes
-SCHEMA_MINOR = 1            # minor: additive fields / event types
+SCHEMA_MINOR = 2            # minor: additive fields / event types
 
 # required fields per event type (beyond "type"); values document the
 # expected JSON type and are checked by validate_events.
@@ -79,6 +83,7 @@ SCHEMA = {
     "metrics": {"ts": float, "registry": dict},
     "slo_violation": {"t": int, "ts": float, "slo": str, "window": int,
                       "value": float, "limit": float},
+    "recovery_action": {"t": int, "ts": float, "action": str},
     "run_end": {"ts": float, "wall_s": float, "comp_s": float,
                 "comm_s": float, "wire_s": float, "clocks": int},
 }
@@ -88,8 +93,10 @@ SCHEMA = {
 # here is still accepted — a newer minor may carry fields this build has
 # never heard of — but what we do know about must have the right type.
 SCHEMA_OPTIONAL = {
-    "run_start": {"vm": int, "bound": int},
+    "run_start": {"vm": int, "bound": int, "retry_budget": int},
     "clock": {"lag_p99": float, "lag_max": int},
+    "recovery_action": {"worker": int, "pod": int, "reason": str,
+                        "quant": str, "agg_clocks": int, "clocks": int},
 }
 
 
@@ -97,15 +104,17 @@ class SchemaError(ValueError):
     """An event stream violating the versioned schema."""
 
 
-def declared_bound(cfg) -> int | None:
+def declared_bound(cfg, retry_budget: int = 0) -> int | None:
     """The run's declared worst-case read lag in clocks, or ``None`` for
     families without a clock bound (async; VAP is value-bounded).
 
     The two-tier contract of `core.delays.staleness_bound_matrix`:
     ``s`` intra-pod, widened to ``s + s_xpod + agg_clocks - 1`` on
-    cross-pod channels.  Stamped on ``run_start`` so stream consumers
-    (the SLO monitor) check the contract the producer actually declared
-    rather than re-deriving it from a config they don't have.
+    cross-pod channels, plus ``retry_budget`` under a lossy wire
+    (`comm.wire.WireFaults.retry_budget` — 0 on a perfect wire).
+    Stamped on ``run_start`` so stream consumers (the SLO monitor)
+    check the contract the producer actually declared rather than
+    re-deriving it from a config they don't have.
     """
     if cfg.model not in ("bsp", "ssp", "essp"):
         return None
@@ -113,7 +122,7 @@ def declared_bound(cfg) -> int | None:
     if int(cfg.n_pods) > 1:
         bound += int(np.asarray(cfg.s_xpod))
         if cfg.comm_active:
-            bound += int(np.asarray(cfg.agg_clocks)) - 1
+            bound += int(np.asarray(cfg.agg_clocks)) - 1 + int(retry_budget)
     return bound
 
 
@@ -142,13 +151,17 @@ def _r(x) -> float:
 
 def collect_events(trace, cfg, tm, model: str | None = None, fold=(),
                    schedule=None, run: str = "run",
-                   registry: MetricsRegistry | None = None) -> list[dict]:
+                   registry: MetricsRegistry | None = None,
+                   faults=None) -> list[dict]:
     """Flatten one run into the event stream (see module doc).
 
     ``trace`` must be unbatched (one run, clock axis leading); ``cfg`` is
     the run's `ConsistencyConfig` and ``tm`` the `TimeModel` whose
     ``timeline_np`` provides the timebase.  ``model`` defaults to
-    ``cfg.model``.
+    ``cfg.model``.  ``faults`` (a `comm.wire.WireFaults`) widens the
+    declared bound by its retry budget and stamps
+    ``run_start.retry_budget`` so consumers can tell a lossy-wire run
+    from a slow one.
     """
     model = cfg.model if model is None else model
     tl = tm.timeline_np(trace, model, fold=fold, cfg=cfg,
@@ -168,9 +181,12 @@ def collect_events(trace, cfg, tm, model: str | None = None, fold=(),
         "n_workers": P, "n_pods": int(cfg.n_pods), "n_clocks": T,
         "ts": 0.0,
     }
-    bound = declared_bound(cfg)
+    retry_budget = 0 if faults is None else int(faults.retry_budget)
+    bound = declared_bound(cfg, retry_budget=retry_budget)
     if bound is not None:
         head["bound"] = bound
+    if retry_budget:
+        head["retry_budget"] = retry_budget
     ev: list[dict] = [head]
     prev_live = np.ones((P,), bool)
     for t in range(T):

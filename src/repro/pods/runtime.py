@@ -84,7 +84,8 @@ class PodsRuntime(PSRuntime):
         return make_pods_mesh()
 
     def run_fn(self, app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
-               record_views: bool = False, schedule=None, obs=None):
+               record_views: bool = False, schedule=None, obs=None,
+               faults=None):
         n_pods = self.mesh.shape["pod"]
         if cfg.n_pods != n_pods:
             raise ValueError(
@@ -93,4 +94,4 @@ class PodsRuntime(PSRuntime):
                 f"placement — use consistency.podded(cfg, {n_pods}) or a "
                 f"matching make_pods_mesh")
         return super().run_fn(app, cfg, n_clocks, record_views, schedule,
-                              obs)
+                              obs, faults)

@@ -25,7 +25,7 @@ from .runtime import PodsRuntime
 
 def cross_validate_pods(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
                         runtime: PodsRuntime | None = None, seed=0,
-                        schedule=None) -> dict:
+                        schedule=None, faults=None) -> dict:
     """Run both engines and check the hierarchical oracle contract.
 
     BSP/SSP/ESSP: bit-identical traces (+ two-tier staleness bound for
@@ -41,8 +41,14 @@ def cross_validate_pods(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
     """
     runtime = runtime or PodsRuntime()
     out = cross_validate(app, cfg, n_clocks, runtime=runtime, seed=seed,
-                         return_trace=True, schedule=schedule)
+                         return_trace=True, schedule=schedule,
+                         faults=faults)
     tr = out.pop("trace")          # reuse — don't re-execute the run
+    if faults is not None:
+        # lossy wire: bit-identity (checked above) is the contract; the
+        # clock-divergence layers assume every shipment lands on time,
+        # which an arbitrary fault mask need not honor
+        return out
     div = replica_divergence(tr, cfg)
     out["replica_divergence"] = {k: v for k, v in div.items()
                                  if k != "per_clock"}

@@ -71,6 +71,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P_
 
 from ..comm import substrate as comm
+from ..comm import wire
 from ..core.consistency import ConsistencyConfig
 from ..core.delays import ChurnSchedule, churn_live, churn_rates, \
     delivery_matrix, pod_of, staleness_bound_matrix
@@ -155,7 +156,8 @@ def make_run_fn(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
                 mesh=None, record_views: bool = False,
                 worker_axes: tuple = ("data",),
                 schedule: ChurnSchedule | None = None,
-                obs: obsm.ObsSpec | None = None):
+                obs: obsm.ObsSpec | None = None,
+                faults: wire.WireFaults | None = None):
     """Build the jitted runtime for one config *family* on ``mesh``.
 
     Returns a callable ``fn(seed, cfg, schedule=None) -> Trace``.
@@ -184,6 +186,14 @@ def make_run_fn(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
     ``psum``/``pmax`` per leaf after the scan merges them, and the result
     lands in ``Trace.obs``.  ``None`` (default) compiles the exact
     pre-obs program.
+
+    ``faults`` (`repro.comm.wire.WireFaults`) makes the cross-pod wire
+    lossy: seeded drop/duplicate/delay masks drive the stop-and-wait
+    ack/retransmit protocol of ``wire.wire_step``, bit-identical to the
+    simulator oracle.  Like the churn schedule, only the *structure*
+    (presence + the static rto0/max_retries/max_delay/heal knobs) is
+    compiled in; the mask arrays are traced jit arguments.  Requires
+    ``cfg.comm_active``.
     """
     mesh = make_ps_mesh() if mesh is None else mesh
     worker_axes = tuple(worker_axes)
@@ -203,11 +213,20 @@ def make_run_fn(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
     if churned and schedule.live.shape[1] != P:
         raise ValueError(f"schedule has {schedule.live.shape[1]} workers, "
                          f"app has {P}")
+    faulted = faults is not None
+    if faulted:
+        wire.validate_faults(faults, cfg, P, W)
 
     def body(cfg, clock0, base, uring, uclock, cview, local, rng,
              *extra):
-        cst = extra[0] if wired else None
-        sched = extra[-1] if churned else None
+        _i = 0
+        cst = flt = sched = None
+        if wired:
+            cst, _i = extra[_i], _i + 1
+        if faulted:
+            flt, _i = extra[_i], _i + 1
+        if churned:
+            sched = extra[_i]
         # local shards: base [dl], uring [W, P, dl], uclock [W] (replicated),
         # cview [Pl, P], local leaves [Pl, ...], rng/clock0 replicated;
         # comm state (wired only): acc/res [P, dl], xring [W, P, dl],
@@ -221,8 +240,11 @@ def make_run_fn(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
         eye_l = worker_ids[:, None] == producer_ids[None, :]   # local eye rows
         # Two-tier staleness bound on the local reader rows (`s` intra-pod,
         # `s + s_xpod` cross-pod, `+ agg_clocks - 1` under the substrate;
-        # one-tier and exactly `s` when n_pods=1).
-        s_eff = staleness_bound_matrix(cfg, worker_ids, P)     # [Pl, P]
+        # one-tier and exactly `s` when n_pods=1).  The lossy-wire trigger
+        # stays *unwidened* — refresh targets are capped on `wire_tip`, so
+        # eager firing is safe; only the declared contract carries the
+        # `+ retry_budget` widening (oracle mirror).
+        s_eff = staleness_bound_matrix(cfg, worker_ids, P)       # [Pl, P]
         if wired:
             pods_all = pod_of(P, G)                            # [P]
             reader_pods = pods_all[worker_ids]                 # [Pl]
@@ -268,6 +290,10 @@ def make_run_fn(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
                                                  cst["res"], 0.0),
                                    xring=jnp.where(keep[None, :, None],
                                                    cst["xring"], 0.0))
+                    if faulted:
+                        # a dying producer's unacked shipment and lane
+                        # copies vanish with it (oracle mirror)
+                        cst = wire.drop_pending(cst, keep)
                 cview_pre = cview
             else:
                 rates = None
@@ -283,7 +309,17 @@ def make_run_fn(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
                 cview = jnp.full_like(cview, c - 1)
             elif cfg.model in ("ssp", "essp"):
                 forced = cview < (c - s_eff - 1)
-                if wired:
+                if wired and faulted:
+                    # a faulted cross-pod refresh can only fetch what has
+                    # actually *arrived*: wire_tip caps the shipped
+                    # boundary (oracle mirror)
+                    tgt = jnp.where(in_pod, c - 1,
+                                    jnp.minimum(
+                                        comm.shipped_through(
+                                            c, cfg.agg_clocks),
+                                        cst["wire_tip"][None, :]))
+                    cview = jnp.where(forced, tgt, cview)
+                elif wired:
                     # cross-pod refreshes fetch what has *shipped* (through
                     # the last aggregation boundary), mirroring the oracle
                     tgt = jnp.where(in_pod, c - 1,
@@ -393,17 +429,38 @@ def make_run_fn(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
                     # acc/res keep the mass until the first boundary
                     # after rejoin) — oracle mirror.
                     ship = ship & live_now                 # [P]
-                    ship_b = ship[:, None]
-                else:
-                    ship_b = ship
+                if faulted:
+                    # stop-and-wait ARQ: a busy producer (previous
+                    # shipment unacked) skips the boundary — acc keeps
+                    # accumulating and the skipped content rides the
+                    # next shipment (oracle mirror).
+                    ship = ship & wire.idle(cst)           # [P]
+                ship_b = ship[:, None] if (churned or faulted) else ship
                 wire_u = jnp.where(ship_b, wire_u, jnp.zeros_like(wire_u))
-                cst = dict(cst,
-                           acc=jnp.where(ship_b, jnp.zeros_like(acc), acc),
-                           res=jnp.where(ship_b, resid, cst["res"]),
-                           xring=cst["xring"].at[slot].set(wire_u))
-                ship_floats = jnp.where(
-                    ship, comm.wire_floats(nnz, d, cfg.quant),
-                    jnp.zeros((P,), f32))
+                floats = comm.wire_floats(nnz, d, cfg.quant)
+                if faulted:
+                    # shipments enter the wire ring only when they
+                    # *arrive*, via the seq-guarded fold in wire_step
+                    # (which also runs retransmits, give-up healing and
+                    # instant arrivals, and charges every transmission —
+                    # retries included — into ship_floats).
+                    cst = dict(cst,
+                               acc=jnp.where(ship_b, jnp.zeros_like(acc),
+                                             acc),
+                               res=jnp.where(ship_b, resid, cst["res"]),
+                               xring=cst["xring"].at[slot].set(
+                                   jnp.zeros_like(wire_u)))
+                    cst, ship_floats = wire.wire_step(
+                        cst, wire_u, floats, ship, c, flt,
+                        live=live_now if churned else None)
+                else:
+                    cst = dict(cst,
+                               acc=jnp.where(ship_b, jnp.zeros_like(acc),
+                                             acc),
+                               res=jnp.where(ship_b, resid, cst["res"]),
+                               xring=cst["xring"].at[slot].set(wire_u))
+                    ship_floats = jnp.where(
+                        ship, floats, jnp.zeros((P,), f32))
             else:
                 ship_floats = comm.dense_ship_floats(cfg.model, P, d)
                 if churned:
@@ -425,7 +482,17 @@ def make_run_fn(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
                     delivery_matrix(k_net, cfg, P, rates), rows0, Pl)
                 if churned:
                     delivered = delivered & live_l[:, None]
-                if wired:
+                if wired and faulted:
+                    # deliveries carry the latest *arrived* shipment:
+                    # boundary target capped by wire_tip (oracle mirror)
+                    tgt = jnp.where(in_pod, c,
+                                    jnp.minimum(
+                                        comm.shipped_end(
+                                            c, cfg.agg_clocks),
+                                        cst["wire_tip"][None, :]))
+                    cview = jnp.where(delivered, jnp.maximum(cview, tgt),
+                                      cview)
+                elif wired:
                     tgt = jnp.where(in_pod, c,
                                     comm.shipped_end(c, cfg.agg_clocks))
                     cview = jnp.where(delivered, jnp.maximum(cview, tgt),
@@ -517,6 +584,13 @@ def make_run_fn(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
                           xring=P_(None, None, "model"),
                           base_pod=P_(None, "model"),
                           xbase_pod=P_(None, "model"))
+        if faulted:
+            # ARQ leaves: the pending payload shards like acc; the per-
+            # producer scalars ([P]) are replicated (every shard runs the
+            # same protocol decisions off the replicated fault masks)
+            comm_specs.update({
+                k: P_(None, "model") if k == "pend" else P_()
+                for k in wire.WIRE_KEYS})
     state_specs = dict(clock=P_(), base=P_("model"),
                        uring=P_(None, None, "model"), uclock=P_(),
                        cview=P_(worker_axes, None), local=local_spec,
@@ -525,6 +599,10 @@ def make_run_fn(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
                 P_(worker_axes, None), local_spec, P_()]
     if wired:
         in_specs.append(comm_specs)
+    if faulted:
+        # fault masks are replicated: every shard needs all P producers'
+        # fault rows (like the churn schedule)
+        in_specs.append(jax.tree_util.tree_map(lambda _: P_(), faults))
     if churned:
         # the schedule is replicated: every shard reads the full per-clock
         # liveness rows (it needs producer liveness for all P)
@@ -541,11 +619,13 @@ def make_run_fn(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
         out_specs=out_specs,
         check_rep=False)
 
-    def run(state: PSState, cfg, sched):
+    def run(state: PSState, cfg, sched, flt):
         args = (cfg, state.clock, state.base, state.uring,
                 state.uclock, state.cview, state.local, state.rng)
         if wired:
             args += (state.comm,)
+        if faulted:
+            args += (flt,)
         if churned:
             args += (sched,)
         out = sharded(*args)
@@ -574,7 +654,9 @@ def make_run_fn(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
             cview=jnp.full((P, P), -1, jnp.int32),
             local=app.local0,
             rng=jax.random.PRNGKey(seed),
-            comm=comm.init_state(W, P, dpad, G) if wired else None)
+            comm=({**comm.init_state(W, P, dpad, G),
+                   **wire.init_wire_state(P, dpad)} if faulted
+                  else comm.init_state(W, P, dpad, G)) if wired else None)
 
     def _norm_cfg(cfg_run: ConsistencyConfig | None) -> ConsistencyConfig:
         c = cfg if cfg_run is None else cfg_run
@@ -604,16 +686,33 @@ def make_run_fn(app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
                              f"app has {P}")
         return s
 
+    def _norm_faults(flt):
+        f = faults if flt is None else flt
+        if (f is not None) != faulted:
+            raise ValueError(
+                f"runtime compiled with faults="
+                f"{'on' if faulted else 'off'}; build a new run fn to "
+                f"change the fault structure")
+        if f is not None and wire.faults_key(f) != wire.faults_key(faults):
+            raise ValueError(
+                f"runtime compiled with ARQ knobs "
+                f"{wire.faults_key(faults)}, got {wire.faults_key(f)}; "
+                f"the knobs are static — build a new run fn")
+        return f
+
     def run_from(state: PSState, cfg_run: ConsistencyConfig | None = None,
-                 schedule: ChurnSchedule | None = None):
+                 schedule: ChurnSchedule | None = None,
+                 faults: wire.WireFaults | None = None):
         """Advance ``state`` by ``n_clocks``; returns ``(Trace, PSState)``.
         Bit-identical to running the clocks uninterrupted."""
-        return jitted(state, _norm_cfg(cfg_run), _norm_sched(schedule))
+        return jitted(state, _norm_cfg(cfg_run), _norm_sched(schedule),
+                      _norm_faults(faults))
 
     def fn(seed, cfg_run: ConsistencyConfig | None = None,
-           schedule: ChurnSchedule | None = None) -> Trace:
+           schedule: ChurnSchedule | None = None,
+           faults: wire.WireFaults | None = None) -> Trace:
         return jitted(init_state(seed), _norm_cfg(cfg_run),
-                      _norm_sched(schedule))[0]
+                      _norm_sched(schedule), _norm_faults(faults))[0]
 
     fn.init_state = init_state
     fn.run_from = run_from
@@ -660,37 +759,45 @@ class PSRuntime:
     def run_fn(self, app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
                record_views: bool = False,
                schedule: ChurnSchedule | None = None,
-               obs: obsm.ObsSpec | None = None):
+               obs: obsm.ObsSpec | None = None,
+               faults: wire.WireFaults | None = None):
         """The cached jitted ``fn(seed, cfg) -> Trace`` for this family."""
         obs = obs if obsm.obs_on(obs) else None   # one cache entry for off
         key = (id(app), cfg.family, cfg.effective_window, n_clocks,
-               record_views, _churn_key(schedule), obs)
+               record_views, _churn_key(schedule), obs,
+               wire.faults_key(faults))
         fn = self._cache.get(key)
         if fn is None:
             fn = make_run_fn(app, cfg, n_clocks, mesh=self.mesh,
                              record_views=record_views,
                              worker_axes=self.worker_axes,
-                             schedule=schedule, obs=obs)
+                             schedule=schedule, obs=obs, faults=faults)
             self._cache[key] = fn
         return fn
 
     def run(self, app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
             seed=0, record_views: bool = False,
             schedule: ChurnSchedule | None = None,
-            obs: obsm.ObsSpec | None = None) -> Trace:
+            obs: obsm.ObsSpec | None = None,
+            faults: wire.WireFaults | None = None) -> Trace:
         """Run ``n_clocks`` of the app under ``cfg`` on the mesh."""
         return self.run_fn(app, cfg, n_clocks, record_views,
-                           schedule, obs)(seed, cfg, schedule)
+                           schedule, obs, faults)(seed, cfg, schedule,
+                                                  faults)
 
     def init_state(self, app: PSApp, cfg: ConsistencyConfig, seed=0,
-                   n_clocks: int = 1) -> PSState:
+                   n_clocks: int = 1,
+                   faults: wire.WireFaults | None = None) -> PSState:
         """Clock-0 `PSState` (``n_clocks`` only selects the compiled fn)."""
-        return self.run_fn(app, cfg, n_clocks).init_state(seed)
+        return self.run_fn(app, cfg, n_clocks,
+                           faults=faults).init_state(seed)
 
     def run_from(self, app: PSApp, cfg: ConsistencyConfig, n_clocks: int,
                  state: PSState, record_views: bool = False,
                  schedule: ChurnSchedule | None = None,
-                 obs: obsm.ObsSpec | None = None):
+                 obs: obsm.ObsSpec | None = None,
+                 faults: wire.WireFaults | None = None):
         """Advance ``state`` by ``n_clocks`` -> ``(Trace, PSState)``."""
         return self.run_fn(app, cfg, n_clocks, record_views,
-                           schedule, obs).run_from(state, cfg, schedule)
+                           schedule, obs, faults).run_from(
+                               state, cfg, schedule, faults)

@@ -159,9 +159,65 @@ def test_model_check_detects_widening_mutant():
                               "psrun/runtime.py")
     ces = model_check(bm, enf)
     assert ces, "mutant bound not detected"
-    assert all(c.channel == "xpod-wired" for c in ces)
+    # the faulted cross-pod channel shares the agg widening, so the
+    # mutant now falls on both wired channels — but nowhere else
+    chans = {c.channel for c in ces}
+    assert "xpod-wired" in chans
+    assert chans <= {"xpod-wired", "xpod-faulted"}
     # and the un-mutated bound still verifies on the same extraction
     assert model_check(extract_bound_model_from_source(src), enf) == []
+
+
+def test_model_check_detects_retry_budget_mutant():
+    """An off-by-one in the lossy-wire widening (`retry_budget - 1`) is
+    refuted: two flight windows stack (ship gating reads start-of-clock
+    lane idleness), so the full ``2 * flight_budget`` is exactly tight —
+    counterexamples must land on the faulted channel and only there."""
+    src = open(os.path.join(SRC, "core", "delays.py"),
+               encoding="utf-8").read()
+    mutant = src.replace("+ retry_budget", "+ (retry_budget - 1)")
+    assert mutant != src, "retry_budget widening not found to mutate"
+    bm = extract_bound_model_from_source(mutant)
+    enf = extract_enforcement(os.path.join(SRC, "psrun", "runtime.py"),
+                              "psrun/runtime.py")
+    ces = model_check(bm, enf)
+    assert ces, "retry_budget mutant not detected"
+    # the same mutated expression also evaluates at retry_budget=0 on
+    # the plain wired channel (where it degenerates to the agg - 2
+    # mutant); the new evidence is the faulted-channel refutation at
+    # flight >= 1, which exercises the two-flight-window stacking
+    faulted = [c for c in ces if c.channel == "xpod-faulted"]
+    assert faulted, "no counterexample on the faulted channel"
+    # the grid breaks per config at the first failing flight (0 here,
+    # where the mutant degenerates to agg - 2); pin the nonzero-flight
+    # tightness directly: at flight=1 the mutant bound (2F - 1) is one
+    # short of the stacked two-window worst case, the true bound holds
+    from repro.analysis.staleness_check import check_channel_faulted
+
+    good = extract_bound_model_from_source(src)
+    config = (12, 4, 0, 0, 1)      # (T, P, s, s_xpod, agg): tight corner
+    assert check_channel_faulted(bm, enf, config, flight=1) is not None
+    assert check_channel_faulted(good, enf, config, flight=1) is None
+    # and the un-mutated bound still verifies on the same extraction
+    assert model_check(good, enf) == []
+
+
+def test_faulted_extraction_requires_wire_tip_caps():
+    """Both producers cap faulted refresh/delivery on ``wire_tip``; a
+    producer that drops either cap must fail extraction loudly (the cap
+    guards against reading unarrived ring content, which the staleness
+    lag invariant alone cannot observe)."""
+    from repro.analysis import extract_enforcement_from_source
+
+    for producer in ("core/ps.py", "psrun/runtime.py"):
+        path = os.path.join(SRC, *producer.split("/"))
+        src = open(path, encoding="utf-8").read()
+        enf = extract_enforcement_from_source(src, producer)
+        assert enf.xpod_refresh_capped and enf.delivery_capped
+        uncapped = src.replace('cst["wire_tip"]', 'cst["pend_clock"]')
+        assert uncapped != src
+        with pytest.raises(ExtractionError):
+            extract_enforcement_from_source(uncapped, producer)
 
 
 def test_extraction_is_brittle_on_drift():

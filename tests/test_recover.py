@@ -1,0 +1,201 @@
+"""The detect->act recovery controller (`repro.ctrl.recover`).
+
+Pinned contract:
+
+- **Neutral silence**: a healthy stream (no churn, no SLO breach)
+  yields *zero* actions — actions derive only from monitor verdicts and
+  violations, never unconditionally.
+- **Typed actions**: ``worker_up`` -> ``refresh_burst``; ``pod_down``
+  -> ``pod_restore`` (routes via `pods.elastic`'s checkpoint path);
+  a sustained violation streak -> escalating ``degrade_comm`` down the
+  quantization ladder, then aggregation widening capped at ``max_agg``.
+- **Auditability**: actions are schema-v1.2 ``recovery_action`` events;
+  splicing them back into the stream keeps it schema-valid.
+- **CLI**: ``python -m repro.obs monitor --actions`` prints decisions
+  and exits 1 on any SLO violation left unrecovered, mirroring
+  ``--fail-on-false-alarm``.
+
+All streams here are synthetic (stdlib only) — the real-run integration
+is covered by ``benchmarks/faults_bench.py``'s controller scenarios.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.ctrl.recover import (RecoveryPolicy, apply_actions,
+                                attach_actions, plan_recovery,
+                                unrecovered_violations)
+from repro.obs.events import SchemaError, validate_events
+from repro.obs.monitor import SLOParams
+
+HERE = os.path.dirname(__file__)
+REPO = os.path.dirname(HERE)
+
+
+def mk_stream(T=24, P=4, churn=(), slow_after=None):
+    """A synthetic but schema-valid v1.2 stream: ``churn`` is a list of
+    ``(t, worker, "up"/"down")``; ``slow_after`` makes every clock 10x
+    slower from that clock on (throughput-SLO fodder)."""
+    ev = [{"type": "run_start", "v": 1, "vm": 2, "run": "synthetic",
+           "model": "essp", "family": "essp", "n_workers": P, "n_pods": 2,
+           "n_clocks": T, "ts": 0.0, "bound": 3}]
+    live = [True] * P
+    for t in range(T):
+        ts = float(t + 1)
+        for (ct, w, e) in churn:
+            if ct == t:
+                live[w] = (e == "up")
+                ev.append({"type": "churn", "t": t, "worker": w, "ts": ts,
+                           "event": e})
+        dur = 1.0 if (slow_after is None or t < slow_after) else 10.0
+        ev.append({"type": "clock", "t": t, "ts": ts, "dur": dur,
+                   "loss_ref": 1.0 / (t + 1), "forced": 0,
+                   "delivered": sum(live), "live": sum(live),
+                   "ship_floats": 64.0})
+        for p in range(P):
+            if live[p]:
+                ev.append({"type": "worker_span", "t": t, "worker": p,
+                           "ts": ts, "dur": 0.5, "comp_s": 0.4,
+                           "sync_s": 0.1})
+    ev.append({"type": "run_end", "ts": float(T), "wall_s": float(T),
+               "comp_s": 1.0, "comm_s": 1.0, "wire_s": 0.0, "clocks": T})
+    return ev
+
+
+def test_neutral_stream_triggers_zero_actions():
+    actions, res = plan_recovery(mk_stream())
+    assert actions == []
+    assert res.violations == []
+    assert unrecovered_violations(res.violations, actions) == []
+
+
+def test_worker_rejoin_gets_refresh_burst():
+    actions, res = plan_recovery(mk_stream(churn=[(4, 1, "down"),
+                                                  (9, 1, "up")]))
+    bursts = [a for a in actions if a["action"] == "refresh_burst"]
+    assert len(bursts) == 1
+    a = bursts[0]
+    assert a["worker"] == 1 and a["t"] == 9
+    assert a["clocks"] == RecoveryPolicy().refresh_clocks
+    assert not any(x["action"] == "pod_restore" for x in actions)
+
+
+def test_pod_outage_gets_pod_restore():
+    # both workers of pod 0 down -> pod_down verdict -> pod_restore
+    actions, res = plan_recovery(mk_stream(churn=[(4, 0, "down"),
+                                                  (4, 1, "down")]))
+    restores = [a for a in actions if a["action"] == "pod_restore"]
+    assert len(restores) == 1 and restores[0]["pod"] == 0
+    assert "elastic" in restores[0]["reason"]
+
+
+def test_sustained_slo_escalates_down_the_ladder():
+    slo = SLOParams(window=4, min_clocks_per_s=0.5)
+    actions, res = plan_recovery(mk_stream(T=48, slow_after=4), slo=slo)
+    degrades = [a for a in actions if a["action"] == "degrade_comm"]
+    assert len(degrades) >= 3
+    assert [d.get("quant") for d in degrades[:2]] == ["bf16", "int8"]
+    # past the ladder, aggregation widens geometrically up to the cap
+    aggs = [d["agg_clocks"] for d in degrades if "agg_clocks" in d]
+    assert aggs == sorted(aggs) and aggs and aggs[-1] \
+        <= RecoveryPolicy().max_agg
+    assert all("sustained throughput" in d["reason"] for d in degrades)
+    # a single violating window stays below the sustained threshold
+    one, _ = plan_recovery(mk_stream(T=20, slow_after=16), slo=slo)
+    assert [a for a in one if a["action"] == "degrade_comm"] == []
+
+
+def test_apply_actions_folds_degradations():
+    from repro.core.consistency import ConsistencyConfig
+
+    cfg = ConsistencyConfig(model="essp", staleness=2, n_pods=2,
+                            agg_clocks=2, wire=True)
+    slo = SLOParams(window=4, min_clocks_per_s=0.5)
+    actions, _ = plan_recovery(mk_stream(T=48, slow_after=4), slo=slo)
+    out = apply_actions(cfg, actions)
+    assert out.quant == "int8"
+    assert out.agg_clocks > cfg.agg_clocks
+    # non-degrade actions leave the config alone
+    burst, _ = plan_recovery(mk_stream(churn=[(4, 1, "down"),
+                                              (9, 1, "up")]))
+    assert apply_actions(cfg, burst) is cfg
+
+
+def test_attached_actions_keep_stream_schema_valid():
+    slo = SLOParams(window=4, min_clocks_per_s=0.5)
+    actions, res = plan_recovery(mk_stream(T=48, slow_after=4), slo=slo)
+    assert actions
+    spliced = attach_actions(res.events, actions)
+    validate_events(spliced)
+    kinds = [e["type"] for e in spliced]
+    assert kinds.count("recovery_action") == len(actions)
+    assert kinds[-1] == "run_end"
+
+
+def test_unrecovered_definition():
+    viols = [{"type": "slo_violation", "t": 5}, {"type": "slo_violation",
+                                                "t": 9}]
+    acts = [{"type": "recovery_action", "t": 7, "ts": 7.0,
+             "action": "degrade_comm"}]
+    assert unrecovered_violations(viols, []) == viols
+    assert unrecovered_violations(viols, acts) == [viols[1]]
+
+
+def test_plan_recovery_checks_schema_version():
+    bad = mk_stream()
+    bad[0] = dict(bad[0], v=99)
+    with pytest.raises(SchemaError):
+        plan_recovery(bad)
+
+
+# ---------------------------------------------------------------------------
+# CLI: python -m repro.obs monitor --actions
+# ---------------------------------------------------------------------------
+def _run_cli(args):
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(REPO, "src")
+               + os.pathsep + os.environ.get("PYTHONPATH", ""))
+    return subprocess.run([sys.executable, "-m", "repro.obs"] + args,
+                          capture_output=True, text=True, env=env,
+                          cwd=REPO)
+
+
+def _write(events, path):
+    with open(path, "w") as f:
+        for e in events:
+            f.write(json.dumps(e) + "\n")
+
+
+def test_cli_actions_exit_codes(tmp_path):
+    neutral = str(tmp_path / "neutral.jsonl")
+    _write(mk_stream(), neutral)
+    r = _run_cli(["monitor", neutral, "--actions"])
+    assert r.returncode == 0, r.stderr
+    assert "act:" not in r.stdout
+
+    churny = str(tmp_path / "churny.jsonl")
+    emitted = str(tmp_path / "churny_actions.jsonl")
+    _write(mk_stream(churn=[(4, 1, "down"), (9, 1, "up")]), churny)
+    r = _run_cli(["monitor", churny, "--actions", "--emit", emitted])
+    assert r.returncode == 0, r.stderr
+    assert "refresh_burst" in r.stdout
+    # the emitted stream carries the spliced actions and stays valid
+    assert _run_cli(["validate", emitted]).returncode == 0
+    with open(emitted) as f:
+        types = [json.loads(line)["type"] for line in f if line.strip()]
+    assert "recovery_action" in types
+
+    # a tail-end violation with no action after it -> unrecovered -> 1
+    slow = str(tmp_path / "slow.jsonl")
+    _write(mk_stream(T=20, slow_after=16), slow)
+    r = _run_cli(["monitor", slow, "--actions", "--window", "4",
+                  "--min-clocks-per-s", "0.5"])
+    assert r.returncode == 1
+    assert "UNRECOVERED" in r.stderr
+    # without --actions the same stream exits 0 (no gate requested)
+    r = _run_cli(["monitor", slow, "--window", "4",
+                  "--min-clocks-per-s", "0.5"])
+    assert r.returncode == 0

@@ -1,0 +1,320 @@
+"""Lossy-wire fault injection: the self-healing shipment contract.
+
+What is pinned here (see ``comm/wire.py``):
+
+- **Neutral identity**: a `WireFaults` schedule with no drops, no dups,
+  no delays and no retry budget is *bit-identical* to running without
+  faults at all, on all three producers, dense and compressed — the
+  fault layer is provably pay-for-what-you-use.
+- **Cross-producer bit-identity**: under arbitrary seeded drop/dup/
+  reorder masks plus a burst regime, the simulator oracle, `PSRuntime`
+  and `PodsRuntime` produce identical traces (the acceptance contract
+  extended to the faulted regime).
+- **Mass conservation** (the PR 5 error-feedback residual made
+  self-healing): for every producer, ``acc + res + pend + ring`` equals
+  the exact sum of its updates under any fault mask — bitwise in f32 —
+  while the ``heal=False`` contrast arm provably *loses* the given-up
+  mass (hypothesis property; the offline stub replays fixed samples).
+- **ARQ mechanics**: dedup-on-fold rejects the duplicate echo,
+  exhausted backoff gives up into the residual, retransmissions are
+  charged into ``ship_floats`` (and hence `TimeModel` seconds).
+- **Widened staleness contract**: under a *conforming* fault schedule
+  (every shipment arrives within the flight budget) the SSP/ESSP read
+  bound widens by exactly ``retry_budget = 2 * flight_budget``
+  (`core.delays.staleness_bound_matrix`), checked on real traces.
+- **Checkpoint**: the wire state (seq/ack/in-flight lane) rides the
+  `PSState` ``comm`` leaf — a save/restore *mid-retransmit* resumes bit
+  for bit.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.comm import wire
+from repro.core import ps
+from repro.core.consistency import ConsistencyConfig
+from repro.core.ps import PSApp
+from repro.launch.mesh import make_ps_mesh
+from repro.pods import PodsRuntime, default_pods_mesh
+from repro.psrun import PSRuntime, make_run_fn
+from repro.psrun.runtime import default_mesh as ps_mesh_for
+from repro.psrun.validate import TRACE_FIELDS, check_staleness_bound
+
+
+def assert_bit_identical(got, want, context=""):
+    for name in TRACE_FIELDS:
+        a, b = np.asarray(getattr(got, name)), np.asarray(getattr(want, name))
+        np.testing.assert_array_equal(a, b, err_msg=f"{context}:{name}")
+
+
+def make_quad(P, d=24, eta=0.3):
+    def worker_update(view, local, _wid, clock, rng):
+        g = view + 0.05 * jax.random.normal(rng, view.shape)
+        step = eta / jnp.sqrt(1.0 + clock)
+        return -step * g / P, local
+
+    return PSApp(name=f"quad{P}", dim=d, n_workers=P,
+                 x0=jnp.ones((d,)) * 2.0, local0={"_": jnp.zeros((P, 1))},
+                 worker_update=worker_update,
+                 loss=lambda x, l: jnp.sum(jnp.square(x)))
+
+
+def pods_runtime_for(n_workers, n_pods):
+    n = len(jax.devices())
+    if n >= 2 * n_pods and n % n_pods == 0:
+        return PodsRuntime(default_pods_mesh(n_workers, n_pods=n_pods))
+    return PSRuntime(ps_mesh_for(n_workers))
+
+
+def wired_cfg(**kw):
+    base = dict(model="essp", staleness=2, n_pods=2, s_xpod=1, wire=True,
+                agg_clocks=2)
+    base.update(kw)
+    return ConsistencyConfig(**base)
+
+
+def heavy_faults(T, P, **kw):
+    args = dict(seed=5, drop_rate=0.35, dup_rate=0.25, delay_rate=0.3,
+                max_delay=1, max_retries=2, bursts=((6, 9, 0.9),))
+    args.update(kw)
+    return wire.make_faults(T, P, **args)
+
+
+@pytest.fixture(scope="module")
+def quad8():
+    return make_quad(8)
+
+
+# ---------------------------------------------------------------------------
+# neutral identity: zero-fault schedule == no schedule, bit for bit
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize(("quant", "topk"), [("f32", 1.0), ("int8", 0.5)])
+def test_neutral_faults_bit_identical(quad8, quant, topk):
+    T, cfg = 12, wired_cfg(quant=quant, topk_frac=topk)
+    nf = wire.no_faults(T, quad8.n_workers)
+    assert nf.retry_budget == 0 and nf.flight_budget == 0
+    base = ps.simulate_jit(quad8, cfg, T, seed=2, record_views=True)
+    neut = ps.simulate_jit(quad8, cfg, T, seed=2, record_views=True,
+                           faults=nf)
+    assert_bit_identical(neut, base, context=f"sim-neutral-{quant}")
+    rt = PSRuntime(ps_mesh_for(quad8.n_workers))
+    base_rt = rt.run(quad8, cfg, T, seed=2, record_views=True)
+    neut_rt = rt.run(quad8, cfg, T, seed=2, record_views=True, faults=nf)
+    assert_bit_identical(neut_rt, base_rt, context=f"rt-neutral-{quant}")
+
+
+# ---------------------------------------------------------------------------
+# faulted cross-producer bit-identity (dense + compressed)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize(("quant", "topk"), [("f32", 1.0), ("int8", 0.5)])
+def test_faulted_cross_producer_bit_identical(quad8, quant, topk):
+    T, P = 14, quad8.n_workers
+    flt = heavy_faults(T, P)
+    cfg = wired_cfg(quant=quant, topk_frac=topk)
+    cfg = cfg.replace(window=wire.required_window(cfg, flt))
+    tr_sim = ps.simulate_jit(quad8, cfg, T, seed=2, record_views=True,
+                             faults=flt)
+    rt = PSRuntime(ps_mesh_for(P))
+    tr_rt = rt.run(quad8, cfg, T, seed=2, record_views=True, faults=flt)
+    assert_bit_identical(tr_rt, tr_sim, context=f"psrun-faulted-{quant}")
+    pr = pods_runtime_for(P, 2)
+    tr_pod = pr.run(quad8, cfg, T, seed=2, record_views=True, faults=flt)
+    assert_bit_identical(tr_pod, tr_sim, context=f"pods-faulted-{quant}")
+    # the faulted run differs from the lossless one (faults really bite)
+    tr_clean = ps.simulate_jit(quad8, cfg, T, seed=2, record_views=True)
+    assert not np.array_equal(np.asarray(tr_sim.ship_floats),
+                              np.asarray(tr_clean.ship_floats))
+
+
+# ---------------------------------------------------------------------------
+# mass conservation: acc + res + pend + ring == exact update sum
+# ---------------------------------------------------------------------------
+def _one_hot_app(P, d, T):
+    """Worker ``p`` contributes exactly ``val(p, c) * e_c`` at clock
+    ``c`` — disjoint supports, so any correct accounting is float-exact
+    (no reordering can change a sum with one addend per coordinate)."""
+
+    def worker_update(view, local, wid, clock, rng):
+        val = ((jnp.asarray(wid, jnp.float32) + 1.0) * T
+               + jnp.asarray(clock, jnp.float32) + 1.0)
+        u = jnp.zeros((d,), jnp.float32).at[clock].set(val)
+        return u, local
+
+    return PSApp(name=f"onehot{P}", dim=d, n_workers=P,
+                 x0=jnp.zeros((d,)), local0={"_": jnp.zeros((P, 1))},
+                 worker_update=worker_update,
+                 loss=lambda x, l: jnp.sum(x))
+
+
+def _final_comm(app, cfg, T, faults, seed=0):
+    fn = make_run_fn(app, cfg, T, mesh=ps_mesh_for(app.n_workers),
+                     faults=faults)
+    _, state = fn.run_from(fn.init_state(seed), cfg, None, faults)
+    return state.comm
+
+
+def _conservation_delta(comm, P, T):
+    """``expected - (acc + res + pend + ring)`` per producer, restricted
+    to the first ``T`` coordinates (the only ones ever touched)."""
+    total = (np.asarray(comm["acc"], np.float64)
+             + np.asarray(comm["res"], np.float64)
+             + np.asarray(comm["pend"], np.float64)
+             + np.asarray(comm["xring"], np.float64).sum(axis=0))
+    expected = np.zeros_like(total)
+    for p in range(P):
+        for c in range(T):
+            expected[p, c] = (p + 1) * T + (c + 1)
+    assert np.array_equal(total[:, T:], np.zeros_like(total[:, T:]))
+    return expected[:, :T] - total[:, :T]
+
+
+@given(seed=st.integers(0, 10 ** 6),
+       drop=st.sampled_from([0.2, 0.5, 0.9]),
+       dup=st.sampled_from([0.0, 0.4]),
+       delayed=st.booleans())
+@settings(max_examples=12, deadline=None)
+def test_mass_conservation_under_arbitrary_masks(seed, drop, dup, delayed):
+    T, P = 10, 4
+    app = _one_hot_app(P, d=16, T=T)
+    flt = wire.make_faults(T, P, seed=seed, drop_rate=drop, dup_rate=dup,
+                           delay_rate=0.5 if delayed else 0.0,
+                           max_delay=2 if delayed else 0, max_retries=2)
+    cfg = wired_cfg()
+    cfg = cfg.replace(window=wire.required_window(cfg, flt))
+    assert T < cfg.window, "test premise: nothing may fold out of the ring"
+    comm = _final_comm(app, cfg, T, flt, seed=seed % 7)
+    delta = _conservation_delta(comm, P, T)
+    assert np.array_equal(delta, np.zeros_like(delta)), \
+        f"mass leaked under drop={drop} dup={dup} delayed={delayed}"
+
+
+def test_heal_false_loses_exactly_the_given_up_mass():
+    """The contrast arm: with ``heal=False`` the exhausted-backoff mass
+    is discarded instead of folded into the residual — conservation
+    must fail by a *positive* deficit, and only when give-ups fired."""
+    T, P = 10, 4
+    app = _one_hot_app(P, d=16, T=T)
+    flt = wire.make_faults(T, P, seed=3, drop_rate=0.95, max_retries=1,
+                           heal=False)
+    cfg = wired_cfg()
+    cfg = cfg.replace(window=wire.required_window(cfg, flt))
+    comm = _final_comm(app, cfg, T, flt)
+    assert int(np.asarray(comm["n_giveup"]).sum()) > 0, \
+        "premise: a 95% drop rate with one retry must exhaust backoff"
+    delta = _conservation_delta(comm, P, T)
+    assert np.all(delta >= 0.0) and np.any(delta > 0.0)
+    # the healing twin conserves under the identical mask
+    comm_h = _final_comm(app, cfg, T,
+                         wire.make_faults(T, P, seed=3, drop_rate=0.95,
+                                          max_retries=1, heal=True))
+    delta_h = _conservation_delta(comm_h, P, T)
+    assert np.array_equal(delta_h, np.zeros_like(delta_h))
+
+
+# ---------------------------------------------------------------------------
+# ARQ mechanics: dedup, give-up, retransmit charging
+# ---------------------------------------------------------------------------
+def test_arq_counters_and_retransmit_charging(quad8):
+    T, P = 12, quad8.n_workers
+    flt = heavy_faults(T, P)
+    cfg = wired_cfg()
+    cfg = cfg.replace(window=wire.required_window(cfg, flt))
+    fn = make_run_fn(quad8, cfg, T, mesh=ps_mesh_for(P), faults=flt)
+    tr, state = fn.run_from(fn.init_state(2), cfg, None, flt)
+    comm = state.comm
+    assert int(np.asarray(comm["n_retx"]).sum()) > 0
+    assert int(np.asarray(comm["n_duprej"]).sum()) > 0
+    # every retransmission is charged at the shipment's packed size:
+    # the faulted run ships strictly more floats than the lossless one
+    clean = make_run_fn(quad8, cfg, T, mesh=ps_mesh_for(P))
+    tr0 = clean(2, cfg)
+    assert (float(np.asarray(tr.ship_floats).sum())
+            > float(np.asarray(tr0.ship_floats).sum()))
+
+
+# ---------------------------------------------------------------------------
+# widened staleness bound on conforming schedules
+# ---------------------------------------------------------------------------
+def test_conforming_faults_respect_widened_bound(quad8):
+    """Drop every even-clock transmission: each first attempt at an even
+    boundary retransmits once and lands within the flight budget; no
+    give-up is ever reached, so the widened SSP/ESSP bound must hold on
+    the real trace (and the *unwidened* bound must not)."""
+    T, P = 16, quad8.n_workers
+    drop = np.zeros((T, P), np.bool_)
+    drop[::2, :] = True
+    flt = wire.WireFaults(drop=jnp.asarray(drop),
+                          dup=jnp.zeros((T, P), jnp.bool_),
+                          delay=jnp.zeros((T, P), jnp.int32),
+                          rto0=1, max_retries=2, max_delay=0)
+    assert flt.retry_budget == 2 * flt.flight_budget
+    cfg = wired_cfg(staleness=1, s_xpod=0, agg_clocks=1)
+    cfg = cfg.replace(window=wire.required_window(cfg, flt))
+    tr = ps.simulate_jit(quad8, cfg, T, seed=4, record_views=True,
+                         faults=flt)
+    wide = check_staleness_bound(tr, cfg, retry_budget=flt.retry_budget)
+    assert wide["violations"] == 0, f"widened bound violated: {wide}"
+    narrow = check_staleness_bound(tr, cfg)
+    assert narrow["violations"] > 0, \
+        "faults never stretched staleness past the unwidened bound — " \
+        "test is vacuous"
+
+
+# ---------------------------------------------------------------------------
+# checkpoint: bit-for-bit resume mid-retransmit
+# ---------------------------------------------------------------------------
+def test_checkpoint_resume_mid_retransmit(quad8, tmp_path):
+    from repro.checkpoint import io as ckpt
+
+    T, mid, P = 14, 7, quad8.n_workers
+    flt = heavy_faults(T, P, drop_rate=0.6)
+    cfg = wired_cfg()
+    cfg = cfg.replace(window=wire.required_window(cfg, flt))
+    rt = PSRuntime(ps_mesh_for(P))
+    full, _ = rt.run_fn(quad8, cfg, T, faults=flt).run_from(
+        rt.init_state(quad8, cfg, seed=3, faults=flt), cfg, None, flt)
+    tr1, state_mid = rt.run_from(
+        quad8, cfg, mid, rt.init_state(quad8, cfg, seed=3, faults=flt),
+        faults=flt)
+    # the pin is only meaningful if a retransmission is actually in
+    # flight at the cut: some producer lane must be busy
+    assert bool(np.any(np.asarray(state_mid.comm["pend_clock"]) >= 0)), \
+        "no shipment in flight at the checkpoint clock"
+    path = str(tmp_path / "mid.npz")
+    ckpt.save_runtime(path, state_mid)
+    restored = ckpt.restore_runtime(
+        path, rt.init_state(quad8, cfg, seed=0, faults=flt))
+    # wire leaves round-tripped bit for bit
+    for k in wire.WIRE_KEYS:
+        np.testing.assert_array_equal(np.asarray(state_mid.comm[k]),
+                                      np.asarray(restored.comm[k]),
+                                      err_msg=f"wire leaf {k}")
+    tr2, _ = rt.run_from(quad8, cfg, T - mid, restored, faults=flt)
+    for name in TRACE_FIELDS:
+        a = np.asarray(getattr(full, name))
+        if a.ndim and a.shape[0] == T:     # per-clock: both legs stitched
+            b = np.concatenate([np.asarray(getattr(tr1, name)),
+                                np.asarray(getattr(tr2, name))])
+        else:                              # final snapshot: second leg
+            b = np.asarray(getattr(tr2, name))
+        np.testing.assert_array_equal(a, b, err_msg=f"resumed:{name}")
+
+
+# ---------------------------------------------------------------------------
+# schedule validation
+# ---------------------------------------------------------------------------
+def test_validate_faults_rejects_undersized_window(quad8):
+    T, P = 12, quad8.n_workers
+    flt = heavy_faults(T, P)
+    cfg = wired_cfg()
+    need = wire.required_window(cfg, flt)
+    with pytest.raises(ValueError):
+        ps.simulate(quad8, cfg.replace(window=need - 1), T, seed=0,
+                    faults=flt)
+    with pytest.raises(ValueError):
+        # schedule shaped for the wrong worker count
+        ps.simulate(quad8, cfg.replace(window=need), T, seed=0,
+                    faults=wire.no_faults(T, P + 1))
